@@ -1,0 +1,80 @@
+"""Shared benchmark plumbing: problems, protocols, the results DB, and CSV
+output.
+
+Protocol mirrors the paper (§V-A): exhaustive enumeration for Pnpoly,
+N-body, GEMM and Convolution; 10 000 random configurations for Hotspot,
+Dedispersion and ExpDist — per architecture (four TPU generations here,
+four GPUs in the paper).  Tables are cached under ``experiments/results_db``
+so every figure reads identical data.
+"""
+
+from __future__ import annotations
+
+import csv
+import sys
+import time
+from pathlib import Path
+
+from repro.core.costmodel import ARCH_NAMES
+from repro.core.results import ResultsDB, ResultTable
+from repro.kernels.attention.space import AttentionProblem
+from repro.kernels.conv2d.space import Conv2dProblem
+from repro.kernels.dedisp.space import DedispProblem
+from repro.kernels.expdist.space import ExpdistProblem
+from repro.kernels.hotspot.space import HotspotProblem
+from repro.kernels.matmul.space import GemmProblem
+from repro.kernels.nbody.space import NbodyProblem
+from repro.kernels.pnpoly.space import PnpolyProblem
+
+ROOT = Path(__file__).resolve().parents[1]
+DB_DIR = ROOT / "experiments" / "results_db"
+OUT_DIR = ROOT / "experiments" / "benchmarks"
+
+#: benchmark -> (problem factory, protocol)   [paper §V-A]
+BENCHMARKS = {
+    "pnpoly": (PnpolyProblem, "exhaustive"),
+    "nbody": (NbodyProblem, "exhaustive"),
+    "gemm": (GemmProblem, "exhaustive"),
+    "conv2d": (Conv2dProblem, "exhaustive"),
+    "hotspot": (HotspotProblem, "sampled"),
+    "dedisp": (DedispProblem, "sampled"),
+    "expdist": (ExpdistProblem, "sampled"),
+    # beyond-paper: the LM-stack flash-attention kernel as a 8th benchmark
+    "attention": (AttentionProblem, "exhaustive"),
+}
+
+SAMPLE_N = 10_000
+
+
+def load_tables(name: str, archs=ARCH_NAMES):
+    """(problem, {arch: ResultTable}) with on-disk caching."""
+    factory, protocol = BENCHMARKS[name]
+    prob = factory()
+    db = ResultsDB(DB_DIR)
+    tables = {a: db.get_or_compute(prob, a, protocol=protocol, n=SAMPLE_N)
+              for a in archs}
+    return prob, tables
+
+
+def write_csv(fname: str, header: list[str], rows: list[list]) -> Path:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / fname
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The harness contract: one ``name,us_per_call,derived`` line."""
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+class timed:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

@@ -1,0 +1,54 @@
+"""Fig 1: performance distribution of configurations, per benchmark x arch.
+
+Reproduces the paper's observations (C1): distribution shapes differ between
+benchmarks but are similar across architectures; Hotspot exhibits a distinct
+high-performing cluster.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.analysis.distribution import (distribution_profile,
+                                              relative_performance,
+                                              top_cluster_fraction)
+from repro.core.costmodel import ARCH_NAMES
+
+from .common import BENCHMARKS, emit, load_tables, timed, write_csv
+
+
+def run() -> dict:
+    rows = []
+    summary = {}
+    for name in BENCHMARKS:
+        with timed() as t:
+            _, tables = load_tables(name)
+        for arch in ARCH_NAMES:
+            prof = distribution_profile(tables[arch])
+            clu = top_cluster_fraction(tables[arch], within=0.10)
+            summary[(name, arch)] = {"profile": prof, "top_cluster": clu}
+            for q, rp, rm in zip(prof["quantiles"], prof["rel_perf"],
+                                 prof["rel_to_median"]):
+                rows.append([name, arch, q, rp, rm])
+        emit(f"fig1/{name}", t.s * 1e6 / max(1, len(tables["v5e"].objectives)),
+             f"top_cluster_v5e={summary[(name, 'v5e')]['top_cluster']:.4f}")
+    write_csv("fig1_distribution.csv",
+              ["benchmark", "arch", "quantile", "rel_perf", "rel_to_median"],
+              rows)
+
+    # C1 cross-arch stability: correlation of the quantile profile between
+    # architectures, per benchmark
+    stab_rows = []
+    for name in BENCHMARKS:
+        base = np.array(summary[(name, "v5e")]["profile"]["rel_perf"])
+        for arch in ARCH_NAMES:
+            cur = np.array(summary[(name, arch)]["profile"]["rel_perf"])
+            r = float(np.corrcoef(base, cur)[0, 1])
+            stab_rows.append([name, arch, r])
+    write_csv("fig1_shape_stability.csv", ["benchmark", "arch", "corr_v5e"],
+              stab_rows)
+    return summary
+
+
+if __name__ == "__main__":
+    run()

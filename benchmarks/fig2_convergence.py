@@ -1,0 +1,43 @@
+"""Fig 2: convergence towards the optimum under random search.
+
+Paper protocol: 100 random-sampling repeats over the recorded tables; the
+median best-so-far relative performance vs evaluations.  Reports the 'evals
+to reach 90%' statistic per benchmark (C2)."""
+
+from __future__ import annotations
+
+from repro.core.analysis.convergence import evals_to_reach, median_curve
+from repro.core.costmodel import ARCH_NAMES
+
+from .common import BENCHMARKS, emit, load_tables, timed, write_csv
+
+BUDGET = 1000
+REPEATS = 100
+
+
+def run() -> dict:
+    rows, stat_rows = [], []
+    out = {}
+    for name in BENCHMARKS:
+        with timed() as t:
+            _, tables = load_tables(name)
+            for arch in ARCH_NAMES:
+                med = median_curve(tables[arch], budget=BUDGET,
+                                   repeats=REPEATS, seed=0)
+                for i in (list(range(10)) + list(range(10, len(med), 10))):
+                    rows.append([name, arch, i + 1, med[i]])
+                n90 = evals_to_reach(med, 0.90)
+                n99 = evals_to_reach(med, 0.99)
+                out[(name, arch)] = {"n90": n90, "n99": n99}
+                stat_rows.append([name, arch, n90, n99])
+        emit(f"fig2/{name}", t.s * 1e6 / (REPEATS * 4),
+             f"evals_to_90pct_v5e={out[(name, 'v5e')]['n90']}")
+    write_csv("fig2_convergence.csv",
+              ["benchmark", "arch", "evaluations", "median_rel_perf"], rows)
+    write_csv("fig2_evals_to_reach.csv",
+              ["benchmark", "arch", "n90", "n99"], stat_rows)
+    return out
+
+
+if __name__ == "__main__":
+    run()

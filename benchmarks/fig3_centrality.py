@@ -1,0 +1,40 @@
+"""Fig 3: proportion-of-centrality search-difficulty metric.
+
+Paper protocol: computed for the exhaustively-enumerated benchmarks only
+(the FFG needs the neighborhood structure; the paper skipped Hotspot/
+Dedisp/ExpDist for cost — we do the same, plus the attention kernel)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.analysis.centrality import centrality_curve
+from repro.core.costmodel import ARCH_NAMES
+
+from .common import BENCHMARKS, emit, load_tables, timed, write_csv
+
+EXHAUSTIVE = [n for n, (_, proto) in BENCHMARKS.items()
+              if proto == "exhaustive"]
+
+
+def run() -> dict:
+    rows = []
+    out = {}
+    for name in EXHAUSTIVE:
+        prob, tables = load_tables(name)
+        with timed() as t:
+            for arch in ARCH_NAMES:
+                curve = centrality_curve(prob.space, tables[arch],
+                                         ps=np.linspace(0.0, 0.5, 11))
+                out[(name, arch)] = curve
+                for p, v in zip(curve["p"], curve["proportion"]):
+                    rows.append([name, arch, p, v, curve["n_minima"]])
+        poc10 = out[(name, "v5e")]["proportion"][2]   # p = 0.10
+        emit(f"fig3/{name}", t.s * 1e6 / 4, f"poc_p0.1_v5e={poc10:.4f}")
+    write_csv("fig3_centrality.csv",
+              ["benchmark", "arch", "p", "proportion", "n_minima"], rows)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Fig 4: max speedup of the best configuration over the median one (C4)."""
+
+from __future__ import annotations
+
+from repro.core.analysis.distribution import speedup_over_median
+from repro.core.costmodel import ARCH_NAMES
+
+from .common import BENCHMARKS, emit, load_tables, timed, write_csv
+
+
+def run() -> dict:
+    rows = []
+    out = {}
+    for name in BENCHMARKS:
+        with timed() as t:
+            _, tables = load_tables(name)
+            for arch in ARCH_NAMES:
+                s = speedup_over_median(tables[arch])
+                out[(name, arch)] = s
+                rows.append([name, arch, f"{s:.4f}"])
+        emit(f"fig4/{name}", t.s * 1e6,
+             f"speedup_over_median_v5e={out[(name, 'v5e')]:.2f}x")
+    write_csv("fig4_speedup.csv", ["benchmark", "arch", "speedup"], rows)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Fig 5: performance portability of optimal configurations across the four
+TPU generations (paper: four GPUs).  Reproduces C5: transfers between
+same-family parts are cheap; cross-family transfers can be expensive."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import BENCHMARKS, emit, load_tables, timed, write_csv
+from repro.core.analysis.portability import portability_matrix
+
+#: portability needs a common config universe: exhaustive tables, or sampled
+#: tables drawn with the same seed (the suite guarantees identical samples).
+NAMES = list(BENCHMARKS)
+
+
+def run() -> dict:
+    rows = []
+    out = {}
+    for name in NAMES:
+        with timed() as t:
+            _, tables = load_tables(name)
+            m = portability_matrix(tables)
+        out[name] = m
+        archs = m["archs"]
+        mat = np.array(m["matrix"])
+        for i, src in enumerate(archs):
+            for j, dst in enumerate(archs):
+                rows.append([name, src, dst, f"{mat[i, j]:.4f}"])
+        worst = float(np.min(mat))
+        emit(f"fig5/{name}", t.s * 1e6, f"worst_transfer={worst:.3f}")
+    write_csv("fig5_portability.csv",
+              ["benchmark", "from_arch", "to_arch", "rel_perf"], rows)
+    return out
+
+
+if __name__ == "__main__":
+    run()

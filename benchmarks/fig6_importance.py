@@ -1,0 +1,36 @@
+"""Fig 6: Permutation Feature Importance via a GBDT surrogate (paper:
+CatBoost; here: our own histogram GBDT).  Reports R^2 per benchmark x arch,
+the PFI per parameter, and the interaction indicator sum(PFI) >> 1 (C6)."""
+
+from __future__ import annotations
+
+from repro.core.analysis.importance import feature_importance
+from repro.core.costmodel import ARCH_NAMES
+
+from .common import BENCHMARKS, emit, load_tables, timed, write_csv
+
+
+def run() -> dict:
+    rows, r2_rows = [], []
+    out = {}
+    for name in BENCHMARKS:
+        _, tables = load_tables(name)
+        with timed() as t:
+            for arch in ARCH_NAMES:
+                imp = feature_importance(tables[arch], seed=0)
+                out[(name, arch)] = imp
+                r2_rows.append([name, arch, f"{imp['r2']:.4f}",
+                                f"{imp['pfi_sum']:.3f}"])
+                for pname, v in zip(imp["params"], imp["pfi"]):
+                    rows.append([name, arch, pname, f"{v:.5f}"])
+        v5e = out[(name, "v5e")]
+        emit(f"fig6/{name}", t.s * 1e6 / 4,
+             f"r2={v5e['r2']:.3f};pfi_sum={v5e['pfi_sum']:.2f}")
+    write_csv("fig6_pfi.csv", ["benchmark", "arch", "param", "pfi"], rows)
+    write_csv("fig6_surrogate_r2.csv",
+              ["benchmark", "arch", "r2", "pfi_sum"], r2_rows)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""§Roofline table: aggregate the dry-run JSONs under experiments/dryrun
+into the per-(arch x shape x mesh) three-term roofline report.
+
+Prefers the loop-corrected ("probe") terms when present; raw step terms are
+kept in a separate column for comparison (they undercount scan bodies)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import ROOT, emit, write_csv
+
+DRYRUN_DIR = ROOT / "experiments" / "dryrun"
+
+
+def load_cells() -> list[dict]:
+    cells = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        try:
+            cells.append(json.loads(p.read_text()))
+        except json.JSONDecodeError:
+            continue
+    return cells
+
+
+def run() -> list[dict]:
+    cells = load_cells()
+    rows = []
+    for c in cells:
+        r = c.get("corrected", c)          # probe-corrected when available
+        rows.append([
+            c["arch"], c["shape"], c["mesh"], c["devices"],
+            f"{r['t_compute'] * 1e3:.3f}", f"{r['t_memory'] * 1e3:.3f}",
+            f"{r['t_collective'] * 1e3:.3f}", r["bound"],
+            f"{r['useful_flops_ratio']:.4f}", f"{r['mfu']:.4f}",
+            f"{c.get('memory_analysis', {}).get('temp_bytes', 0) / 1e9:.2f}",
+            c.get("microbatches", 1),
+            "probe" if "corrected" in c else "raw",
+        ])
+        if c["mesh"] == "16x16" and "corrected" in c:
+            emit(f"roofline/{c['arch']}.{c['shape']}",
+                 r["t_total_overlap"] * 1e6,
+                 f"bound={r['bound']};mfu={r['mfu']:.3f}")
+    rows.sort(key=lambda r: (r[0], r[1], r[2]))
+    write_csv("roofline_table.csv",
+              ["arch", "shape", "mesh", "chips", "t_compute_ms",
+               "t_memory_ms", "t_collective_ms", "bound",
+               "useful_flops_ratio", "mfu@overlap", "temp_gb_per_chip",
+               "microbatches", "source"], rows)
+    print(f"roofline_table: {len(rows)} cells aggregated")
+    return cells
+
+
+if __name__ == "__main__":
+    run()

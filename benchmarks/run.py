@@ -1,0 +1,58 @@
+"""Benchmark harness entry point: one module per paper figure/table.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,fig4,...]
+
+Each module prints ``name,us_per_call,derived`` CSV lines and writes its
+full table(s) under experiments/benchmarks/."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (claims, fig1_distribution, fig2_convergence, fig3_centrality,
+               fig4_speedup, fig5_portability, fig6_importance, microbench,
+               roofline_table, table8_spacestats, tuner_comparison)
+
+MODULES = {
+    "fig1": fig1_distribution,
+    "fig2": fig2_convergence,
+    "fig3": fig3_centrality,
+    "fig4": fig4_speedup,
+    "fig5": fig5_portability,
+    "fig6": fig6_importance,
+    "table8": table8_spacestats,
+    "tuners": tuner_comparison,
+    "micro": microbench,
+    "roofline": roofline_table,
+    "claims": claims,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of "
+                         f"{','.join(MODULES)}")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(MODULES)
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        t0 = time.perf_counter()
+        try:
+            MODULES[name].run()
+        except Exception:                      # noqa: BLE001 — report all
+            failures.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
+              flush=True)
+    if failures:
+        sys.exit(f"benchmark modules failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

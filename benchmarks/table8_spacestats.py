@@ -1,0 +1,47 @@
+"""Table VIII: search-space size accounting — Cardinality / Constrained /
+Valid (per arch) / Reduced / Reduce-Constrained (C7).
+
+The Reduced columns keep only parameters with PFI >= 0.05 on any
+architecture, freezing the rest to the best-known configuration (the
+paper's reduction rule)."""
+
+from __future__ import annotations
+
+from repro.core.analysis.importance import (feature_importance,
+                                            important_params, reduced_space)
+from repro.core.analysis.spacestats import reduced_stats, space_stats
+from repro.core.costmodel import ARCH_NAMES
+
+from .common import BENCHMARKS, emit, load_tables, timed, write_csv
+
+
+def run() -> dict:
+    rows = []
+    out = {}
+    for name in BENCHMARKS:
+        prob, tables = load_tables(name)
+        with timed() as t:
+            st = space_stats(prob, archs=ARCH_NAMES)
+            imps = {a: feature_importance(tables[a], seed=0)
+                    for a in ARCH_NAMES}
+            best_enc, _ = tables["v5e"].best()
+            best_cfg = prob.space.decode(best_enc)
+            red = reduced_space(prob.space, imps, best_cfg, threshold=0.05)
+            st.update(reduced_stats(prob.space, red))
+            st["kept_params"] = important_params(imps, 0.05)
+        out[name] = st
+        valid = "/".join(str(st["valid"][a]) for a in ARCH_NAMES)
+        rows.append([name, st["cardinality"], st["constrained"], valid,
+                     st["reduced"], st.get("reduce_constrained", ""),
+                     ";".join(st["kept_params"])])
+        emit(f"table8/{name}", t.s * 1e6,
+             f"constrained={st['constrained']};reduced={st['reduced']}")
+    write_csv("table8_spacestats.csv",
+              ["benchmark", "cardinality", "constrained",
+               f"valid({'/'.join(ARCH_NAMES)})", "reduced",
+               "reduce_constrained", "kept_params"], rows)
+    return out
+
+
+if __name__ == "__main__":
+    run()

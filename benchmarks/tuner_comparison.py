@@ -1,0 +1,53 @@
+"""Beyond-paper: head-to-head tuner comparison over the full suite — the
+benchmark the infrastructure exists to enable (the paper proposes the suite;
+this is the study it unlocks).
+
+Protocol: every tuner x every benchmark x 7 seeds, 220-evaluation budget on
+v5e; report median best relative performance at budgets 25/50/100/220."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.tuners import TUNERS
+from repro.core.tuners.base import run_tuner
+
+from .common import BENCHMARKS, emit, load_tables, timed, write_csv
+
+BUDGET = 220
+SEEDS = 7
+CHECKPOINTS = (25, 50, 100, 220)
+
+
+def run() -> dict:
+    rows = []
+    out = {}
+    for name in BENCHMARKS:
+        prob, tables = load_tables(name)
+        t_best = min(o for o in tables["v5e"].objectives if np.isfinite(o))
+        with timed() as t:
+            for tname, cls in TUNERS.items():
+                curves = []
+                for seed in range(SEEDS):
+                    res = run_tuner(cls(prob.space, seed=seed), prob,
+                                    budget=BUDGET, arch="v5e")
+                    c = res.best_curve()
+                    c = c + [c[-1]] * (BUDGET - len(c))
+                    curves.append([t_best / v if np.isfinite(v) else 0.0
+                                   for v in c])
+                med = np.median(np.array(curves), axis=0)
+                out[(name, tname)] = med
+                rows.append([name, tname]
+                            + [f"{med[b - 1]:.4f}" for b in CHECKPOINTS])
+        best_tuner = max(TUNERS, key=lambda tn: out[(name, tn)][-1])
+        emit(f"tuners/{name}", t.s * 1e6 / (len(TUNERS) * SEEDS * BUDGET),
+             f"best_tuner={best_tuner}"
+             f";rel={out[(name, best_tuner)][-1]:.3f}")
+    write_csv("tuner_comparison.csv",
+              ["benchmark", "tuner"] + [f"rel_perf@{b}" for b in CHECKPOINTS],
+              rows)
+    return out
+
+
+if __name__ == "__main__":
+    run()

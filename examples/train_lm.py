@@ -1,0 +1,83 @@
+"""End-to-end training driver: a ~100M-class decoder LM on the synthetic
+Markov pipeline, with checkpoint/auto-resume and tuned-kernel configs.
+
+    PYTHONPATH=src python examples/train_lm.py                  # CPU-sized
+    PYTHONPATH=src python examples/train_lm.py --preset 100m    # ~100M params
+
+The CPU preset (default) trains a ~6M-param qwen3-family model for 300
+steps in a few minutes and prints a decreasing loss (the pipeline's
+Markov entropy floor is the asymptote).  The 100m preset is the same code
+at ~100M params — sized for a real accelerator; on this container expect
+~1 min/step.  On a TPU pod the launcher (repro.launch.train) runs the
+full assigned configs under the production mesh.
+"""
+
+import argparse
+import dataclasses
+
+from repro.configs import ARCHS
+from repro.data import DataConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models.transformer import BlockSpec, ModelConfig
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_loop import TrainLoop, TrainLoopConfig
+
+PRESETS = {
+    # ~6M params: d=256, 4 layers — minutes on one CPU core
+    "cpu": dict(d_model=256, n_layers=4, n_heads=4, n_kv_heads=2,
+                d_ff=1024, vocab=2048, seq_len=256, global_batch=8),
+    # ~100M params: d=768, 12 layers (GPT-2-small-class)
+    "100m": dict(d_model=768, n_layers=12, n_heads=12, n_kv_heads=4,
+                 d_ff=3072, vocab=32_000, seq_len=512, global_batch=8),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", choices=PRESETS, default="cpu")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+
+    cfg = ModelConfig(
+        name=f"train-lm-{args.preset}",
+        vocab=p["vocab"], d_model=p["d_model"], n_layers=p["n_layers"],
+        n_heads=p["n_heads"], n_kv_heads=p["n_kv_heads"], d_ff=p["d_ff"],
+        pattern=(BlockSpec(kind="attn", mlp="swiglu"),),
+        qk_norm=True, remat=False)
+    data = DataConfig(vocab=p["vocab"], seq_len=p["seq_len"],
+                      global_batch=p["global_batch"], branching=8)
+    mesh = make_host_mesh(model=1)
+
+    loop = TrainLoop(
+        cfg, mesh,
+        opt_cfg=OptimizerConfig(lr=1e-3, warmup_steps=30,
+                                total_steps=args.steps),
+        loop_cfg=TrainLoopConfig(total_steps=args.steps, log_every=10,
+                                 ckpt_every=100, ckpt_dir=args.ckpt_dir),
+        data_cfg=data)
+
+    floor = loop.pipeline.entropy_floor()
+    n_params = sum(x.size for x in __import__("jax").tree.leaves(
+        __import__("jax").eval_shape(loop.model.init,
+                                     __import__("jax").random.key(0))))
+    print(f"model: {n_params / 1e6:.1f}M params | "
+          f"data entropy floor: {floor:.3f} nats/token")
+
+    losses = []
+
+    def log(step, m):
+        losses.append(m["nll"])
+        print(f"step {step:4d}  nll {m['nll']:7.4f}  "
+              f"(floor {floor:.3f})  {m['tokens_per_s']:8.0f} tok/s",
+              flush=True)
+
+    loop.run(on_metrics=log)
+    assert losses[-1] < losses[0], "loss did not decrease!"
+    print(f"nll: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(floor {floor:.3f})  OK")
+
+
+if __name__ == "__main__":
+    main()

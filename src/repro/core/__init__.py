@@ -1,0 +1,20 @@
+"""repro.core — BAT-TPU: the paper's benchmark-suite machinery.
+
+Search spaces, the shared tunable-problem interface, the TPU analytical cost
+model, eight tuners, the results database, and the landscape analyses
+(convergence, centrality, PFI, portability, distributions).
+"""
+
+from .costmodel import (ARCH_NAMES, DEFAULT_ARCH, TPU_GENERATIONS,
+                        KernelFeatures, estimate_seconds)
+from .problem import FunctionProblem, MeasuredProblem, Trial, TunableProblem
+from .results import ResultsDB, ResultTable
+from .space import Config, Constraint, Param, SearchSpace, powers_of_two
+
+__all__ = [
+    "SearchSpace", "Param", "Constraint", "Config", "powers_of_two",
+    "TunableProblem", "FunctionProblem", "MeasuredProblem", "Trial",
+    "ResultsDB", "ResultTable",
+    "KernelFeatures", "estimate_seconds", "TPU_GENERATIONS",
+    "ARCH_NAMES", "DEFAULT_ARCH",
+]

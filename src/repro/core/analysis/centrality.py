@@ -1,0 +1,115 @@
+"""Fig 3: proportion-of-centrality search-difficulty metric.
+
+From Schoonhoven et al.: build the fitness flow graph (FFG) — every valid
+config is a node, with a directed edge to each Hamming-1 neighbor of strictly
+lower fitness.  A random walk on the FFG mimics randomized first-improvement
+local search; PageRank gives the expected arrival mass.  The metric is the
+share of PageRank mass held by the "suitably good" local minima
+(fitness ≤ (1+p)·f_opt) relative to all local minima — higher == easier for
+local search.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..results import ResultTable
+from ..space import SearchSpace
+
+
+@dataclass
+class FFG:
+    n: int
+    src: np.ndarray            # edge sources (node ids)
+    dst: np.ndarray            # edge destinations
+    fitness: np.ndarray        # per-node objective (seconds)
+    minima: np.ndarray         # bool: node is a local minimum (no out-edges)
+
+
+def build_ffg(space: SearchSpace, table: ResultTable) -> FFG:
+    """FFG over the *valid* configs recorded in ``table``.
+
+    Neighborhood = Hamming-1 within the recorded set (for sampled tables this
+    is the induced subgraph, same protocol the paper uses when exhaustive
+    enumeration is out of reach).
+    """
+    enc2id: dict[tuple, int] = {}
+    fit: list[float] = []
+    for cfg_enc, obj in zip(table.configs, table.objectives):
+        if np.isfinite(obj) and tuple(cfg_enc) not in enc2id:
+            enc2id[tuple(cfg_enc)] = len(fit)
+            fit.append(obj)
+    fitness = np.array(fit)
+    n = len(fitness)
+    cards = [p.cardinality for p in space.params]
+    src_l: list[int] = []
+    dst_l: list[int] = []
+    for enc, u in enc2id.items():
+        fu = fitness[u]
+        for d, c in enumerate(cards):
+            for v_idx in range(c):
+                if v_idx == enc[d]:
+                    continue
+                nb = enc[:d] + (v_idx,) + enc[d + 1:]
+                v = enc2id.get(nb)
+                if v is not None and fitness[v] < fu:
+                    src_l.append(u)
+                    dst_l.append(v)
+    src = np.array(src_l, dtype=np.int64)
+    dst = np.array(dst_l, dtype=np.int64)
+    outdeg = np.bincount(src, minlength=n)
+    return FFG(n=n, src=src, dst=dst, fitness=fitness, minima=outdeg == 0)
+
+
+def pagerank(ffg: FFG, damping: float = 0.85, iters: int = 100,
+             tol: float = 1e-10) -> np.ndarray:
+    """Power iteration; dangling (local-minimum) mass redistributes uniformly."""
+    n = ffg.n
+    if n == 0:
+        return np.array([])
+    outdeg = np.bincount(ffg.src, minlength=n).astype(np.float64)
+    r = np.full(n, 1.0 / n)
+    for _ in range(iters):
+        contrib = np.zeros(n)
+        w = np.where(outdeg[ffg.src] > 0, r[ffg.src] / outdeg[ffg.src], 0.0)
+        np.add.at(contrib, ffg.dst, w)
+        dangling = r[outdeg == 0].sum()
+        r_new = (1 - damping) / n + damping * (contrib + dangling / n)
+        if np.abs(r_new - r).sum() < tol:
+            r = r_new
+            break
+        r = r_new
+    return r / r.sum()
+
+
+def proportion_of_centrality(space: SearchSpace, table: ResultTable,
+                             p: float = 0.10, damping: float = 0.85) -> float:
+    """Share of minima PageRank mass on minima with fitness ≤ (1+p)·f_opt."""
+    ffg = build_ffg(space, table)
+    if ffg.n == 0 or not ffg.minima.any():
+        return float("nan")
+    pr = pagerank(ffg, damping)
+    f_opt = ffg.fitness.min()
+    good = ffg.minima & (ffg.fitness <= (1.0 + p) * f_opt)
+    total = pr[ffg.minima].sum()
+    return float(pr[good].sum() / total) if total > 0 else float("nan")
+
+
+def centrality_curve(space: SearchSpace, table: ResultTable,
+                     ps: np.ndarray | None = None) -> dict:
+    """Metric as a function of p (the paper sweeps the proportion p)."""
+    ffg = build_ffg(space, table)
+    pr = pagerank(ffg)
+    f_opt = ffg.fitness.min()
+    total = pr[ffg.minima].sum()
+    if ps is None:
+        ps = np.linspace(0.0, 0.5, 26)
+    vals = []
+    for p in ps:
+        good = ffg.minima & (ffg.fitness <= (1.0 + p) * f_opt)
+        vals.append(float(pr[good].sum() / total) if total > 0 else float("nan"))
+    return {"p": np.asarray(ps).tolist(), "proportion": vals,
+            "n_nodes": ffg.n, "n_minima": int(ffg.minima.sum()),
+            "n_edges": int(len(ffg.src))}

@@ -1,0 +1,206 @@
+"""Analytical TPU timing model — the suite's deterministic performance oracle.
+
+The paper measures kernel runtimes on four NVIDIA GPUs.  This container has no
+TPU (and no GPU), so the portability/landscape studies use an *analytical*
+per-generation TPU timing model instead: each tunable kernel maps a
+(config, shape) pair to low-level :class:`KernelFeatures`, and this module
+turns features into estimated seconds on a given TPU generation.
+
+The model is intentionally structural — it captures the mechanisms that make
+real TPU kernel tuning non-trivial and architecture-dependent:
+
+* MXU tile quantization (128×128 on v4/v5, 256×256-effective on v6e),
+* sublane×lane (8×128) alignment for VPU work, dtype packing,
+* HBM streaming vs on-chip reuse (blocking determines traffic),
+* VMEM capacity limits (overflow == the "compilation failure" analogue) and
+  the loss of double-buffering when the working set exceeds half of VMEM,
+* per-grid-step overheads (favoring larger blocks ... up to VMEM limits),
+* issue/unroll efficiency of the in-kernel inner loop.
+
+Parameter *interactions* (the paper's PFI-sums ≫ 1 finding) emerge naturally:
+block shape simultaneously moves MXU utilization, HBM traffic, VMEM pressure
+and grid overhead — in opposite directions.
+
+Peak numbers are public figures; the model is documented, deterministic and
+unit-tested, and is calibrated only at the *structural* level (no fitting to
+hardware traces).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+MiB = 1024 * 1024
+
+
+@dataclass(frozen=True)
+class TpuGeneration:
+    """Chip-level public specs for one TPU generation."""
+
+    name: str
+    peak_flops_bf16: float        # FLOP/s
+    peak_flops_f32: float         # FLOP/s (MXU f32 ~ 1/4 bf16; VPU-bound ops differ)
+    hbm_bw: float                 # bytes/s
+    vmem_bytes: int               # per-core VMEM capacity
+    mxu_dim: int                  # systolic array side (effective)
+    ici_bw: float                 # bytes/s per link (one direction)
+    grid_overhead_s: float        # per grid-program dispatch overhead
+    launch_overhead_s: float      # fixed kernel launch overhead
+    vpu_flops: float              # VPU (vector unit) FLOP/s for non-MXU work
+
+    @property
+    def lane(self) -> int:
+        return 128
+
+    def sublane(self, dtype_bytes: int) -> int:
+        # (8,128) f32 native tile; 16 sublanes bf16; 32 for int8/fp8.
+        return 8 * max(1, 4 // dtype_bytes)
+
+
+# Public peak specs (chip-level).  v5e is the "home" architecture: its
+# constants (197 TFLOP/s bf16, 819 GB/s, ~50 GB/s/link) are the §Roofline
+# constants mandated for this project.
+TPU_GENERATIONS: dict[str, TpuGeneration] = {
+    "v4": TpuGeneration(
+        name="v4", peak_flops_bf16=275e12, peak_flops_f32=68.75e12,
+        hbm_bw=1228e9, vmem_bytes=32 * MiB, mxu_dim=128, ici_bw=50e9,
+        grid_overhead_s=1.2e-6, launch_overhead_s=6e-6, vpu_flops=4.3e12),
+    "v5e": TpuGeneration(
+        name="v5e", peak_flops_bf16=197e12, peak_flops_f32=49.25e12,
+        hbm_bw=819e9, vmem_bytes=128 * MiB, mxu_dim=128, ici_bw=50e9,
+        grid_overhead_s=1.0e-6, launch_overhead_s=5e-6, vpu_flops=3.1e12),
+    "v5p": TpuGeneration(
+        name="v5p", peak_flops_bf16=459e12, peak_flops_f32=114.75e12,
+        hbm_bw=2765e9, vmem_bytes=128 * MiB, mxu_dim=128, ici_bw=90e9,
+        grid_overhead_s=0.9e-6, launch_overhead_s=5e-6, vpu_flops=7.2e12),
+    "v6e": TpuGeneration(
+        name="v6e", peak_flops_bf16=918e12, peak_flops_f32=229.5e12,
+        hbm_bw=1640e9, vmem_bytes=128 * MiB, mxu_dim=256, ici_bw=90e9,
+        grid_overhead_s=0.8e-6, launch_overhead_s=4e-6, vpu_flops=14.3e12),
+}
+
+DEFAULT_ARCH = "v5e"
+ARCH_NAMES = tuple(TPU_GENERATIONS)
+
+
+@dataclass
+class KernelFeatures:
+    """Low-level features a tunable kernel derives from (config, shape)."""
+
+    # work
+    mxu_flops: float = 0.0          # FLOPs routed to the MXU (matmul-like)
+    vpu_flops: float = 0.0          # FLOPs routed to the VPU (elementwise etc.)
+    transcendental_ops: float = 0.0  # exp/log/rsqrt ... (≈8x a VPU flop)
+    # memory
+    hbm_bytes: float = 0.0          # total HBM traffic (reuse-aware)
+    vmem_working_set: float = 0.0   # bytes resident per grid step
+    # shape / schedule
+    grid_steps: float = 1.0         # number of grid programs executed
+    mxu_tile: tuple[int, int, int] = (128, 128, 128)   # (m, n, k) per-issue tile
+    dtype_bytes: int = 4
+    lane_extent: int = 128          # innermost-dim extent actually used
+    sublane_extent: int = 8         # second-minor extent actually used
+    unroll: int = 1                 # inner-loop unroll factor
+    inner_trip: int = 1             # inner-loop trip count (pre-unroll)
+    # penalties
+    serialization: float = 0.0      # 0 => perfect overlap, 1 => fully serial
+    gather_bytes: float = 0.0       # bytes moved via irregular gathers
+    extra_seconds: float = 0.0      # additive term (e.g. semaphore waits)
+    notes: dict = field(default_factory=dict)
+
+
+def _mxu_utilization(gen: TpuGeneration, tile: tuple[int, int, int],
+                     dtype_bytes: int) -> float:
+    """Fraction of MXU peak achieved by an (m,n,k) per-issue tile.
+
+    Each dim is quantized up to the systolic array side; small tiles waste
+    lanes.  The k dim pipelines, so its penalty is softer (pipeline fill).
+    """
+    m, n, k = (max(1, int(x)) for x in tile)
+    d = gen.mxu_dim
+    um = m / (math.ceil(m / d) * d)
+    un = n / (math.ceil(n / d) * d)
+    # pipeline fill: k passes through the array; ~d cycles of fill per issue
+    uk = k / (k + d)
+    uk = min(1.0, uk / (d / (d + 512)))   # normalize so k=512 ≈ 1.0 on 128-MXU
+    # (f32's lower throughput is already captured by peak_flops_f32)
+    return max(um * un * uk, 1e-3)
+
+
+def _vpu_utilization(gen: TpuGeneration, lane_extent: int, sublane_extent: int,
+                     dtype_bytes: int) -> float:
+    """Lane/sublane alignment efficiency for vector work."""
+    lane = gen.lane
+    sub = gen.sublane(dtype_bytes)
+    ul = lane_extent / (math.ceil(lane_extent / lane) * lane)
+    us = sublane_extent / (math.ceil(sublane_extent / sub) * sub)
+    return max(ul * us, 1e-3)
+
+
+def _issue_efficiency(unroll: int, inner_trip: int) -> float:
+    """Loop-management overhead amortized by unrolling; diminishing returns,
+    and over-unrolling past the trip count wastes issue slots."""
+    if inner_trip <= 0:
+        return 1.0
+    u = max(1, min(unroll, inner_trip))
+    base = u / (u + 0.35)            # asymptote 1.0, u=1 => 0.74
+    waste = 1.0
+    if unroll > inner_trip:
+        waste = inner_trip / unroll  # dead issue slots
+    rem = inner_trip % u
+    tail = 1.0 - 0.1 * (rem / inner_trip if inner_trip else 0.0)
+    return base * waste * tail
+
+
+def estimate_seconds(features: KernelFeatures, arch: str = DEFAULT_ARCH) -> float:
+    """Estimated kernel wall-time in seconds on ``arch``; ``inf`` if the
+    config cannot run there (VMEM overflow — the 'compile failure' analogue)."""
+    gen = TPU_GENERATIONS[arch]
+    f = features
+
+    if f.vmem_working_set > gen.vmem_bytes:
+        return math.inf
+
+    # --- compute term ------------------------------------------------- #
+    peak = gen.peak_flops_bf16 if f.dtype_bytes <= 2 else gen.peak_flops_f32
+    mxu_util = _mxu_utilization(gen, f.mxu_tile, f.dtype_bytes)
+    issue = _issue_efficiency(f.unroll, f.inner_trip)
+    t_mxu = f.mxu_flops / (peak * mxu_util * issue) if f.mxu_flops else 0.0
+
+    vpu_util = _vpu_utilization(gen, f.lane_extent, f.sublane_extent,
+                                f.dtype_bytes)
+    vpu_work = f.vpu_flops + 8.0 * f.transcendental_ops
+    t_vpu = vpu_work / (gen.vpu_flops * vpu_util * issue) if vpu_work else 0.0
+    t_compute = t_mxu + t_vpu
+
+    # --- memory term --------------------------------------------------- #
+    t_hbm = f.hbm_bytes / gen.hbm_bw
+    # irregular gathers achieve a fraction of streaming bandwidth
+    t_gather = f.gather_bytes / (0.25 * gen.hbm_bw) if f.gather_bytes else 0.0
+    t_mem = t_hbm + t_gather
+
+    # --- overlap -------------------------------------------------------- #
+    # double buffering requires 2x working set in VMEM; otherwise the DMA
+    # serializes behind compute proportionally.
+    if 2.0 * f.vmem_working_set <= gen.vmem_bytes:
+        serial = min(1.0, max(0.0, f.serialization))
+    else:
+        pressure = min(1.0, (2.0 * f.vmem_working_set - gen.vmem_bytes)
+                       / max(gen.vmem_bytes, 1))
+        serial = min(1.0, max(f.serialization, 0.35 + 0.65 * pressure))
+    t_body = max(t_compute, t_mem) + serial * min(t_compute, t_mem)
+
+    t_grid = gen.grid_overhead_s * max(0.0, f.grid_steps - 1.0)
+    return t_body + t_grid + gen.launch_overhead_s + f.extra_seconds
+
+
+def roofline_terms(features: KernelFeatures, arch: str = DEFAULT_ARCH
+                   ) -> dict[str, float]:
+    """Ideal-roofline terms for one kernel invocation (no quantization
+    penalties) — used by benchmarks to report 'fraction of roofline'."""
+    gen = TPU_GENERATIONS[arch]
+    peak = gen.peak_flops_bf16 if features.dtype_bytes <= 2 else gen.peak_flops_f32
+    t_c = (features.mxu_flops + features.vpu_flops) / peak
+    t_m = features.hbm_bytes / gen.hbm_bw
+    return {"compute_s": t_c, "memory_s": t_m, "bound": "compute" if t_c >= t_m else "memory"}

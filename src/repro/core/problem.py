@@ -1,0 +1,133 @@
+"""The shared problem interface — BAT 2.0's central contribution.
+
+Every benchmark (and every framework component that wants autotuning — Pallas
+kernels, sharding configs, remat policies) exposes itself as a
+:class:`TunableProblem`:  a named :class:`SearchSpace` plus an evaluation
+function producing a :class:`Trial`.  Every tuner consumes this interface
+unmodified; adding a benchmark or a tuner never requires porting work —
+exactly the interoperability argument of the paper.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+from .costmodel import ARCH_NAMES, DEFAULT_ARCH, KernelFeatures, estimate_seconds
+from .space import Config, SearchSpace
+
+
+@dataclass
+class Trial:
+    """One evaluated configuration."""
+
+    config: Config
+    objective: float                  # seconds; +inf => invalid on this arch
+    arch: str = DEFAULT_ARCH
+    valid: bool = True
+    info: dict = field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return self.valid and math.isfinite(self.objective)
+
+
+class TunableProblem:
+    """Base class: a search space + an objective.
+
+    Subclasses implement :meth:`features` (analytical evaluation via the TPU
+    cost model) and may override :meth:`evaluate` entirely (e.g. the
+    roofline evaluator compiles HLO instead).
+    """
+
+    name: str = "problem"
+
+    def __init__(self, space: SearchSpace):
+        self.space = space
+
+    # -- analytical path ------------------------------------------------ #
+    def features(self, config: Config, arch: str) -> KernelFeatures:
+        raise NotImplementedError
+
+    def evaluate(self, config: Config, arch: str = DEFAULT_ARCH) -> Trial:
+        if not self.space.satisfies(config):
+            return Trial(config, math.inf, arch, valid=False,
+                         info={"violated": self.space.violated(config)})
+        feats = self.features(config, arch)
+        t = estimate_seconds(feats, arch)
+        return Trial(config, t, arch, valid=math.isfinite(t),
+                     info={"features": feats})
+
+    # -- convenience ------------------------------------------------------ #
+    def evaluate_many(self, configs: Sequence[Config],
+                      arch: str = DEFAULT_ARCH) -> list[Trial]:
+        return [self.evaluate(c, arch) for c in configs]
+
+    def exhaustive(self, arch: str = DEFAULT_ARCH,
+                   limit: int | None = None) -> list[Trial]:
+        out = []
+        for cfg in self.space.enumerate(constrained=True):
+            out.append(self.evaluate(cfg, arch))
+            if limit is not None and len(out) >= limit:
+                break
+        return out
+
+    def sampled(self, n: int, seed: int = 0,
+                arch: str = DEFAULT_ARCH) -> list[Trial]:
+        """The paper's 10 000-random-configs protocol."""
+        return self.evaluate_many(self.space.sample_distinct(n, seed), arch)
+
+    def archs(self) -> tuple[str, ...]:
+        return ARCH_NAMES
+
+
+class FunctionProblem(TunableProblem):
+    """Wrap a plain ``fn(config, arch) -> float`` as a problem (tests/toys)."""
+
+    def __init__(self, space: SearchSpace,
+                 fn: Callable[[Config, str], float], name: str = "fn"):
+        super().__init__(space)
+        self.fn = fn
+        self.name = name
+
+    def evaluate(self, config: Config, arch: str = DEFAULT_ARCH) -> Trial:
+        if not self.space.satisfies(config):
+            return Trial(config, math.inf, arch, valid=False)
+        v = float(self.fn(config, arch))
+        return Trial(config, v, arch, valid=math.isfinite(v))
+
+
+class MeasuredProblem(TunableProblem):
+    """Wall-clock measurement of a callable built from a config (XLA:CPU).
+
+    Used by the micro-benchmark harness; analytical studies use the cost
+    model instead (deterministic, full-space-enumerable).
+    """
+
+    def __init__(self, space: SearchSpace,
+                 build: Callable[[Config], Callable[[], Any]],
+                 name: str = "measured", repeats: int = 5, warmup: int = 2):
+        super().__init__(space)
+        self.build = build
+        self.name = name
+        self.repeats = repeats
+        self.warmup = warmup
+
+    def evaluate(self, config: Config, arch: str = "cpu") -> Trial:
+        if not self.space.satisfies(config):
+            return Trial(config, math.inf, arch, valid=False)
+        try:
+            fn = self.build(config)
+        except Exception as e:  # config that fails to build == invalid
+            return Trial(config, math.inf, arch, valid=False,
+                         info={"error": repr(e)})
+        for _ in range(self.warmup):
+            fn()
+        best = math.inf
+        for _ in range(self.repeats):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return Trial(config, best, arch, valid=True)

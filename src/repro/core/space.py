@@ -1,0 +1,253 @@
+"""Discrete, constrained search spaces — the shared vocabulary of the suite.
+
+A ``SearchSpace`` is an ordered set of named discrete parameters plus a list of
+constraints (predicates over full configs).  This mirrors BAT 2.0's problem
+interface: every benchmark exposes its tunable parameters and restrictions in
+one declarative object that every tuner consumes unmodified.
+
+Configs are plain ``dict[str, value]``.  For numeric work (surrogates, PFI)
+configs can be encoded to index vectors and back.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator, Sequence
+
+Config = dict[str, Any]
+
+
+@dataclass(frozen=True)
+class Param:
+    """One tunable parameter: a name and its ordered list of discrete values."""
+
+    name: str
+    values: tuple
+
+    def __post_init__(self) -> None:
+        if len(self.values) == 0:
+            raise ValueError(f"parameter {self.name!r} has no values")
+        if len(set(self.values)) != len(self.values):
+            raise ValueError(f"parameter {self.name!r} has duplicate values")
+
+    @property
+    def cardinality(self) -> int:
+        return len(self.values)
+
+    def index_of(self, value) -> int:
+        return self.values.index(value)
+
+
+@dataclass(frozen=True)
+class Constraint:
+    """A named predicate over full configs.  ``fn(config) -> bool``."""
+
+    name: str
+    fn: Callable[[Config], bool]
+
+    def __call__(self, config: Config) -> bool:
+        return bool(self.fn(config))
+
+
+class SearchSpace:
+    """An ordered, constrained, discrete configuration space.
+
+    Provides: cardinality accounting (Table VIII), enumeration, uniform
+    sampling via rejection, Hamming-1 neighborhoods (for local search and the
+    fitness-flow graph), and index-vector encode/decode (for surrogates).
+    """
+
+    def __init__(self, params: Sequence[Param],
+                 constraints: Sequence[Constraint] = (),
+                 name: str = "space"):
+        if len({p.name for p in params}) != len(params):
+            raise ValueError("duplicate parameter names")
+        self.name = name
+        self.params: tuple[Param, ...] = tuple(params)
+        self.constraints: tuple[Constraint, ...] = tuple(constraints)
+        self._by_name = {p.name: p for p in self.params}
+
+    # ------------------------------------------------------------------ #
+    # basic accessors
+    # ------------------------------------------------------------------ #
+    @property
+    def param_names(self) -> tuple[str, ...]:
+        return tuple(p.name for p in self.params)
+
+    def param(self, name: str) -> Param:
+        return self._by_name[name]
+
+    @property
+    def cardinality(self) -> int:
+        """Unconstrained cross-product size (Table VIII 'Cardinality')."""
+        out = 1
+        for p in self.params:
+            out *= p.cardinality
+        return out
+
+    def satisfies(self, config: Config) -> bool:
+        return all(c(config) for c in self.constraints)
+
+    def violated(self, config: Config) -> list[str]:
+        return [c.name for c in self.constraints if not c(config)]
+
+    # ------------------------------------------------------------------ #
+    # encode / decode
+    # ------------------------------------------------------------------ #
+    def encode(self, config: Config) -> tuple[int, ...]:
+        """Config -> per-parameter value indices (surrogate features)."""
+        return tuple(p.index_of(config[p.name]) for p in self.params)
+
+    def decode(self, indices: Sequence[int]) -> Config:
+        return {p.name: p.values[i] for p, i in zip(self.params, indices)}
+
+    def flat_index(self, config: Config) -> int:
+        """Config -> mixed-radix integer (stable unique id)."""
+        idx = 0
+        for p in self.params:
+            idx = idx * p.cardinality + p.index_of(config[p.name])
+        return idx
+
+    def from_flat_index(self, idx: int) -> Config:
+        out: Config = {}
+        for p in reversed(self.params):
+            idx, r = divmod(idx, p.cardinality)
+            out[p.name] = p.values[r]
+        return {p.name: out[p.name] for p in self.params}
+
+    # ------------------------------------------------------------------ #
+    # enumeration & sampling
+    # ------------------------------------------------------------------ #
+    def enumerate(self, constrained: bool = True) -> Iterator[Config]:
+        for combo in itertools.product(*(p.values for p in self.params)):
+            cfg = dict(zip(self.param_names, combo))
+            if not constrained or self.satisfies(cfg):
+                yield cfg
+
+    def constrained_cardinality(self, limit: int | None = None) -> int:
+        """Exact count of constraint-satisfying configs (Table VIII
+        'Constrained').  ``limit`` caps the work for huge spaces."""
+        n = 0
+        for _ in self.enumerate(constrained=True):
+            n += 1
+            if limit is not None and n >= limit:
+                return n
+        return n
+
+    def sample(self, rng: random.Random, max_tries: int = 10_000) -> Config:
+        """Uniform sample from the *constrained* space via rejection."""
+        for _ in range(max_tries):
+            cfg = {p.name: rng.choice(p.values) for p in self.params}
+            if self.satisfies(cfg):
+                return cfg
+        raise RuntimeError(
+            f"{self.name}: could not sample a valid config in {max_tries} tries")
+
+    def sample_batch(self, n: int, seed: int = 0) -> list[Config]:
+        rng = random.Random(seed)
+        return [self.sample(rng) for _ in range(n)]
+
+    def sample_distinct(self, n: int, seed: int = 0,
+                        max_tries_factor: int = 200) -> list[Config]:
+        """Up to ``n`` distinct valid configs (the paper's 10 000-random-configs
+        protocol)."""
+        rng = random.Random(seed)
+        seen: set[int] = set()
+        out: list[Config] = []
+        tries = 0
+        while len(out) < n and tries < n * max_tries_factor:
+            tries += 1
+            cfg = self.sample(rng)
+            key = self.flat_index(cfg)
+            if key not in seen:
+                seen.add(key)
+                out.append(cfg)
+        return out
+
+    # ------------------------------------------------------------------ #
+    # neighborhoods (local search, FFG/centrality)
+    # ------------------------------------------------------------------ #
+    def neighbors(self, config: Config, constrained: bool = True,
+                  adjacent_only: bool = False) -> Iterator[Config]:
+        """Hamming-distance-1 neighbors: change one parameter to another value.
+
+        ``adjacent_only`` restricts moves to the next/previous value in the
+        parameter's ordered list (the FFG in Schoonhoven et al. uses full
+        Hamming-1; local search may prefer adjacent moves for numeric params).
+        """
+        for p in self.params:
+            cur = config[p.name]
+            i = p.index_of(cur)
+            if adjacent_only:
+                candidates = [j for j in (i - 1, i + 1) if 0 <= j < p.cardinality]
+            else:
+                candidates = [j for j in range(p.cardinality) if j != i]
+            for j in candidates:
+                cfg = dict(config)
+                cfg[p.name] = p.values[j]
+                if not constrained or self.satisfies(cfg):
+                    yield cfg
+
+    def random_neighbor(self, config: Config, rng: random.Random,
+                        max_tries: int = 1000) -> Config:
+        for _ in range(max_tries):
+            p = rng.choice(self.params)
+            v = rng.choice(p.values)
+            if v == config[p.name]:
+                continue
+            cfg = dict(config)
+            cfg[p.name] = v
+            if self.satisfies(cfg):
+                return cfg
+        return dict(config)
+
+    # ------------------------------------------------------------------ #
+    # reductions (Table VIII 'Reduced')
+    # ------------------------------------------------------------------ #
+    def reduce(self, keep: Sequence[str], frozen: Config | None = None,
+               name: str | None = None) -> "SearchSpace":
+        """Project onto ``keep`` params; others frozen to ``frozen`` (default:
+        first value).  Constraints are re-wrapped over the frozen context."""
+        frozen = dict(frozen or {})
+        for p in self.params:
+            if p.name not in keep:
+                frozen.setdefault(p.name, p.values[0])
+        kept = [p for p in self.params if p.name in keep]
+
+        def wrap(c: Constraint) -> Constraint:
+            def fn(cfg: Config, _c=c) -> bool:
+                full = dict(frozen)
+                full.update(cfg)
+                return _c(full)
+            return Constraint(c.name, fn)
+
+        return SearchSpace(kept, [wrap(c) for c in self.constraints],
+                           name=name or f"{self.name}-reduced")
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"SearchSpace({self.name!r}, {len(self.params)} params, "
+                f"|S|={self.cardinality}, {len(self.constraints)} constraints)")
+
+
+def powers_of_two(lo: int, hi: int) -> tuple[int, ...]:
+    """Inclusive powers of two between lo and hi."""
+    out = []
+    v = 1
+    while v <= hi:
+        if v >= lo:
+            out.append(v)
+        v *= 2
+    return tuple(out)
+
+
+def divisors(n: int) -> tuple[int, ...]:
+    out = [d for d in range(1, n + 1) if n % d == 0]
+    return tuple(out)
+
+
+def multiples(step: int, lo: int, hi: int) -> tuple[int, ...]:
+    return tuple(range(lo - lo % step + (step if lo % step else 0), hi + 1, step)) \
+        if lo % step else tuple(range(lo, hi + 1, step))

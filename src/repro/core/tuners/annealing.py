@@ -1,0 +1,44 @@
+"""Simulated annealing over Hamming-1 neighbor moves."""
+
+from __future__ import annotations
+
+import math
+
+from ..problem import Trial
+from ..space import Config, SearchSpace
+from .base import Tuner
+
+
+class SimulatedAnnealing(Tuner):
+    name = "annealing"
+
+    def __init__(self, space: SearchSpace, seed: int = 0,
+                 t0: float = 1.0, alpha: float = 0.995,
+                 relative: bool = True):
+        super().__init__(space, seed)
+        self.t = t0
+        self.alpha = alpha
+        self.relative = relative
+        self.current: Config | None = None
+        self.current_obj = math.inf
+        self._proposed: Config | None = None
+
+    def ask(self) -> Config:
+        if self.current is None:
+            self._proposed = None
+            return self.space.sample(self.rng)
+        self._proposed = self.space.random_neighbor(self.current, self.rng)
+        return self._proposed
+
+    def tell(self, trial: Trial) -> None:
+        self.t *= self.alpha
+        if not trial.ok:
+            return
+        if self.current is None or self._proposed is None:
+            self.current, self.current_obj = trial.config, trial.objective
+            return
+        delta = trial.objective - self.current_obj
+        if self.relative and math.isfinite(self.current_obj) and self.current_obj > 0:
+            delta /= self.current_obj
+        if delta <= 0 or self.rng.random() < math.exp(-delta / max(self.t, 1e-9)):
+            self.current, self.current_obj = trial.config, trial.objective

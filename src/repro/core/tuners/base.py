@@ -1,0 +1,105 @@
+"""Tuner interface: every optimizer in the suite implements ``ask``/``tell``.
+
+The runner drives the loop, enforces the evaluation budget, deduplicates
+configs (cached objective lookups are free — matching how BAT replays
+recorded search spaces), and records the full trace for convergence analysis.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Sequence
+
+from ..problem import Trial, TunableProblem
+from ..space import Config, SearchSpace
+
+
+@dataclass
+class TuneResult:
+    """Full trace of one tuner run on one problem/arch."""
+
+    tuner: str
+    problem: str
+    arch: str
+    seed: int
+    trials: list[Trial] = field(default_factory=list)
+
+    @property
+    def best(self) -> Trial:
+        ok = [t for t in self.trials if t.ok]
+        if not ok:
+            return Trial({}, math.inf, self.arch, valid=False)
+        return min(ok, key=lambda t: t.objective)
+
+    def best_curve(self) -> list[float]:
+        """Best-so-far objective after each evaluation (convergence curve)."""
+        out, best = [], math.inf
+        for t in self.trials:
+            if t.ok:
+                best = min(best, t.objective)
+            out.append(best)
+        return out
+
+    @property
+    def evaluations(self) -> int:
+        return len(self.trials)
+
+
+class Tuner:
+    """Base optimizer.  Subclasses implement :meth:`ask` and may use
+    :meth:`tell` to update internal state."""
+
+    name: str = "tuner"
+
+    def __init__(self, space: SearchSpace, seed: int = 0):
+        self.space = space
+        self.rng = random.Random(seed)
+        self.seed = seed
+
+    def ask(self) -> Config:
+        raise NotImplementedError
+
+    def tell(self, trial: Trial) -> None:
+        pass
+
+    def finished(self) -> bool:
+        """Optional early-termination signal (e.g. grid exhausted)."""
+        return False
+
+
+def run_tuner(tuner: Tuner, problem: TunableProblem, budget: int,
+              arch: str = "v5e", unique: bool = True) -> TuneResult:
+    """Drive ``tuner`` for ``budget`` objective evaluations.
+
+    ``unique=True``: re-asked configs are answered from cache and do NOT
+    consume budget (the standard protocol when tuning over recorded spaces).
+    A stall guard stops after 50x budget total asks.
+    """
+    res = TuneResult(tuner.name, problem.name, arch, tuner.seed)
+    cache: dict[int, Trial] = {}
+    asks = 0
+    while len(res.trials) < budget and asks < 50 * budget:
+        if tuner.finished():
+            break
+        asks += 1
+        cfg = tuner.ask()
+        key = problem.space.flat_index(cfg)
+        if key in cache:
+            tuner.tell(cache[key])
+            if not unique:
+                res.trials.append(cache[key])
+            continue
+        t = problem.evaluate(cfg, arch)
+        cache[key] = t
+        tuner.tell(t)
+        res.trials.append(t)
+    return res
+
+
+def run_many(make_tuner, problem: TunableProblem, budget: int, repeats: int,
+             arch: str = "v5e", seed0: int = 0) -> list[TuneResult]:
+    """Repeat a tuner run with different seeds (median-of-N protocol)."""
+    return [run_tuner(make_tuner(problem.space, seed0 + i), problem, budget,
+                      arch) for i in range(repeats)]

@@ -1,0 +1,66 @@
+"""Differential evolution adapted to discrete index space (rand/1/bin)."""
+
+from __future__ import annotations
+
+import math
+
+from ..problem import Trial
+from ..space import Config, SearchSpace
+from .base import Tuner
+
+
+class DifferentialEvolution(Tuner):
+    name = "diffevo"
+
+    def __init__(self, space: SearchSpace, seed: int = 0,
+                 pop_size: int = 20, f: float = 0.7, cr: float = 0.6):
+        super().__init__(space, seed)
+        self.pop_size = pop_size
+        self.f = f
+        self.cr = cr
+        self.pop: list[list[int]] = []        # encoded index vectors
+        self.obj: list[float] = []
+        self._target: int | None = None
+
+    def _decode(self, vec) -> Config:
+        clipped = [max(0, min(int(round(v)), p.cardinality - 1))
+                   for v, p in zip(vec, self.space.params)]
+        return self.space.decode(clipped)
+
+    def ask(self) -> Config:
+        if len(self.pop) < self.pop_size:
+            self._target = None
+            cfg = self.space.sample(self.rng)
+            self._seed_cfg = cfg
+            return cfg
+        for _ in range(100):
+            i = self.rng.randrange(self.pop_size)
+            a, b, c = self.rng.sample(range(self.pop_size), 3)
+            donor = [self.pop[a][d] + self.f * (self.pop[b][d] - self.pop[c][d])
+                     for d in range(len(self.space.params))]
+            jrand = self.rng.randrange(len(self.space.params))
+            trial_vec = [donor[d] if (self.rng.random() < self.cr or d == jrand)
+                         else self.pop[i][d]
+                         for d in range(len(self.space.params))]
+            cfg = self._decode(trial_vec)
+            if self.space.satisfies(cfg):
+                self._target = i
+                return cfg
+        self._target = None
+        cfg = self.space.sample(self.rng)
+        self._seed_cfg = cfg
+        return cfg
+
+    def tell(self, trial: Trial) -> None:
+        obj = trial.objective if trial.ok else math.inf
+        enc = list(self.space.encode(trial.config))
+        if self._target is None:
+            self.pop.append(enc)
+            self.obj.append(obj)
+            if len(self.pop) > self.pop_size:
+                worst = max(range(len(self.obj)), key=lambda j: self.obj[j])
+                self.pop.pop(worst)
+                self.obj.pop(worst)
+        elif obj <= self.obj[self._target]:
+            self.pop[self._target] = enc
+            self.obj[self._target] = obj

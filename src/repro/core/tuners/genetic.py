@@ -1,0 +1,59 @@
+"""Genetic algorithm: tournament selection, uniform crossover, mutation."""
+
+from __future__ import annotations
+
+import math
+
+from ..problem import Trial
+from ..space import Config, SearchSpace
+from .base import Tuner
+
+
+class GeneticAlgorithm(Tuner):
+    name = "genetic"
+
+    def __init__(self, space: SearchSpace, seed: int = 0,
+                 pop_size: int = 20, mutation_rate: float = 0.15,
+                 tournament: int = 3):
+        super().__init__(space, seed)
+        self.pop_size = pop_size
+        self.mutation_rate = mutation_rate
+        self.tournament = tournament
+        self.pop: list[tuple[float, Config]] = []
+        self._pending: Config | None = None
+
+    # -- operators -------------------------------------------------------- #
+    def _select(self) -> Config:
+        k = min(self.tournament, len(self.pop))
+        contenders = self.rng.sample(self.pop, k)
+        return min(contenders, key=lambda t: t[0])[1]
+
+    def _crossover(self, a: Config, b: Config) -> Config:
+        return {p.name: (a if self.rng.random() < 0.5 else b)[p.name]
+                for p in self.space.params}
+
+    def _mutate(self, cfg: Config) -> Config:
+        out = dict(cfg)
+        for p in self.space.params:
+            if self.rng.random() < self.mutation_rate:
+                out[p.name] = self.rng.choice(p.values)
+        return out
+
+    def ask(self) -> Config:
+        if len(self.pop) < self.pop_size:
+            self._pending = self.space.sample(self.rng)   # seeding phase
+            return self._pending
+        for _ in range(200):
+            child = self._mutate(self._crossover(self._select(), self._select()))
+            if self.space.satisfies(child):
+                self._pending = child
+                return child
+        self._pending = self.space.sample(self.rng)
+        return self._pending
+
+    def tell(self, trial: Trial) -> None:
+        obj = trial.objective if trial.ok else math.inf
+        self.pop.append((obj, trial.config))
+        if len(self.pop) > self.pop_size:      # steady-state: drop the worst
+            self.pop.sort(key=lambda t: t[0])
+            self.pop = self.pop[: self.pop_size]

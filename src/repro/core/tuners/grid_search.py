@@ -1,0 +1,35 @@
+"""Deterministic (optionally shuffled) full-grid enumeration."""
+
+from __future__ import annotations
+
+from ..space import Config, SearchSpace
+from .base import Tuner
+
+
+class GridSearch(Tuner):
+    name = "grid"
+
+    def __init__(self, space: SearchSpace, seed: int = 0, shuffle: bool = True):
+        super().__init__(space, seed)
+        self._iter = self.space.enumerate(constrained=True)
+        self._shuffle = shuffle
+        self._buf: list[Config] = []
+        self._done = False
+        if shuffle:
+            self._buf = list(self._iter)
+            self.rng.shuffle(self._buf)
+
+    def ask(self) -> Config:
+        if self._shuffle:
+            if not self._buf:
+                self._done = True
+                return self.space.sample(self.rng)
+            return self._buf.pop()
+        try:
+            return next(self._iter)
+        except StopIteration:
+            self._done = True
+            return self.space.sample(self.rng)
+
+    def finished(self) -> bool:
+        return self._done

@@ -1,0 +1,70 @@
+"""Randomized first-improvement local search with random restarts.
+
+This is the algorithm whose behaviour the fitness-flow-graph / proportion-of-
+centrality metric models (Schoonhoven et al.): walk to the first strictly
+better Hamming-1 neighbor; restart from a random config at local minima.
+"""
+
+from __future__ import annotations
+
+import math
+
+from ..problem import Trial
+from ..space import Config, SearchSpace
+from .base import Tuner
+
+
+class LocalSearch(Tuner):
+    name = "local"
+
+    def __init__(self, space: SearchSpace, seed: int = 0,
+                 best_improvement: bool = False):
+        super().__init__(space, seed)
+        self.best_improvement = best_improvement
+        self.current: Config | None = None
+        self.current_obj = math.inf
+        self._pending: list[Config] = []       # unexplored neighbors
+        self._best_nb: tuple[float, Config] | None = None
+
+    def _restart(self) -> Config:
+        self.current = None
+        self.current_obj = math.inf
+        self._pending = []
+        self._best_nb = None
+        return self.space.sample(self.rng)
+
+    def ask(self) -> Config:
+        if self.current is None:
+            return self._restart()
+        if not self._pending:
+            # neighborhood exhausted
+            if self.best_improvement and self._best_nb is not None \
+                    and self._best_nb[0] < self.current_obj:
+                obj, cfg = self._best_nb
+                self.current, self.current_obj = cfg, obj
+                self._fill_neighbors()
+                if self._pending:
+                    return self._pending.pop()
+            return self._restart()
+        return self._pending.pop()
+
+    def _fill_neighbors(self) -> None:
+        self._pending = list(self.space.neighbors(self.current))
+        self.rng.shuffle(self._pending)
+        self._best_nb = None
+
+    def tell(self, trial: Trial) -> None:
+        if self.current is None:
+            if trial.ok:
+                self.current, self.current_obj = trial.config, trial.objective
+                self._fill_neighbors()
+            return
+        if not trial.ok:
+            return
+        if self.best_improvement:
+            if self._best_nb is None or trial.objective < self._best_nb[0]:
+                self._best_nb = (trial.objective, trial.config)
+            return
+        if trial.objective < self.current_obj:    # first improvement: move
+            self.current, self.current_obj = trial.config, trial.objective
+            self._fill_neighbors()

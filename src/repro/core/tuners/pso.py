@@ -1,0 +1,67 @@
+"""Discrete particle swarm over encoded index vectors."""
+
+from __future__ import annotations
+
+import math
+
+from ..problem import Trial
+from ..space import Config, SearchSpace
+from .base import Tuner
+
+
+class ParticleSwarm(Tuner):
+    name = "pso"
+
+    def __init__(self, space: SearchSpace, seed: int = 0, n_particles: int = 12,
+                 w: float = 0.6, c1: float = 1.4, c2: float = 1.4):
+        super().__init__(space, seed)
+        self.n = n_particles
+        self.w, self.c1, self.c2 = w, c1, c2
+        dims = len(space.params)
+        self.pos: list[list[float]] = []
+        self.vel: list[list[float]] = []
+        self.pbest: list[tuple[float, list[float]]] = []
+        self.gbest: tuple[float, list[float]] = (math.inf, [0.0] * dims)
+        self._cur = 0
+        self._init_left = n_particles
+
+    def _decode(self, vec) -> Config:
+        clipped = [max(0, min(int(round(v)), p.cardinality - 1))
+                   for v, p in zip(vec, self.space.params)]
+        return self.space.decode(clipped)
+
+    def ask(self) -> Config:
+        if self._init_left > 0:
+            cfg = self.space.sample(self.rng)
+            enc = [float(i) for i in self.space.encode(cfg)]
+            self.pos.append(enc)
+            self.vel.append([self.rng.uniform(-1, 1) for _ in enc])
+            self.pbest.append((math.inf, list(enc)))
+            self._cur = len(self.pos) - 1
+            self._init_left -= 1
+            return cfg
+        i = self._cur = (self._cur + 1) % self.n
+        for _ in range(30):
+            new_v, new_p = [], []
+            for d in range(len(self.space.params)):
+                v = (self.w * self.vel[i][d]
+                     + self.c1 * self.rng.random() * (self.pbest[i][1][d] - self.pos[i][d])
+                     + self.c2 * self.rng.random() * (self.gbest[1][d] - self.pos[i][d]))
+                new_v.append(v)
+                new_p.append(self.pos[i][d] + v)
+            cfg = self._decode(new_p)
+            if self.space.satisfies(cfg):
+                self.vel[i], self.pos[i] = new_v, new_p
+                return cfg
+            # kick with random velocity and retry
+            self.vel[i] = [self.rng.uniform(-2, 2) for _ in self.vel[i]]
+        return self.space.sample(self.rng)
+
+    def tell(self, trial: Trial) -> None:
+        obj = trial.objective if trial.ok else math.inf
+        i = self._cur
+        enc = [float(x) for x in self.space.encode(trial.config)]
+        if obj < self.pbest[i][0]:
+            self.pbest[i] = (obj, enc)
+        if obj < self.gbest[0]:
+            self.gbest = (obj, enc)

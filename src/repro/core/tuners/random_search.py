@@ -1,0 +1,13 @@
+"""Random search — the paper's reference tuner and convergence baseline."""
+
+from __future__ import annotations
+
+from ..space import Config, SearchSpace
+from .base import Tuner
+
+
+class RandomSearch(Tuner):
+    name = "random"
+
+    def ask(self) -> Config:
+        return self.space.sample(self.rng)

@@ -1,0 +1,87 @@
+"""Surrogate-model optimizer (Bayesian-optimization style).
+
+Fits the from-scratch GBDT on observed (config, log-time) pairs, scores a
+random candidate pool with an exploration bonus from the cross-tree
+prediction spread (a cheap epistemic-uncertainty proxy), and asks the best
+candidate.  Mirrors what SMAC3/Optuna-style tuners do on these spaces.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from ..mlmodel import GradientBoostedTrees
+from ..problem import Trial
+from ..space import Config, SearchSpace
+from .base import Tuner
+
+
+class SurrogateBO(Tuner):
+    name = "surrogate_bo"
+
+    def __init__(self, space: SearchSpace, seed: int = 0,
+                 n_init: int = 16, pool: int = 256, refit_every: int = 8,
+                 kappa: float = 1.0):
+        super().__init__(space, seed)
+        self.n_init = n_init
+        self.pool = pool
+        self.refit_every = refit_every
+        self.kappa = kappa
+        self.X: list[tuple[int, ...]] = []
+        self.y: list[float] = []
+        self.model: GradientBoostedTrees | None = None
+        self._since_fit = 0
+        self._seen: set[int] = set()
+
+    def _fit(self) -> None:
+        if len(self.y) < max(8, self.n_init // 2):
+            return
+        X = np.array(self.X, dtype=np.int64)
+        y = np.array(self.y)
+        self.model = GradientBoostedTrees(
+            n_trees=60, learning_rate=0.15, max_depth=4,
+            min_samples_leaf=2, subsample=0.8, seed=self.seed).fit(X, y)
+        self._since_fit = 0
+
+    def _spread(self, X: np.ndarray) -> np.ndarray:
+        """Std of late-stage per-tree increments — exploration signal."""
+        m = self.model
+        tail = m.trees[len(m.trees) // 2:]
+        if not tail:
+            return np.zeros(len(X))
+        preds = np.stack([t.predict(X) for t in tail])
+        return preds.std(axis=0)
+
+    def ask(self) -> Config:
+        if len(self.y) < self.n_init or self.model is None:
+            return self.space.sample(self.rng)
+        # candidates not yet told — on small spaces re-asking the argmin
+        # forever would stall behind the runner's dedup cache
+        cands = []
+        for _ in range(self.pool * 4):
+            c = self.space.sample(self.rng)
+            if self.space.flat_index(c) not in self._seen:
+                cands.append(c)
+                if len(cands) >= self.pool:
+                    break
+        if not cands:                       # space exhausted
+            return self.space.sample(self.rng)
+        X = np.array([self.space.encode(c) for c in cands], dtype=np.int64)
+        mu = self.model.predict(X)
+        score = mu - self.kappa * self._spread(X)       # LCB acquisition
+        return cands[int(np.argmin(score))]
+
+    def tell(self, trial: Trial) -> None:
+        key = self.space.flat_index(trial.config)
+        if key in self._seen:
+            return
+        self._seen.add(key)
+        if not trial.ok:
+            return
+        self.X.append(self.space.encode(trial.config))
+        self.y.append(math.log(max(trial.objective, 1e-12)))
+        self._since_fit += 1
+        if self.model is None or self._since_fit >= self.refit_every:
+            self._fit()

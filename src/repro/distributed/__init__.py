@@ -1,0 +1,7 @@
+from . import sharding
+from .sharding import (active_mesh, batch_spec, cache_shardings, constrain,
+                       param_shardings, replicated, spec_for, use_mesh)
+
+__all__ = ["sharding", "active_mesh", "batch_spec", "cache_shardings",
+           "constrain", "param_shardings", "replicated", "spec_for",
+           "use_mesh"]

@@ -1,0 +1,5 @@
+from .kernel import flash_attention
+from .ref import mha_reference
+from .space import AttentionProblem
+
+__all__ = ["flash_attention", "mha_reference", "AttentionProblem"]

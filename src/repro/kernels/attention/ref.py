@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for (G)QA flash attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_reference(q, k, v, *, causal=True, scale=None):
+    """``q``: (Hq, Tq, D); ``k``/``v``: (Hkv, Tk, D); Hq % Hkv == 0."""
+    hq, tq, d = q.shape
+    hkv, tk, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(q.dtype)
+    kk = jnp.repeat(k, g, axis=0)
+    vv = jnp.repeat(v, g, axis=0)
+    logits = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(tq)[:, None] >= jnp.arange(tk)[None, :] - (tk - tq)
+        logits = jnp.where(mask[None], logits, -1e30)
+    w = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", w, vv.astype(jnp.float32)) \
+        .astype(q.dtype)

@@ -1,0 +1,81 @@
+"""Shared infrastructure for the tunable Pallas kernels.
+
+Each kernel package provides:
+  ``ref.py``    — pure-jnp oracle,
+  ``kernel.py`` — ``pl.pallas_call`` + BlockSpec implementation, parameterized
+                  by a config dict drawn from its search space,
+  ``ops.py``    — jit'd public wrapper (backend dispatch: Pallas on TPU,
+                  interpret/oracle on CPU),
+  ``space.py``  — the :class:`~repro.core.TunableProblem` (search space,
+                  constraints, analytical cost-model features).
+
+The landscape/portability studies evaluate configs through the analytical TPU
+cost model; correctness tests execute the *actual kernels* in interpret mode
+against the oracles.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+
+from ..core.costmodel import MiB
+from ..core.problem import TunableProblem
+from ..core.space import Config, SearchSpace
+
+# Structural VMEM budget for space-level constraints: a config is kept in
+# the space if it could run on the LARGEST generation (128 MiB VMEM,
+# double-buffered => 2*ws <= 256 MiB).  Per-generation validity on top of
+# this comes from the cost model (gen.vmem_bytes overflow => inf), exactly
+# the paper's per-architecture "Valid" column mechanism.
+PORTABLE_VMEM = 256 * MiB
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def dtype_bytes(dtype) -> int:
+    return np.dtype(dtype).itemsize
+
+
+class KernelProblem(TunableProblem):
+    """A tunable kernel bound to a concrete input shape.
+
+    ``shape`` is a dict of problem dimensions (e.g. ``{"m":..,"n":..,"k":..}``)
+    so one kernel yields a family of problems (the paper fixes one shape per
+    benchmark; we default to the paper-scale shape).
+    """
+
+    #: subclasses set these
+    default_shape: dict[str, int] = {}
+
+    def __init__(self, shape: dict[str, int] | None = None):
+        self.shape = dict(self.default_shape)
+        if shape:
+            self.shape.update(shape)
+        super().__init__(self.build_space())
+        self.name = f"{self.kernel_name}"
+
+    kernel_name: str = "kernel"
+
+    def build_space(self) -> SearchSpace:
+        raise NotImplementedError
+
+    # -- correctness hooks (used by tests) ------------------------------- #
+    def run_reference(self, config: Config, inputs: dict) -> Any:
+        raise NotImplementedError
+
+    def run_kernel(self, config: Config, inputs: dict,
+                   interpret: bool = True) -> Any:
+        raise NotImplementedError
+
+    def make_inputs(self, key: jax.Array, small: bool = True) -> dict:
+        raise NotImplementedError

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for 2D 'valid' convolution (correlation, as in the paper):
+
+    O(y, x) = sum_{i,j} I(y+i, x+j) * F(i, j)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_reference(image, filt):
+    img = image.astype(jnp.float32)[None, None]     # NCHW
+    f = filt.astype(jnp.float32)[None, None]        # OIHW
+    out = lax.conv_general_dilated(
+        img, f, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return out[0, 0].astype(image.dtype)

@@ -1,0 +1,5 @@
+from .kernel import dedisp
+from .ref import make_delays
+from .space import DedispProblem
+
+__all__ = ["dedisp", "make_delays", "DedispProblem"]

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for radio-astronomy dedispersion.
+
+    out[d, t] = sum_c  x[c, t + delay[c, d]]        t in [0, T_out)
+
+``delay`` is a precomputed int32 table from the cold-plasma dispersion law:
+    delay(c, d) = round( k_dm * DM(d) * (1/f_c^2 - 1/f_hi^2) * f_samp )
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_delays(n_chan: int, n_dm: int, *, f_lo=1.2e9, f_hi=1.7e9,
+                dm_step=1.0, t_samp=4.1e-5, k_dm=4.148808e15) -> jnp.ndarray:
+    """(n_chan, n_dm) int32 delay table in samples (channel 0 = highest f)."""
+    freqs = jnp.linspace(f_hi, f_lo, n_chan)
+    dms = jnp.arange(n_dm) * dm_step
+    delays = k_dm * dms[None, :] * (1.0 / freqs[:, None] ** 2 - 1.0 / f_hi ** 2)
+    return jnp.round(delays / t_samp).astype(jnp.int32)
+
+
+def dedisp_reference(x, delays, t_out: int):
+    """``x``: (C, T); ``delays``: (C, D) int32.  Returns (D, t_out) f32."""
+    c_dim, t = x.shape
+    d_dim = delays.shape[1]
+
+    def one_dm(d):
+        idx = delays[:, d][:, None] + jnp.arange(t_out)[None, :]  # (C, t_out)
+        return jnp.take_along_axis(x, idx, axis=1).sum(axis=0)
+
+    return jax.lax.map(one_dm, jnp.arange(d_dim)).astype(jnp.float32)

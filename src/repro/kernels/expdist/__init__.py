@@ -1,0 +1,4 @@
+from .kernel import expdist
+from .space import ExpdistProblem
+
+__all__ = ["expdist", "ExpdistProblem"]

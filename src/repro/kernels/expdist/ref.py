@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the ExpDist Gaussian-overlap registration cost:
+
+    D = sum_{i,j} exp( -||a_i - b_j||^2 / (2*(sa_i^2 + sb_j^2)) )
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def expdist_reference(a, b, sa, sb):
+    """``a``,``b``: (2, K); ``sa``,``sb``: (K,).  Returns scalar f32."""
+    dx = a[0][:, None] - b[0][None, :]
+    dy = a[1][:, None] - b[1][None, :]
+    r2 = dx * dx + dy * dy
+    denom = 2.0 * (sa[:, None] ** 2 + sb[None, :] ** 2)
+    return jnp.exp(-r2 / denom).sum().astype(jnp.float32)

@@ -1,0 +1,4 @@
+from .ops import hotspot
+from .space import HotspotProblem
+
+__all__ = ["hotspot", "HotspotProblem"]

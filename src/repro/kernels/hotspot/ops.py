@@ -1,0 +1,27 @@
+"""Public hotspot op with backend dispatch."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import hotspot as hotspot_pallas
+from .ref import hotspot_reference
+
+DEFAULT_CONFIG = {
+    "tt": 6, "block_h": 64, "block_w": 512, "unroll_t": 2,
+    "acc_dtype": "f32", "keep_power_vmem": 1, "grid_order": "rm",
+}
+
+
+def hotspot(temp, power, n_sweeps: int, config: dict | None = None,
+            use_pallas: bool | None = None, interpret: bool | None = None):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return hotspot_reference(temp, power, n_sweeps)
+    cfg = dict(DEFAULT_CONFIG)
+    if config:
+        cfg.update(config)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return hotspot_pallas(temp, power, n_sweeps, interpret=interpret, **cfg)

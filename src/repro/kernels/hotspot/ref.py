@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the Hotspot thermal stencil.
+
+One sweep on the (already halo-padded) domain, edge-replicated boundary:
+
+    t' = t + step * (p + Ry*(up + down - 2t) + Rx*(left + right - 2t)
+                       + Rz*(amb - t))
+
+The kernel and the oracle both operate on the padded domain; callers crop
+the tt-deep halo afterwards (garbage from the pad edge travels one cell per
+sweep, so the interior is exact — see kernel.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+DEFAULTS = dict(step=0.5, rx=0.1, ry=0.1, rz=0.05, amb=80.0)
+
+
+def _shift(t, d, axis):
+    if d == 1:
+        lead = jnp.take(t, jnp.array([0]), axis=axis)
+        return jnp.concatenate([lead, jnp.take(t, jnp.arange(t.shape[axis] - 1), axis=axis)], axis=axis)
+    lead = jnp.take(t, jnp.arange(1, t.shape[axis]), axis=axis)
+    tail = jnp.take(t, jnp.array([t.shape[axis] - 1]), axis=axis)
+    return jnp.concatenate([lead, tail], axis=axis)
+
+
+def sweep(t, p, *, step, rx, ry, rz, amb):
+    up = _shift(t, 1, 0)
+    down = _shift(t, -1, 0)
+    left = _shift(t, 1, 1)
+    right = _shift(t, -1, 1)
+    return t + step * (p + ry * (up + down - 2 * t)
+                       + rx * (left + right - 2 * t) + rz * (amb - t))
+
+
+def hotspot_reference(temp, power, n_sweeps: int, **consts):
+    c = {**DEFAULTS, **consts}
+    t = temp.astype(jnp.float32)
+    p = power.astype(jnp.float32)
+    for _ in range(n_sweeps):
+        t = sweep(t, p, **c)
+    return t.astype(temp.dtype)

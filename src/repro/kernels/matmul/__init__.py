@@ -1,0 +1,4 @@
+from .ops import gemm
+from .space import GemmProblem
+
+__all__ = ["gemm", "GemmProblem"]

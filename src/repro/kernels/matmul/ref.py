@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the tunable GEMM: C = alpha*A@B + beta*C."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gemm_reference(a, b, c, alpha=1.0, beta=1.0):
+    """f32-accumulated reference.  ``b`` is always (K, N) here; layout
+    variants are handled by the wrapper before calling the oracle."""
+    acc = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    out = alpha * acc + beta * c.astype(jnp.float32)
+    return out.astype(c.dtype)

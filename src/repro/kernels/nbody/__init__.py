@@ -1,0 +1,4 @@
+from .kernel import nbody
+from .space import NbodyProblem
+
+__all__ = ["nbody", "NbodyProblem"]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for N-body gravitational forces (softened, all-pairs)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+G = 1.0
+EPS2 = 1e-3
+
+
+def nbody_reference(pos, mass, eps2: float = EPS2):
+    """``pos``: (3, N); ``mass``: (N,).  Returns accelerations (3, N)."""
+    d = pos[:, None, :] - pos[:, :, None]           # (3, i, j): x_j - x_i
+    r2 = (d * d).sum(axis=0) + eps2                 # (i, j)
+    inv3 = 1.0 / (r2 * jnp.sqrt(r2))
+    w = mass[None, :] * inv3                        # (i, j)
+    return G * (d * w[None, :, :]).sum(axis=2)      # (3, i)

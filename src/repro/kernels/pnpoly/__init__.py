@@ -1,0 +1,4 @@
+from .space import PnpolyProblem
+from .kernel import pnpoly
+
+__all__ = ["pnpoly", "PnpolyProblem"]

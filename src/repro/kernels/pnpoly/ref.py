@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for point-in-polygon (crossing number / even-odd rule)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pnpoly_reference(points, poly):
+    """``points``: (2, N); ``poly``: (2, V) vertices in order.
+    Returns int32 (N,): 1 if inside."""
+    px, py = points[0], points[1]               # (N,)
+    x1, y1 = poly[0], poly[1]                   # (V,)
+    x2 = jnp.roll(x1, -1)
+    y2 = jnp.roll(y1, -1)
+    # (V, N) broadcasting
+    between = (y1[:, None] > py[None, :]) != (y2[:, None] > py[None, :])
+    den = y2 - y1
+    safe_den = jnp.where(den == 0, 1.0, den)
+    xint = ((x2 - x1)[:, None] * (py[None, :] - y1[:, None])
+            / safe_den[:, None] + x1[:, None])
+    crossings = jnp.where(between, px[None, :] < xint, False)
+    return (crossings.sum(axis=0) % 2).astype(jnp.int32)

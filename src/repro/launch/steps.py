@@ -1,0 +1,266 @@
+"""Step builders: train_step / prefill_step / serve_step per (arch, shape),
+with microbatched gradient accumulation and sharding-aware input specs.
+
+These are the functions the multi-pod dry-run lowers and the launchers run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.common import SHAPES
+from ..distributed import sharding as shd
+from ..models import Model, ModelConfig, build_model
+from ..train.optimizer import OptimizerConfig, apply_updates, init_opt_state
+
+ACT_BUDGET_BYTES = 3.5e9      # per-device activation budget for microbatching
+WHISPER_DEC_LEN = 448
+ENC_OUT_LEN = 1500            # whisper encoder output frames at decode time
+
+
+# ------------------------------------------------------------------ #
+# input specs (ShapeDtypeStructs — never allocated)
+# ------------------------------------------------------------------ #
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """Abstract model inputs for one shape cell."""
+    cell = SHAPES[shape_name]
+    b, s, kind = cell["global_batch"], cell["seq_len"], cell["kind"]
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    if kind in ("train", "prefill"):
+        if cfg.frontend == "audio":
+            # seq_len applies to encoder frames; decoder runs its arch length
+            t_dec = WHISPER_DEC_LEN
+            batch = {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), f32),
+                     "tokens": jax.ShapeDtypeStruct((b, t_dec), i32)}
+            if kind == "train":
+                batch["labels"] = jax.ShapeDtypeStruct((b, t_dec), i32)
+            return batch
+        if cfg.frontend == "vision":
+            t_text = s - cfg.n_patches
+            batch = {"patches": jax.ShapeDtypeStruct(
+                        (b, cfg.n_patches, cfg.d_model), f32),
+                     "tokens": jax.ShapeDtypeStruct((b, t_text), i32)}
+            if kind == "train":
+                batch["labels"] = jax.ShapeDtypeStruct((b, t_text), i32)
+            return batch
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if kind == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        return batch
+
+    # decode: one new token against a seq_len cache
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    batch = {"token": jax.ShapeDtypeStruct((b, 1), i32),
+             "position": jax.ShapeDtypeStruct((), i32),
+             "cache": cache}
+    if cfg.frontend == "audio":
+        batch["enc_out"] = jax.ShapeDtypeStruct(
+            (b, ENC_OUT_LEN, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def microbatch_count(cfg: ModelConfig, shape_name: str, mesh: Mesh) -> int:
+    """Pick gradient-accumulation depth so per-device saved activations
+    (scan carries across layer groups) fit the budget."""
+    cell = SHAPES[shape_name]
+    if cell["kind"] != "train":
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = sizes.get("pod", 1) * sizes.get("data", 1)
+    b_loc = max(1, cell["global_batch"] // dp)
+    s = cell["seq_len"] if cfg.frontend != "audio" else WHISPER_DEC_LEN
+    n_groups = cfg.n_layers // len(cfg.pattern) + cfg.n_layers % len(cfg.pattern)
+    n_groups += cfg.n_enc_layers
+    resid = 2.5 * b_loc * s * cfg.d_model * 2.0 * n_groups
+    k = 1
+    while resid / k > ACT_BUDGET_BYTES and k < b_loc:
+        k *= 2
+    return min(k, b_loc)
+
+
+# ------------------------------------------------------------------ #
+# step builders
+# ------------------------------------------------------------------ #
+def make_train_step(model: Model, opt_cfg: OptimizerConfig,
+                    microbatches: int = 1):
+    cfg = model.cfg
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p, mb):
+            return model.train_loss(p, mb)
+
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches,
+                                 *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss_sum), metrics = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+
+        params, opt_state, opt_metrics = apply_updates(
+            opt_cfg, params, opt_state, grads)
+        metrics = dict(metrics, **opt_metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, batch):
+        return model.decode_step(params, batch["cache"], batch["token"],
+                                 batch["position"],
+                                 enc_out=batch.get("enc_out"))
+    return serve_step
+
+
+# ------------------------------------------------------------------ #
+# sharding assembly for one (arch, shape, mesh) cell
+# ------------------------------------------------------------------ #
+@dataclasses.dataclass
+class CellPlan:
+    """Everything needed to lower one dry-run cell."""
+    model: Model
+    step_fn: Any
+    args: tuple                     # abstract args
+    in_shardings: tuple
+    out_shardings: Any
+    kind: str
+    microbatches: int = 1
+
+
+def optimize_config(cfg: ModelConfig, mesh: Mesh) -> ModelConfig:
+    """Beyond-paper SPMD plan (EXPERIMENTS.md §Perf): explicit attention/MoE
+    sharding, kv-head replication to TP, scatter cache updates."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = sizes.get("model", 1)
+    r = 1
+    if (tp > 1 and cfg.n_heads % tp == 0 and cfg.n_kv_heads < tp
+            and tp % cfg.n_kv_heads == 0):
+        cand = tp // cfg.n_kv_heads
+        if (cfg.n_heads // cfg.n_kv_heads) % cand == 0:
+            r = cand
+    return dataclasses.replace(cfg, opt_attn=True, opt_moe=True,
+                               opt_scatter_cache=True, kv_repeat=r)
+
+
+def plan_cell(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+              opt_cfg: OptimizerConfig | None = None,
+              microbatches: int | None = None,
+              optimized: bool = False) -> CellPlan:
+    if optimized:
+        cfg = optimize_config(cfg, mesh)
+    model = build_model(cfg)
+    kind = SHAPES[shape_name]["kind"]
+    abstract_params = model.abstract_params()
+    model.init  # axes populated by abstract init
+    # abstract init doesn't run python side effects through eval_shape's
+    # closure — run a real init of the tiny axes tree instead:
+    if model.axes is None:
+        _ = jax.eval_shape(model.init, jax.random.key(0))
+    if model.axes is None:     # pragma: no cover - defensive
+        raise RuntimeError("model.axes not populated")
+    p_shard = shd.param_shardings(abstract_params, model.axes, mesh)
+    batch = input_specs(cfg, shape_name)
+
+    if kind == "train":
+        opt_cfg = opt_cfg or OptimizerConfig()
+        mb = microbatches or microbatch_count(cfg, shape_name, mesh)
+        opt_abs = jax.eval_shape(
+            functools.partial(init_opt_state, opt_cfg), abstract_params)
+        o_shard = _opt_shardings(opt_abs, p_shard, mesh)
+        b_shard = {k: NamedSharding(mesh, shd.batch_spec(v.shape, mesh))
+                   for k, v in batch.items()}
+        step = make_train_step(model, opt_cfg, mb)
+        out_shardings = (p_shard, o_shard, None)
+        return CellPlan(model, step, (abstract_params, opt_abs, batch),
+                        (p_shard, o_shard, b_shard), out_shardings, kind, mb)
+
+    if kind == "prefill":
+        b_shard = {k: NamedSharding(mesh, shd.batch_spec(v.shape, mesh))
+                   for k, v in batch.items()}
+        step = make_prefill_step(model)
+        return CellPlan(model, step, (abstract_params, batch),
+                        (p_shard, b_shard), None, kind)
+
+    # decode
+    cell = SHAPES[shape_name]
+    cache_sh = shd.cache_shardings(batch["cache"], mesh,
+                                   n_kv_heads=cfg.n_kv_heads,
+                                   batch=cell["global_batch"])
+    b_shard = {
+        "token": NamedSharding(mesh, shd.batch_spec(
+            batch["token"].shape, mesh, seq_axis=None)),
+        "position": NamedSharding(mesh, P()),
+        "cache": cache_sh,
+    }
+    if "enc_out" in batch:
+        b_shard["enc_out"] = NamedSharding(mesh, shd.batch_spec(
+            batch["enc_out"].shape, mesh))
+    step = make_serve_step(model)
+    out_shardings = (None, cache_sh)
+    return CellPlan(model, step, (abstract_params, batch),
+                    (p_shard, b_shard), out_shardings, kind)
+
+
+def _opt_shardings(opt_abs, p_shard, mesh):
+    """Optimizer-state sharding mirrors the param sharding (ZeRO style)."""
+    rep = NamedSharding(mesh, P())
+
+    def like(subtree):
+        return jax.tree.map(lambda _, s: s, subtree, p_shard)
+
+    out = {"step": rep, "m": like(opt_abs["m"]), "v": like(opt_abs["v"]),
+           "master": like(opt_abs["master"])}
+    if "ef" in opt_abs:
+        out["ef"] = like(opt_abs["ef"])
+    return out
+
+
+def lower_cell(plan: CellPlan, mesh: Mesh, donate: bool = True):
+    """jit + lower one cell under its mesh; returns the Lowered object.
+    Decode donates the batch (the KV cache aliases in place)."""
+    donate_argnums = ()
+    if donate and plan.kind == "train":
+        donate_argnums = (0, 1)
+    elif donate and plan.kind == "decode":
+        donate_argnums = (1,)
+    with shd.use_mesh(mesh):
+        jitted = jax.jit(plan.step_fn,
+                         in_shardings=plan.in_shardings,
+                         out_shardings=plan.out_shardings,
+                         donate_argnums=donate_argnums)
+        return jitted.lower(*plan.args)

@@ -1,0 +1,4 @@
+from .model import Model, build_model
+from .transformer import BlockSpec, ModelConfig
+
+__all__ = ["Model", "build_model", "ModelConfig", "BlockSpec"]

@@ -1,0 +1,335 @@
+"""Attention blocks: GQA (optionally windowed / qk-norm / cross) and MLA.
+
+Two execution paths per block:
+  * ``forward``       — full-sequence (training / prefill); returns new cache
+  * ``decode``        — one token against a KV cache (serving)
+
+The jnp formulation is what the dry-run lowers (XLA fuses it well and the
+SPMD partitioner handles sharded-softmax reductions for sequence-sharded
+long-context); the Pallas flash kernel (repro.kernels.attention) is the
+TPU-deployment path behind the same interface.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import axis_size as _tp_axis, constrain
+from .layers import _init, apply_rope, norm_param, rms_norm
+
+NEG_INF = -1e30
+
+
+def _tp_size() -> int:
+    return _tp_axis("model")
+
+
+def _constrain_qkv(q, k, v, *, opt: bool):
+    """Beyond-paper SPMD policy (opt_attn): pin attention activations so the
+    partitioner never invents full-tensor rematerializations.
+
+    * heads divisible by TP -> heads on ``model`` (zero attention-internal
+      collectives when kv heads are replicated to TP, see ``kv_repeat``);
+    * otherwise -> sequence on ``model`` for q (context parallelism), k/v
+      replicated across ``model`` (partial-softmax psums are tiny vs the
+      full-remat copies the baseline suffers).
+    """
+    if not opt:
+        return q, k, v, None
+    tp = _tp_size()
+    h, hkv = q.shape[2], k.shape[2]
+    if tp > 1 and h % tp == 0 and hkv % tp == 0:
+        q = constrain(q, ("pod", "data"), None, "model", None)
+        k = constrain(k, ("pod", "data"), None, "model", None)
+        v = constrain(v, ("pod", "data"), None, "model", None)
+        return q, k, v, "heads"
+    if tp > 1 and q.shape[1] % tp == 0 and q.shape[1] > 1:
+        q = constrain(q, ("pod", "data"), "model", None, None)
+        k = constrain(k, ("pod", "data"), None, None, None)
+        v = constrain(v, ("pod", "data"), None, None, None)
+        return q, k, v, "seq"
+    return q, k, v, None
+
+
+# --------------------------------------------------------------------- #
+# GQA
+# --------------------------------------------------------------------- #
+def make_gqa(key, d_model, n_heads, n_kv, d_head, qk_norm=False):
+    ks = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    p = {"wq": _init(ks[0], (d_model, n_heads, d_head), s),
+         "wk": _init(ks[1], (d_model, n_kv, d_head), s),
+         "wv": _init(ks[2], (d_model, n_kv, d_head), s),
+         "wo": _init(ks[3], (n_heads, d_head, d_model),
+                     (n_heads * d_head) ** -0.5)}
+    a = {"wq": ("embed", "heads", "head_dim"),
+         "wk": ("embed", "kv_heads", "head_dim"),
+         "wv": ("embed", "kv_heads", "head_dim"),
+         "wo": ("heads", "head_dim", "embed")}
+    if qk_norm:
+        p["q_norm"], a["q_norm"] = jnp.ones((d_head,), jnp.float32), ("head_dim",)
+        p["k_norm"], a["k_norm"] = jnp.ones((d_head,), jnp.float32), ("head_dim",)
+    return p, a
+
+
+def _mask_bias(tq, tk, offset, window, causal=True):
+    """(tq, tk) additive bias.  ``offset`` = absolute position of query 0
+    minus absolute position of key 0.  ``window``: None/0 = unlimited."""
+    rows = jnp.arange(tq)[:, None] + offset
+    cols = jnp.arange(tk)[None, :]
+    ok = (rows >= cols) if causal else jnp.ones((tq, tk), bool)
+    if window:
+        ok = ok & (rows - cols < window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, bias):
+    """``q``/``k``: (B,T,H,Dh) with GQA head grouping; ``v`` may have a
+    different value dim.  f32 softmax."""
+    b, tq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    q = q.reshape(b, tq, hkv, g, dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits * (dh ** -0.5) + bias
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v.dtype), v)
+    return out.reshape(b, tq, h, v.shape[-1])
+
+
+#: opt_attn q-chunking: cap live logits at (tq/chunks x tk) per chunk.
+SDPA_Q_CHUNKS = 16
+
+
+def _sdpa_chunked(q, k, v, *, window, causal):
+    """Exact q-chunked attention (opt_attn, long sequences): each chunk's
+    softmax sees the full key range, so no online accumulation is needed —
+    only the live (tq_c x tk) logits block shrinks by the chunk count.
+    Python-unrolled (no scan) so compiled cost analysis stays exact; the
+    mask is built per chunk (the baseline materializes a (tq x tk) f32 bias
+    — 4 GiB at 32k context)."""
+    tq, tk = q.shape[1], k.shape[1]
+    n = max(1, min(SDPA_Q_CHUNKS, tq // 512))
+    while tq % n:
+        n -= 1
+    c = tq // n
+    outs = []
+    for i in range(n):
+        bias = _mask_bias(c, tk, (tk - tq) + i * c, window, causal)
+        outs.append(_sdpa(q[:, i * c:(i + 1) * c], k, v, bias))
+    return jnp.concatenate(outs, axis=1) if n > 1 else outs[0]
+
+
+def gqa_forward(p, x, *, positions, window=None, causal=True, qk_norm=False,
+                rope_theta=10_000.0, kv_override=None, make_cache=True,
+                opt=False, kv_repeat=1):
+    """Full-sequence attention.  Returns (out, cache).
+
+    ``kv_repeat`` (opt_attn): replicate kv heads r-fold so the effective kv
+    count matches TP — the Megatron GQA deployment trick.  ``jnp.repeat`` on
+    axis 2 keeps group alignment (new kv head j serves q heads with
+    h // g_eff == j, and j // r is the original head)."""
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    src = kv_override if kv_override is not None else x
+    k = jnp.einsum("btd,dhk->bthk", src, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", src, p["wv"])
+    if qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if rope_theta:
+        q = apply_rope(q, positions, rope_theta)
+        kpos = positions if kv_override is None else \
+            jnp.arange(k.shape[1])[None]
+        k = apply_rope(k, kpos, rope_theta)
+    if kv_repeat > 1:
+        k = jnp.repeat(k, kv_repeat, axis=2)
+        v = jnp.repeat(v, kv_repeat, axis=2)
+    q, k, v, mode = _constrain_qkv(q, k, v, opt=opt)
+    if opt and q.shape[1] >= 2048:
+        out = _sdpa_chunked(q, k, v, window=window, causal=causal)
+    else:
+        bias = _mask_bias(q.shape[1], k.shape[1], 0, window, causal)
+        out = _sdpa(q, k, v, bias)
+    if mode == "heads":
+        out = constrain(out, ("pod", "data"), None, "model", None)
+    elif mode == "seq":
+        out = constrain(out, ("pod", "data"), "model", None, None)
+    out = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    if opt:
+        out = constrain(out, ("pod", "data"), None, None)
+    cache = {"k": k, "v": v} if make_cache else None
+    return out, cache
+
+
+def _insert_row(cache, new, insert_b):
+    """Write ``new`` (B,1,...) into per-batch row ``insert_b`` of ``cache``
+    (B,T,...).  One-hot blend — vectorized over the batch so every slot may
+    sit at a different sequence position (continuous batching)."""
+    t = cache.shape[1]
+    onehot = jnp.arange(t)[None, :] == insert_b[:, None]       # (B,T)
+    onehot = onehot.reshape(onehot.shape + (1,) * (cache.ndim - 2))
+    return jnp.where(onehot, new.astype(cache.dtype), cache)
+
+
+def gqa_decode(p, x, cache, *, position, insert_at=None, qk_norm=False,
+               rope_theta=10_000.0, opt=False, kv_repeat=1, scatter=False):
+    """One-token decode.  ``x``: (B,1,D); cache k/v: (B,Tc,Hkv_eff,Dh).
+
+    ``position`` is the absolute token position (RoPE + validity mask) —
+    a scalar (lockstep decode) or an (B,) array (per-slot positions,
+    continuous batching).  ``insert_at`` is the cache slot (ring buffers
+    pass position % window — keys carry absolute RoPE phases, so slot order
+    is irrelevant).  Validity: slots <= position are live, which is exact
+    both before the ring wraps (slots beyond position are empty) and after
+    (all live).
+
+    ``scatter`` (opt_scatter_cache): update the cache row with a scatter
+    instead of the one-hot blend — the blend reads AND rewrites the whole
+    cache every token (2x cache traffic); the scatter touches one row.
+    ``kv_repeat``: the cache stores replicated kv heads (see gqa_forward),
+    so it shards cleanly over TP and each chip reads 1/TP of it.
+    """
+    b = x.shape[0]
+    pos_b = jnp.broadcast_to(jnp.asarray(position), (b,))
+    ins_b = pos_b if insert_at is None else \
+        jnp.broadcast_to(jnp.asarray(insert_at), (b,))
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k_new = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v_new = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    if qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k_new = rms_norm(k_new, p["k_norm"])
+    if rope_theta:
+        q = apply_rope(q, pos_b[:, None], rope_theta)
+        k_new = apply_rope(k_new, pos_b[:, None], rope_theta)
+    if kv_repeat > 1:
+        k_new = jnp.repeat(k_new, kv_repeat, axis=2)
+        v_new = jnp.repeat(v_new, kv_repeat, axis=2)
+    if opt:
+        tp = _tp_size()
+        hkv = k_new.shape[2]
+        spec = (("pod", "data"), None, "model", None) \
+            if (tp > 1 and hkv % tp == 0) \
+            else (("pod", "data"), "model", None, None)
+        cache = {"k": constrain(cache["k"], *spec),
+                 "v": constrain(cache["v"], *spec)}
+    if scatter:
+        k = cache["k"].at[jnp.arange(b), ins_b].set(
+            k_new[:, 0].astype(cache["k"].dtype))
+        v = cache["v"].at[jnp.arange(b), ins_b].set(
+            v_new[:, 0].astype(cache["v"].dtype))
+    else:
+        k = _insert_row(cache["k"], k_new, ins_b)
+        v = _insert_row(cache["v"], v_new, ins_b)
+    tk = k.shape[1]
+    cols = jnp.arange(tk)[None, :]
+    bias = jnp.where(cols <= pos_b[:, None], 0.0, NEG_INF).astype(jnp.float32)
+    bias = bias[:, None, None, None, :]          # (B,1,1,1,Tk) per-slot
+    out = _sdpa(q, k, v, bias)
+    out = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    if opt:
+        out = constrain(out, ("pod", "data"), None, None)
+    return out, {"k": k, "v": v}
+
+
+# --------------------------------------------------------------------- #
+# MLA (DeepSeek-V2 multi-head latent attention)
+# --------------------------------------------------------------------- #
+def make_mla(key, d_model, n_heads, *, kv_lora=512, q_lora=1536,
+             nope_dim=128, rope_dim=64, v_dim=None):
+    v_dim = v_dim if v_dim is not None else nope_dim
+    ks = jax.random.split(key, 8)
+    s = d_model ** -0.5
+    p = {
+        "w_dq": _init(ks[0], (d_model, q_lora), s),
+        "w_uq": _init(ks[1], (q_lora, n_heads, nope_dim + rope_dim),
+                      q_lora ** -0.5),
+        "w_dkv": _init(ks[2], (d_model, kv_lora), s),
+        "w_kpe": _init(ks[3], (d_model, rope_dim), s),
+        "w_uk": _init(ks[4], (kv_lora, n_heads, nope_dim), kv_lora ** -0.5),
+        "w_uv": _init(ks[5], (kv_lora, n_heads, v_dim), kv_lora ** -0.5),
+        "wo": _init(ks[6], (n_heads, v_dim, d_model),
+                    (n_heads * v_dim) ** -0.5),
+        "q_ln": jnp.ones((q_lora,), jnp.float32),
+        "kv_ln": jnp.ones((kv_lora,), jnp.float32),
+    }
+    a = {
+        "w_dq": ("embed", "q_lora"), "w_uq": ("q_lora", "heads", "head_dim"),
+        "w_dkv": ("embed", "kv_lora"), "w_kpe": ("embed", "head_dim"),
+        "w_uk": ("kv_lora", "heads", "head_dim"),
+        "w_uv": ("kv_lora", "heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+        "q_ln": ("q_lora",), "kv_ln": ("kv_lora",),
+    }
+    return p, a
+
+
+def mla_forward(p, x, *, positions, rope_theta=10_000.0, make_cache=True):
+    """Training/prefill path: materialize per-head K/V from the latent."""
+    nope = p["w_uk"].shape[2]
+    cq = rms_norm(jnp.einsum("btd,dq->btq", x, p["w_dq"]), p["q_ln"])
+    q = jnp.einsum("btq,qhk->bthk", cq, p["w_uq"])
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+    q_pe = apply_rope(q_pe, positions, rope_theta)
+
+    ckv = rms_norm(jnp.einsum("btd,dc->btc", x, p["w_dkv"]), p["kv_ln"])
+    k_pe = apply_rope(jnp.einsum("btd,dr->btr", x, p["w_kpe"])[:, :, None, :],
+                      positions, rope_theta)               # (B,T,1,R)
+    k_nope = jnp.einsum("btc,chk->bthk", ckv, p["w_uk"])
+    v = jnp.einsum("btc,chk->bthk", ckv, p["w_uv"])
+
+    h = q.shape[2]
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe, (*k_pe.shape[:2], h, k_pe.shape[-1]))],
+        axis=-1)
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+    bias = _mask_bias(x.shape[1], x.shape[1], 0, None, True)
+    out = _sdpa(q_full, k_full, v, bias)
+    out = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    cache = {"ckv": ckv, "k_pe": k_pe[:, :, 0, :]} if make_cache else None
+    return out, cache
+
+
+def mla_decode(p, x, cache, *, position, rope_theta=10_000.0, scatter=False):
+    """Absorbed decode: scores against the *latent* cache (c_kv, k_pe) —
+    the MLA memory/bandwidth saving is real here: cache row = kv_lora+rope
+    instead of 2*H*Dh."""
+    nope = p["w_uk"].shape[2]
+    scale = (nope + p["w_kpe"].shape[1]) ** -0.5
+    b = x.shape[0]
+    pos_b = jnp.broadcast_to(jnp.asarray(position), (b,))
+    cq = rms_norm(jnp.einsum("btd,dq->btq", x, p["w_dq"]), p["q_ln"])
+    q = jnp.einsum("btq,qhk->bthk", cq, p["w_uq"])
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+    q_pe = apply_rope(q_pe, pos_b[:, None], rope_theta)
+
+    ckv_new = rms_norm(jnp.einsum("btd,dc->btc", x, p["w_dkv"]), p["kv_ln"])
+    kpe_new = apply_rope(jnp.einsum("btd,dr->btr", x, p["w_kpe"])
+                         [:, :, None, :], pos_b[:, None], rope_theta)[:, :, 0, :]
+    if scatter:
+        bidx = jnp.arange(b)
+        ckv = cache["ckv"].at[bidx, pos_b].set(
+            ckv_new[:, 0].astype(cache["ckv"].dtype))
+        k_pe = cache["k_pe"].at[bidx, pos_b].set(
+            kpe_new[:, 0].astype(cache["k_pe"].dtype))
+    else:
+        ckv = _insert_row(cache["ckv"], ckv_new, pos_b)
+        k_pe = _insert_row(cache["k_pe"], kpe_new, pos_b)
+
+    # absorb W_uk into q: q_lat (B,1,H,C); scores over latent directly
+    q_lat = jnp.einsum("bthk,chk->bthc", q_nope, p["w_uk"])
+    s_lat = jnp.einsum("bthc,bTc->bhtT", q_lat, ckv,
+                       preferred_element_type=jnp.float32)
+    s_pe = jnp.einsum("bthr,bTr->bhtT", q_pe, k_pe,
+                      preferred_element_type=jnp.float32)
+    tk = ckv.shape[1]
+    bias = jnp.where(jnp.arange(tk)[None, :] <= pos_b[:, None], 0.0, NEG_INF)
+    bias = bias[:, None, None, :]                 # (B,1,1,Tk) for bhtT
+    w = jax.nn.softmax(((s_lat + s_pe) * scale + bias).astype(jnp.float32),
+                       axis=-1)
+    o_lat = jnp.einsum("bhtT,bTc->bthc", w.astype(ckv.dtype), ckv)
+    out = jnp.einsum("bthc,chk->bthk", o_lat, p["w_uv"])
+    out = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+    return out, {"ckv": ckv, "k_pe": k_pe}

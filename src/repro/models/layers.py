@@ -1,0 +1,115 @@
+"""Core layers in pure JAX: norms, RoPE, MLPs, embeddings.
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every creator
+returns ``(params, axes)`` where ``axes`` mirrors the param tree with a tuple
+of *logical axis names* per leaf — the distribution layer maps logical names
+to mesh axes (see repro.distributed.sharding).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+PTREE_DTYPE = jnp.bfloat16          # parameter storage dtype
+
+
+def _init(key, shape, scale, dtype=None):
+    return (jax.random.normal(key, shape, jnp.float32) * scale) \
+        .astype(dtype or PTREE_DTYPE)
+
+
+def dense_param(key, d_in, d_out, axes=("embed", "ff"), scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return _init(key, (d_in, d_out), scale), axes
+
+
+def norm_param(d):
+    return jnp.ones((d,), jnp.float32), ("embed",)
+
+
+def rms_norm(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(axis=-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# rotary position embedding
+# --------------------------------------------------------------------- #
+def rope_frequencies(d_head: int, theta: float = 10_000.0):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """``x``: (..., T, H, Dh); ``positions``: broadcastable to (..., T)."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                      # (Dh/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., T, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]                         # (..., T, 1, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# MLPs
+# --------------------------------------------------------------------- #
+def make_mlp(key, d_model, d_ff, kind="swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "swiglu":
+        p = {"wi": _init(k1, (d_model, d_ff), d_model ** -0.5),
+             "wg": _init(k2, (d_model, d_ff), d_model ** -0.5),
+             "wo": _init(k3, (d_ff, d_model), d_ff ** -0.5)}
+        a = {"wi": ("embed", "ff"), "wg": ("embed", "ff"),
+             "wo": ("ff", "embed")}
+    else:                                   # gelu / relu2
+        p = {"wi": _init(k1, (d_model, d_ff), d_model ** -0.5),
+             "wo": _init(k3, (d_ff, d_model), d_ff ** -0.5)}
+        a = {"wi": ("embed", "ff"), "wo": ("ff", "embed")}
+    return p, a
+
+
+def mlp(params, x, kind="swiglu"):
+    if kind == "swiglu":
+        h = jnp.einsum("...d,df->...f", x, params["wi"])
+        g = jnp.einsum("...d,df->...f", x, params["wg"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    elif kind == "relu2":                   # RWKV channel-mix style
+        h = jnp.einsum("...d,df->...f", x, params["wi"])
+        h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    else:                                   # gelu
+        h = jnp.einsum("...d,df->...f", x, params["wi"])
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["wo"])
+
+
+# --------------------------------------------------------------------- #
+# embeddings / unembedding
+# --------------------------------------------------------------------- #
+def make_embedding(key, vocab, d_model):
+    return _init(key, (vocab, d_model), 1.0), ("vocab", "embed")
+
+
+def embed(table, tokens):
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table, x):
+    """Tied unembedding: logits in f32 (loss numerics), scaled by 1/sqrt(d)
+    (T5/PaLM convention — keeps the initial nll near ln(vocab))."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      table.astype(jnp.float32)) \
+        * (table.shape[1] ** -0.5)

@@ -1,0 +1,279 @@
+"""The public Model API: init / train_loss / prefill / decode_step.
+
+Pattern-scan: parameters for the repeating block pattern are stacked on a
+leading "group" axis and scanned (one pattern of HLO for any depth);
+remainder layers are unrolled.  Remat wraps the scan body.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .layers import embed, make_embedding, norm_param, rms_norm, unembed
+from .transformer import (BlockSpec, ModelConfig, _block_decode,
+                          _block_forward, _make_block)
+
+Params = Any
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.pattern = cfg.pattern
+        self.n_groups = cfg.n_layers // len(cfg.pattern)
+        self.n_rest = cfg.n_layers % len(cfg.pattern)
+        self.axes: dict | None = None     # logical axes tree (set by init)
+
+    # ---------------------------------------------------------------- #
+    # init
+    # ---------------------------------------------------------------- #
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        k_emb, k_blocks, k_rest, k_enc = jax.random.split(key, 4)
+        params: dict[str, Any] = {}
+        axes: dict[str, Any] = {}
+        params["embedding"], axes["embedding"] = make_embedding(
+            k_emb, cfg.vocab, cfg.d_model)
+        params["final_norm"], axes["final_norm"] = norm_param(cfg.d_model)
+
+        # stacked pattern groups: vmap the per-group initializer
+        def group_init(k):
+            ks = jax.random.split(k, len(self.pattern))
+            ps, _ = zip(*[_make_block(ks[i], cfg, spec)
+                          for i, spec in enumerate(self.pattern)])
+            return list(ps)
+
+        if self.n_groups:
+            gkeys = jax.random.split(k_blocks, self.n_groups)
+            params["blocks"] = jax.vmap(group_init)(gkeys)
+            _, ax = zip(*[_make_block(jax.random.key(0), cfg, spec)
+                          for spec in self.pattern])
+            axes["blocks"] = [jax.tree.map(
+                lambda a: ("layers",) + tuple(a) if isinstance(a, tuple)
+                else ("layers", a), x, is_leaf=lambda v: isinstance(v, tuple))
+                for x in ax]
+        if self.n_rest:
+            rkeys = jax.random.split(k_rest, self.n_rest)
+            rest, rest_ax = zip(*[
+                _make_block(rkeys[i], cfg, self.pattern[i % len(self.pattern)])
+                for i in range(self.n_rest)])
+            params["rest"] = list(rest)
+            axes["rest"] = list(rest_ax)
+
+        if cfg.n_enc_layers:
+            ekeys = jax.random.split(k_enc, cfg.n_enc_layers)
+            enc_spec = BlockSpec(kind="attn", mlp="gelu")
+
+            def enc_init(k):
+                return _make_block(k, cfg, enc_spec)[0]
+
+            params["encoder"] = jax.vmap(enc_init)(ekeys)
+            _, eax = _make_block(jax.random.key(0), cfg, enc_spec)
+            axes["encoder"] = jax.tree.map(
+                lambda a: ("layers",) + tuple(a) if isinstance(a, tuple)
+                else ("layers", a), eax,
+                is_leaf=lambda v: isinstance(v, tuple))
+            params["enc_norm"], axes["enc_norm"] = norm_param(cfg.d_model)
+        if cfg.frontend == "vision":
+            params["patch_proj"] = jnp.eye(cfg.d_model,
+                                           dtype=jnp.bfloat16)
+            axes["patch_proj"] = ("embed", "embed2")
+        self.axes = axes
+        return params
+
+    def abstract_params(self, seed: int = 0):
+        """ShapeDtypeStruct tree (dry-run / sharding planning)."""
+        out = jax.eval_shape(self.init, jax.random.key(seed))
+        return out
+
+    # ---------------------------------------------------------------- #
+    # encoder (whisper-style; frames already embedded by the stub frontend)
+    # ---------------------------------------------------------------- #
+    def _encode(self, params, frames):
+        cfg = self.cfg
+        enc_spec = BlockSpec(kind="attn", mlp="gelu")
+        positions = jnp.arange(frames.shape[1])[None]
+
+        def body(x, layer_params):
+            y, _, _ = _block_forward(layer_params, x, cfg, enc_spec,
+                                     positions=positions, causal=False,
+                                     make_cache=False)
+            return y, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, frames.astype(jnp.bfloat16),
+                            params["encoder"])
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    # ---------------------------------------------------------------- #
+    # full-sequence forward (training / prefill)
+    # ---------------------------------------------------------------- #
+    def _stack_forward(self, params, x, *, enc_out=None, make_cache=False):
+        cfg = self.cfg
+        positions = jnp.arange(x.shape[1])[None]
+
+        def group_body(carry, group_params):
+            h, aux = carry
+            caches = []
+            for i, spec in enumerate(self.pattern):
+                h, c, a = _block_forward(group_params[i], h, cfg, spec,
+                                         positions=positions,
+                                         enc_out=enc_out,
+                                         make_cache=make_cache)
+                caches.append(c)
+                aux = aux + a
+            return (h, aux), (caches if make_cache else None)
+
+        body = jax.checkpoint(group_body) if cfg.remat else group_body
+        aux0 = jnp.zeros((), jnp.float32)
+        caches = None
+        if self.n_groups:
+            (x, aux0), caches = jax.lax.scan(body, (x, aux0),
+                                             params["blocks"])
+        rest_caches = []
+        for i in range(self.n_rest):
+            spec = self.pattern[i % len(self.pattern)]
+            x, c, a = _block_forward(params["rest"][i], x, cfg, spec,
+                                     positions=positions, enc_out=enc_out,
+                                     make_cache=make_cache)
+            rest_caches.append(c)
+            aux0 = aux0 + a
+        return x, aux0, (caches, rest_caches)
+
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        x = embed(params["embedding"], batch["tokens"]).astype(jnp.bfloat16)
+        if cfg.frontend == "vision" and "patches" in batch:
+            patches = jnp.einsum("bpd,de->bpe",
+                                 batch["patches"].astype(jnp.bfloat16),
+                                 params["patch_proj"])
+            x = jnp.concatenate([patches, x], axis=1)
+        return x
+
+    def forward(self, params, batch, make_cache=False, last_only=False):
+        cfg = self.cfg
+        enc_out = None
+        if cfg.n_enc_layers:
+            enc_out = self._encode(params, batch["frames"])
+        x = self._embed_inputs(params, batch)
+        x = constrain(x, ("pod", "data"), None, None)
+        x, aux, caches = self._stack_forward(params, x, enc_out=enc_out,
+                                             make_cache=make_cache)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.frontend == "vision" and "patches" in batch:
+            x = x[:, batch["patches"].shape[1]:]     # logits for text only
+        if last_only:
+            x = x[:, -1:]
+        logits = unembed(params["embedding"], x)
+        # keep the vocab axis model-sharded: the (B,S,V) tensor dominates
+        # activation memory at 150k-class vocabularies
+        logits = constrain(logits, ("pod", "data"), None, "model")
+        return logits, aux, (caches, enc_out)
+
+    def prefill(self, params, batch):
+        """Serving prefill: caches + last-position logits only."""
+        logits, _, (caches, enc_out) = self.forward(
+            params, batch, make_cache=True, last_only=True)
+        return logits[:, 0], caches, enc_out
+
+    # ---------------------------------------------------------------- #
+    # losses
+    # ---------------------------------------------------------------- #
+    def train_loss(self, params, batch):
+        cfg = self.cfg
+        logits, aux, _ = self.forward(params, batch)
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        labels = jnp.maximum(labels, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None],
+                                   axis=-1)[..., 0]
+        nll = (logz - gold) * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+        loss = nll.sum() / denom
+        zloss = cfg.z_loss_weight * ((logz * mask) ** 2).sum() / denom
+        total = loss + zloss + cfg.aux_loss_weight * aux
+        return total, {"nll": loss, "z_loss": zloss, "aux": aux,
+                       "tokens": denom}
+
+    # ---------------------------------------------------------------- #
+    # serving
+    # ---------------------------------------------------------------- #
+    def init_cache(self, batch_size: int, max_len: int,
+                   dtype=jnp.bfloat16):
+        """Zeroed decode caches.  Windowed attn layers get ring buffers."""
+        cfg = self.cfg
+
+        def one(spec: BlockSpec):
+            if spec.kind in ("attn",):
+                length = min(spec.window, max_len) if spec.window else max_len
+                hkv = cfg.n_kv_heads * cfg.kv_repeat    # replicated kv heads
+                return {"attn": {
+                    "k": jnp.zeros((batch_size, length, hkv,
+                                    cfg.d_head), dtype),
+                    "v": jnp.zeros((batch_size, length, hkv,
+                                    cfg.d_head), dtype)}}
+            if spec.kind == "mla":
+                return {"attn": {
+                    "ckv": jnp.zeros((batch_size, max_len, cfg.kv_lora),
+                                     dtype),
+                    "k_pe": jnp.zeros((batch_size, max_len,
+                                       cfg.mla_rope_dim), dtype)}}
+            if spec.kind == "rwkv6":
+                h = cfg.d_model // 64
+                return {"mixer": (
+                    jnp.zeros((batch_size, h, 64, 64), jnp.float32),
+                    jnp.zeros((batch_size, cfg.d_model), dtype))}
+            w = cfg.rglru_width or cfg.d_model
+            from .rglru import CONV_WIDTH
+            return {"mixer": (
+                jnp.zeros((batch_size, w), jnp.float32),
+                jnp.zeros((batch_size, CONV_WIDTH - 1, w), dtype))}
+
+        groups = [
+            jax.tree.map(lambda l: jnp.broadcast_to(
+                l, (self.n_groups,) + l.shape), one(spec))
+            for spec in self.pattern] if self.n_groups else None
+        rest = [one(self.pattern[i % len(self.pattern)])
+                for i in range(self.n_rest)]
+        return {"groups": groups, "rest": rest}
+
+    def decode_step(self, params, caches, token, position, *, enc_out=None):
+        """``token``: (B, 1) int32; returns (logits (B, vocab), caches)."""
+        cfg = self.cfg
+        x = embed(params["embedding"], token).astype(jnp.bfloat16)
+
+        def group_body(h, scanned):
+            group_params, cache_in = scanned
+            new_caches = []
+            for i, spec in enumerate(self.pattern):
+                h, c = _block_decode(group_params[i], h, cache_in[i], cfg,
+                                     spec, position=position,
+                                     enc_out=enc_out)
+                new_caches.append(c)
+            return h, new_caches
+
+        new_group_caches = None
+        if self.n_groups:
+            x, new_group_caches = jax.lax.scan(
+                group_body, x, (params["blocks"], caches["groups"]))
+        new_rest = []
+        for i in range(self.n_rest):
+            spec = self.pattern[i % len(self.pattern)]
+            x, c = _block_decode(params["rest"][i], x, caches["rest"][i],
+                                 cfg, spec, position=position,
+                                 enc_out=enc_out)
+            new_rest.append(c)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embedding"], x)[:, 0]
+        return logits, {"groups": new_group_caches, "rest": new_rest}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

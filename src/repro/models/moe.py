@@ -1,0 +1,116 @@
+"""Mixture-of-Experts FFN: grouped GShard-style top-k capacity dispatch.
+
+Tokens are processed in groups (the classic trick that keeps the dispatch
+one-hots at O(tokens · k · capacity_factor) instead of O(tokens · E · C)).
+Experts are sharded over the ``model`` mesh axis ("expert" logical axis);
+the dispatch einsum produces the all-to-all under SPMD.  Optional shared
+experts (DeepSeek-style) run densely on every token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import axis_size, constrain
+from .layers import _init
+
+GROUP_SIZE = 128
+
+
+def make_moe(key, d_model, d_ff_expert, n_experts, *, n_shared=0,
+             d_ff_shared=None):
+    ks = jax.random.split(key, 5)
+    s = d_model ** -0.5
+    p = {
+        "router": _init(ks[0], (d_model, n_experts), s, jnp.float32),
+        "wi": _init(ks[1], (n_experts, d_model, d_ff_expert), s),
+        "wg": _init(ks[2], (n_experts, d_model, d_ff_expert), s),
+        "wo": _init(ks[3], (n_experts, d_ff_expert, d_model),
+                    d_ff_expert ** -0.5),
+    }
+    a = {
+        "router": ("embed", "expert"),
+        "wi": ("expert", "embed", "ff"),
+        "wg": ("expert", "embed", "ff"),
+        "wo": ("expert", "ff", "embed"),
+    }
+    if n_shared:
+        dfs = d_ff_shared or n_shared * d_ff_expert
+        p["shared_wi"] = _init(ks[4], (d_model, dfs), s)
+        p["shared_wg"] = _init(jax.random.fold_in(ks[4], 1), (d_model, dfs), s)
+        p["shared_wo"] = _init(jax.random.fold_in(ks[4], 2), (dfs, d_model),
+                               dfs ** -0.5)
+        a["shared_wi"] = ("embed", "ff")
+        a["shared_wg"] = ("embed", "ff")
+        a["shared_wo"] = ("ff", "embed")
+    return p, a
+
+
+def moe_ffn(p, x, *, top_k, capacity_factor=1.25, group_size=GROUP_SIZE,
+            opt=False):
+    """``x``: (B, T, D) -> (B, T, D) plus aux losses dict.
+
+    ``opt`` (opt_moe): divisibility-aware dispatch sharding.  The baseline
+    pins the expert axis of the dispatched activations to ``model``
+    unconditionally; when n_experts is not divisible by TP (granite: 40
+    experts, TP 16) that forces uneven partitions and reshard storms.  With
+    ``opt`` the expert axis is only model-sharded when divisible (EP);
+    otherwise experts run TP-style — the ff axis of the expert weights is
+    model-sharded, dispatch stays data-local, and the only collective is the
+    down-projection psum."""
+    b, t, d = x.shape
+    e = p["router"].shape[1]
+    n = b * t
+    gs = min(group_size, n)
+    g = n // gs
+    xg = constrain(x.reshape(g, gs, d), ("pod", "data"), None, None)
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, top_k)            # (g, gs, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(1, int(gs * top_k * capacity_factor / e))
+
+    # GShard position bookkeeping: sequential over the k choices
+    dispatch = jnp.zeros((g, gs, e, cap), x.dtype)
+    combine = jnp.zeros((g, gs, e, cap), jnp.float32)
+    fill = jnp.zeros((g, e), jnp.int32)                     # slots used
+    for ki in range(top_k):
+        mask = jax.nn.one_hot(idx[..., ki], e, dtype=jnp.int32)   # (g,gs,e)
+        pos = jnp.cumsum(mask, axis=1) - 1 + fill[:, None, :]
+        keep = (pos < cap) & (mask > 0)
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, -1), cap,
+                                dtype=x.dtype)              # (g,gs,e,cap)
+        sel = mask.astype(x.dtype)[..., None] * pos_oh
+        dispatch = dispatch + sel
+        combine = combine + sel.astype(jnp.float32) \
+            * gate_vals[..., ki][..., None, None]
+        fill = fill + mask.sum(axis=1)
+
+    # dispatch -> (g, e, cap, d): the all-to-all boundary (g:data, e:model)
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)
+    if opt and axis_size("model") > 1 and e % axis_size("model"):
+        # TP-style experts: no EP all-to-all, ff stays sharded in weights
+        xe = constrain(xe, ("pod", "data"), None, None, None)
+    else:
+        xe = constrain(xe, ("pod", "data"), "model", None, None)
+    h = jnp.einsum("gecd,edf->gecf", xe, p["wi"])
+    gt = jnp.einsum("gecd,edf->gecf", xe, p["wg"])
+    h = jax.nn.silu(gt.astype(jnp.float32)).astype(x.dtype) * h
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye)
+
+    if "shared_wi" in p:
+        hs = jnp.einsum("gsd,df->gsf", xg, p["shared_wi"])
+        gsh = jnp.einsum("gsd,df->gsf", xg, p["shared_wg"])
+        hs = jax.nn.silu(gsh.astype(jnp.float32)).astype(x.dtype) * hs
+        y = y + jnp.einsum("gsf,fd->gsd", hs, p["shared_wo"])
+
+    # load-balance auxiliary loss (Switch-style)
+    me = probs.mean(axis=(0, 1))                            # (e,)
+    ce = (jax.nn.one_hot(idx[..., 0], e).mean(axis=(0, 1)))
+    aux = e * jnp.sum(me * ce)
+    return y.reshape(b, t, d), {"aux_loss": aux}

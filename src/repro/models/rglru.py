@@ -1,0 +1,102 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+    a_t = exp(-c · softplus(Λ) · sigmoid(W_a x_t))        (per channel)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+with a short causal conv1d in front and a gated output, per the paper.
+State is O(width) — the hybrid arch's long-context advantage.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _init
+
+C_CONST = 8.0
+CONV_WIDTH = 4
+
+
+def make_rglru(key, d_model, width=None):
+    w = width or d_model
+    ks = jax.random.split(key, 7)
+    s = d_model ** -0.5
+    p = {
+        "w_x": _init(ks[0], (d_model, w), s),          # input branch
+        "w_gate": _init(ks[1], (d_model, w), s),       # output gate branch
+        "conv": _init(ks[2], (CONV_WIDTH, w), 0.3),
+        "w_a": _init(ks[3], (w, w), w ** -0.5),
+        "lam": _init(ks[4], (w,), 0.5, jnp.float32),
+        "w_i": _init(ks[5], (w, w), w ** -0.5),
+        "w_out": _init(ks[6], (w, d_model), w ** -0.5),
+    }
+    a = {
+        "w_x": ("embed", "ff"), "w_gate": ("embed", "ff"),
+        "conv": (None, "ff"), "w_a": ("ff", "ff"), "lam": ("ff",),
+        "w_i": ("ff", "ff"), "w_out": ("ff", "embed"),
+    }
+    return p, a
+
+
+def _conv1d(x, kernel, hist=None):
+    """Causal depthwise conv, width CONV_WIDTH.  ``x``: (B,T,W).
+    ``hist``: (B, CONV_WIDTH-1, W) carried for decode."""
+    if hist is None:
+        hist = jnp.zeros((x.shape[0], CONV_WIDTH - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([hist, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * kernel[i].astype(x.dtype)
+              for i in range(CONV_WIDTH))
+    return out, xp[:, -(CONV_WIDTH - 1):]
+
+
+def _gates(p, u):
+    log_a = (-C_CONST * jax.nn.softplus(p["lam"])
+             * jax.nn.sigmoid(jnp.einsum(
+                 "btw,wv->btv", u, p["w_a"]).astype(jnp.float32)))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    i_gate = jax.nn.sigmoid(jnp.einsum(
+        "btw,wv->btv", u, p["w_i"]).astype(jnp.float32))
+    return a, beta, i_gate
+
+
+def rglru_forward(p, x, *, state=None, make_cache=False):
+    b, t, d = x.shape
+    u0 = jnp.einsum("btd,dw->btw", x, p["w_x"])
+    gate = jnp.einsum("btd,dw->btw", x, p["w_gate"])
+    h0 = state[0] if state is not None else \
+        jnp.zeros((b, u0.shape[2]), jnp.float32)
+    hist = state[1] if state is not None else None
+    u, hist_new = _conv1d(u0, p["conv"], hist)
+    a, beta, i_gate = _gates(p, u)
+    drive = (beta * i_gate * u.astype(jnp.float32))
+
+    def step(h, inp):
+        at, dt = inp
+        h_new = at * h + dt
+        return h_new, h_new
+
+    def chunk_body(h, inp):
+        return jax.lax.scan(step, h, inp)
+
+    chunk = min(256, t)
+    while t % chunk:
+        chunk -= 1
+    n_chunks = t // chunk
+    xs = (a.transpose(1, 0, 2), drive.transpose(1, 0, 2))
+    if n_chunks > 1:      # remat chunks: O(T) -> O(T/chunk + chunk) bwd mem
+        xs_c = jax.tree.map(
+            lambda v: v.reshape(n_chunks, chunk, *v.shape[1:]), xs)
+        h_fin, hs = jax.lax.scan(jax.checkpoint(chunk_body), h0, xs_c)
+        hs = hs.reshape(t, *hs.shape[2:])
+    else:
+        h_fin, hs = chunk_body(h0, xs)
+    y = hs.transpose(1, 0, 2).astype(x.dtype)
+    y = y * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("btw,wd->btd", y, p["w_out"])
+    return out, ((h_fin, hist_new) if make_cache else None)
+
+
+def rglru_decode(p, x, state, *, position=None):
+    out, new_state = rglru_forward(p, x, state=state, make_cache=True)
+    return out, new_state

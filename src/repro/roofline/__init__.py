@@ -1,0 +1,5 @@
+from .roofline import (HW, CellReport, analyze_compiled, collective_bytes,
+                       model_flops, roofline_report)
+
+__all__ = ["HW", "CellReport", "analyze_compiled", "collective_bytes",
+           "model_flops", "roofline_report"]

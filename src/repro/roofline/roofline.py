@@ -1,0 +1,195 @@
+"""Three-term roofline from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = collective_bytes_per_chip / link_bw
+
+Sources: ``compiled.cost_analysis()`` provides FLOPs and bytes of the
+*per-device* (SPMD-partitioned) module — verified empirically in
+tests/test_roofline.py by sharding a known matmul and checking the reported
+FLOPs drop by the partition factor.  Collective bytes are NOT in
+cost_analysis: we parse the optimized HLO and sum result-shape bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (start variants included, done variants skipped so
+async pairs aren't double-counted).
+
+Hardware constants (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+#: v5e roofline constants (per chip)
+HW = {
+    "peak_flops_bf16": 197e12,
+    "hbm_bw": 819e9,
+    "ici_bw": 50e9,
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+#: collective opcodes whose result bytes count toward the collective term.
+#: ``-done`` halves of async pairs are skipped (the ``-start`` carries the
+#: shape); ``all-reduce-scatter`` is matched by reduce-scatter.
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?[%\w.\-]+\s*=\s*"
+    r"(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.MULTILINE)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """Bytes of one HLO shape string (or a tuple of shapes)."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue                     # token[] etc.
+        n = 1.0
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum result-shape bytes per collective opcode in optimized HLO."""
+    out: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, op, _start = m.group(1), m.group(2), m.group(3)
+        b = _shape_bytes(shape_str)
+        # collective-permute-start result tuples carry (in, out, ...) —
+        # count the payload once
+        if op == "collective-permute" and shape_str.startswith("("):
+            b = b / 2
+        out[op] = out.get(op, 0.0) + b
+    out["total"] = float(sum(v for k, v in out.items() if k != "total"))
+    return out
+
+
+# ------------------------------------------------------------------ #
+@dataclasses.dataclass
+class CellReport:
+    """Roofline summary of one compiled (arch × shape × mesh) cell."""
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_by_op: dict
+    peak_memory_per_chip: float
+    model_flops: float                    # 6·N_active·D (or 2·N·D decode)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_total_overlap(self) -> float:
+        """Ideal fully-overlapped step time = max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs — catches remat/redundancy waste."""
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the ideal overlapped step time."""
+        t = self.t_total_overlap
+        if t <= 0:
+            return 0.0
+        return (self.model_flops / self.chips) / (t * HW["peak_flops_bf16"])
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(bound=self.bound, t_total_overlap=self.t_total_overlap,
+                 useful_flops_ratio=self.useful_flops_ratio, mfu=self.mfu)
+        return d
+
+
+def model_flops(cfg, shape_cell: dict, *, microbatches: int = 1) -> float:
+    """Paper-convention useful FLOPs for one step.
+
+    train: 6·N_active·tokens  (fwd 2ND + bwd 4ND)
+    prefill: 2·N_active·tokens (+ attention term omitted, convention)
+    decode: 2·N_active·batch   (one token per sequence)
+    """
+    n = cfg.active_param_count()
+    kind = shape_cell["kind"]
+    if kind == "train":
+        d = shape_cell["global_batch"] * shape_cell["seq_len"]
+        return 6.0 * n * d
+    if kind == "prefill":
+        d = shape_cell["global_batch"] * shape_cell["seq_len"]
+        return 2.0 * n * d
+    return 2.0 * n * shape_cell["global_batch"]
+
+
+def analyze_compiled(compiled, *, chips: int, arch: str, shape: str,
+                     mesh: str, model_flops_value: float,
+                     hlo_text: str | None = None) -> CellReport:
+    """Extract the three roofline terms from a compiled executable."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    try:
+        mem = compiled.memory_analysis()
+        # live-at-peak ≈ arguments + outputs + temps − donated aliases
+        peak = float(mem.argument_size_in_bytes + mem.output_size_in_bytes
+                     + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    except Exception:
+        peak = 0.0
+    return CellReport(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        flops_per_chip=flops,
+        hbm_bytes_per_chip=hbm,
+        coll_bytes_per_chip=coll["total"],
+        coll_by_op={k: v for k, v in coll.items() if k != "total"},
+        peak_memory_per_chip=peak,
+        model_flops=model_flops_value,
+        t_compute=flops / HW["peak_flops_bf16"],
+        t_memory=hbm / HW["hbm_bw"],
+        t_collective=coll["total"] / HW["ici_bw"],
+    )
+
+
+def roofline_report(report: CellReport) -> str:
+    """One human-readable block per cell (EXPERIMENTS.md §Roofline rows)."""
+    r = report
+    return (
+        f"{r.arch} × {r.shape} × {r.mesh} ({r.chips} chips)\n"
+        f"  compute    {r.t_compute * 1e3:10.3f} ms"
+        f"  ({r.flops_per_chip / 1e12:.2f} TFLOP/chip)\n"
+        f"  memory     {r.t_memory * 1e3:10.3f} ms"
+        f"  ({r.hbm_bytes_per_chip / 1e9:.2f} GB/chip)\n"
+        f"  collective {r.t_collective * 1e3:10.3f} ms"
+        f"  ({r.coll_bytes_per_chip / 1e9:.3f} GB/chip)\n"
+        f"  bound={r.bound}  useful_flops={r.useful_flops_ratio:.3f}"
+        f"  MFU@overlap={r.mfu:.3f}"
+        f"  peak_mem={r.peak_memory_per_chip / 1e9:.2f} GB\n")

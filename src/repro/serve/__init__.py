@@ -1,0 +1,3 @@
+from .decode import Request, ServeConfig, ServingEngine
+
+__all__ = ["ServingEngine", "ServeConfig", "Request"]

@@ -1,0 +1,231 @@
+"""Batched serving: continuous batching over KV-cache slots.
+
+The engine owns a ``n_slots``-wide decode cache (one slot per concurrent
+sequence) and runs a single jit'd ``decode_step`` for **all** slots in
+lockstep — but each slot carries its *own* absolute position (the decode
+paths accept per-batch position vectors), so sequences of different lengths
+coexist: this is token-level continuous batching, not wave batching.
+
+Life of a request:
+
+1. ``submit()`` queues it.
+2. When a slot frees, the prompt is prefilled (batch=1, full-sequence
+   forward) and its caches are spliced into the slot — including ring-buffer
+   re-indexing for sliding-window layers and direct state writes for
+   recurrent (RWKV/RG-LRU) blocks.
+3. Every ``step()`` decodes one token for every active slot; finished
+   sequences (EOS or token budget) retire immediately and their slot is
+   refilled from the queue on the same step.
+
+Prefill compiles once per distinct prompt length (production deployments
+bucket prompt lengths; exact-length compilation is used here because padding
+would need key-padding masks end to end).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import Model, ModelConfig, build_model
+
+ENC_OUT_LEN = 1500           # whisper stub frontend: fixed frame count
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    n_slots: int = 4
+    max_len: int = 512
+    max_new_tokens: int = 64
+    temperature: float = 0.0          # 0 => greedy
+    eos_token: int | None = None
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (L,) int32 token ids
+    max_new_tokens: int | None = None
+    frames: np.ndarray | None = None   # audio stub (enc-dec archs)
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    prompt_len: int
+    tokens: list[int]
+    finished_reason: str               # "eos" | "length"
+
+
+class ServingEngine:
+    def __init__(self, model_or_cfg: Model | ModelConfig,
+                 cfg: ServeConfig | None = None, params: Any = None):
+        self.model = (model_or_cfg if isinstance(model_or_cfg, Model)
+                      else build_model(model_or_cfg))
+        self.cfg = cfg or ServeConfig()
+        if params is None:
+            params = self.model.init(jax.random.key(0))
+        self.params = params
+        c = self.cfg
+        self.cache = self.model.init_cache(c.n_slots, c.max_len)
+        self.positions = np.zeros(c.n_slots, np.int32)
+        self.active = np.zeros(c.n_slots, bool)
+        self.last_token = np.zeros((c.n_slots, 1), np.int32)
+        self.budget = np.zeros(c.n_slots, np.int32)
+        self.slot_req: list[Request | None] = [None] * c.n_slots
+        self.slot_out: list[list[int]] = [[] for _ in range(c.n_slots)]
+        self.queue: deque[Request] = deque()
+        self.completions: list[Completion] = []
+        self.enc_out = None
+        if self.model.cfg.n_enc_layers:
+            self.enc_out = jnp.zeros(
+                (c.n_slots, ENC_OUT_LEN, self.model.cfg.d_model),
+                jnp.bfloat16)
+        self._key = jax.random.key(c.seed)
+        self._decode = jax.jit(self._decode_fn)
+        self.steps = 0
+
+    # ------------------------------------------------------------------ #
+    def _decode_fn(self, params, cache, token, positions, enc_out):
+        logits, cache = self.model.decode_step(
+            params, cache, token, positions, enc_out=enc_out)
+        return logits, cache
+
+    # ------------------------------------------------------------------ #
+    # cache splicing
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _splice_leaf(slot_leaf, pref_leaf, slot: int, batch_dim: int):
+        """Write prefill cache (batch=1 at ``batch_dim``) into ``slot``.
+
+        Shapes match except possibly one sequence dim (target may be longer
+        — zero-padded tail — or shorter — a sliding-window ring buffer)."""
+        s_shape = list(slot_leaf.shape)
+        p_shape = list(pref_leaf.shape)
+        s_shape[batch_dim] = p_shape[batch_dim] = -1
+        diff = [i for i, (a, b) in enumerate(zip(s_shape, p_shape)) if a != b]
+        pref = jax.lax.index_in_dim(pref_leaf, 0, batch_dim, keepdims=False)
+        idx: list[Any] = [slice(None)] * slot_leaf.ndim
+        idx[batch_dim] = slot
+        if not diff:
+            return slot_leaf.at[tuple(idx)].set(
+                pref.astype(slot_leaf.dtype))
+        (d,) = diff
+        tgt, src = slot_leaf.shape[d], pref_leaf.shape[d]
+        pd = d - (1 if d > batch_dim else 0)       # dim in squeezed pref
+        if src <= tgt:                              # pad tail
+            idx[d] = slice(0, src)
+            return slot_leaf.at[tuple(idx)].set(
+                pref.astype(slot_leaf.dtype))
+        # ring buffer: keep the last ``tgt`` rows at slots (row % tgt)
+        rows = np.arange(src - tgt, src)
+        ring = rows % tgt
+        take: list[Any] = [slice(None)] * pref.ndim
+        take[pd] = rows
+        tail = pref[tuple(take)]
+        order = np.argsort(ring)
+        reord: list[Any] = [slice(None)] * pref.ndim
+        reord[pd] = order
+        idx[d] = ring[order]
+        return slot_leaf.at[tuple(idx)].set(
+            tail[tuple(reord)].astype(slot_leaf.dtype))
+
+    def _splice(self, pref_caches, slot: int):
+        """Splice one request's prefill caches into ``slot`` of the engine
+        cache.  ``pref_caches`` = (group_caches, rest_caches) from forward."""
+        groups, rest = pref_caches
+        if self.cache["groups"] is not None:
+            self.cache["groups"] = [
+                jax.tree.map(lambda s, p: self._splice_leaf(s, p, slot, 1),
+                             sg, pg)
+                for sg, pg in zip(self.cache["groups"], groups)]
+        for i, pr in enumerate(rest):
+            self.cache["rest"][i] = jax.tree.map(
+                lambda s, p: self._splice_leaf(s, p, slot, 0),
+                self.cache["rest"][i], pr)
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) + (req.max_new_tokens or
+                              self.cfg.max_new_tokens) > self.cfg.max_len:
+            raise ValueError(f"request {req.uid} exceeds max_len")
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.cfg.n_slots):
+            if self.active[slot] or not self.queue:
+                continue
+            req = self.queue.popleft()
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+            batch = {"tokens": prompt}
+            if req.frames is not None:
+                batch["frames"] = jnp.asarray(req.frames)[None]
+            logits, caches, enc_out = self.model.prefill(self.params, batch)
+            self._splice(caches, slot)
+            if enc_out is not None:
+                self.enc_out = self.enc_out.at[slot].set(
+                    enc_out[0].astype(self.enc_out.dtype))
+            first = self._sample(logits)[0]
+            self.slot_req[slot] = req
+            self.slot_out[slot] = [int(first)]
+            self.positions[slot] = len(req.prompt)      # next row to write
+            self.last_token[slot, 0] = int(first)
+            self.budget[slot] = (req.max_new_tokens
+                                 or self.cfg.max_new_tokens) - 1
+            self.active[slot] = True
+            self._maybe_finish(slot)
+
+    def _sample(self, logits) -> np.ndarray:
+        if self.cfg.temperature <= 0.0:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        self._key, sub = jax.random.split(self._key)
+        return np.asarray(jax.random.categorical(
+            sub, logits / self.cfg.temperature, axis=-1))
+
+    def _maybe_finish(self, slot: int) -> None:
+        tok = self.slot_out[slot][-1]
+        eos = self.cfg.eos_token is not None and tok == self.cfg.eos_token
+        full = self.budget[slot] <= 0
+        if eos or full:
+            req = self.slot_req[slot]
+            self.completions.append(Completion(
+                req.uid, len(req.prompt), list(self.slot_out[slot]),
+                "eos" if eos else "length"))
+            self.active[slot] = False
+            self.slot_req[slot] = None
+
+    # ------------------------------------------------------------------ #
+    def step(self) -> int:
+        """Admit waiting requests, decode one token for all active slots.
+        Returns the number of active slots after the step."""
+        self._admit()
+        if not self.active.any():
+            return 0
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.last_token),
+            jnp.asarray(self.positions), self.enc_out)
+        nxt = self._sample(logits)
+        for slot in range(self.cfg.n_slots):
+            if not self.active[slot]:
+                continue
+            self.slot_out[slot].append(int(nxt[slot]))
+            self.last_token[slot, 0] = int(nxt[slot])
+            self.positions[slot] += 1
+            self.budget[slot] -= 1
+            self._maybe_finish(slot)
+        self.steps += 1
+        return int(self.active.sum())
+
+    def run(self, max_steps: int = 10_000) -> list[Completion]:
+        """Drive until queue + slots drain; returns all completions."""
+        for _ in range(max_steps):
+            if not self.queue and not self.active.any():
+                break
+            self.step()
+        return self.completions

@@ -1,0 +1,244 @@
+"""The training loop: jit'd sharded steps + the fault-tolerance policy.
+
+What lives here (and why it is the shape it is at 1000-node scale):
+
+* **Auto-resume** — on start, the loop restores the newest committed
+  checkpoint if one exists; the data pipeline needs only the step index
+  (see data/pipeline.py), so restart = re-exec.  That is the entire node-
+  failure story for bulk-synchronous SPMD: any chip failure kills the step,
+  the job scheduler re-launches, the loop resumes.  No in-band recovery
+  protocol to get wrong.
+* **Preemption hook** — SIGTERM/SIGINT set a flag; the loop finishes the
+  in-flight step, checkpoints, and exits 0.  On Borg/GKE-class schedulers
+  this converts evictions into clean restarts.
+* **Straggler watchdog** — per-step wall time is tracked with a robust
+  running median; a step slower than ``watchdog_factor``× median is logged
+  as a straggler event and (optionally) triggers an early checkpoint so a
+  degrading host costs at most one checkpoint interval.  In SPMD there is
+  nothing else a worker can do unilaterally — mitigation is
+  checkpoint-restart onto healthy hardware, which this makes cheap.
+* **Async logging / device-offload discipline** — metrics are fetched with
+  one blocking transfer per ``log_every`` steps, keeping the device queue
+  full between logs (dispatch overlap ≈ the simplest distributed-opt trick).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import signal
+import time
+from pathlib import Path
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from ..configs.common import SHAPES
+from ..data import DataConfig, make_pipeline
+from ..distributed import sharding as shd
+from ..models import ModelConfig, build_model
+from .optimizer import OptimizerConfig, init_opt_state
+from . import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 200
+    log_every: int = 10
+    ckpt_every: int = 100
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+    auto_resume: bool = True
+    microbatches: int = 1
+    watchdog_factor: float = 3.0
+    checkpoint_on_straggler: bool = False
+    metrics_path: str | None = None      # jsonl sink
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: int
+
+
+class _Preemption:
+    """Latch SIGTERM/SIGINT; never aborts an in-flight step."""
+
+    def __init__(self):
+        self.flagged = False
+        self._orig: dict[int, Any] = {}
+
+    def install(self):
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                self._orig[sig] = signal.signal(sig, self._handler)
+            except ValueError:          # non-main thread (tests)
+                pass
+        return self
+
+    def _handler(self, signum, frame):
+        self.flagged = True
+
+    def uninstall(self):
+        for sig, h in self._orig.items():
+            signal.signal(sig, h)
+
+
+class TrainLoop:
+    def __init__(self, model_cfg: ModelConfig, mesh,
+                 opt_cfg: OptimizerConfig | None = None,
+                 loop_cfg: TrainLoopConfig | None = None,
+                 data_cfg: DataConfig | None = None):
+        self.model_cfg = model_cfg
+        self.mesh = mesh
+        self.opt_cfg = opt_cfg or OptimizerConfig()
+        self.loop_cfg = loop_cfg or TrainLoopConfig()
+        self.data_cfg = data_cfg or DataConfig(vocab=model_cfg.vocab)
+        self.model = build_model(model_cfg)
+        self.pipeline = make_pipeline(self.data_cfg)
+        self._events: list[dict] = []        # watchdog / lifecycle events
+
+    # -------------------------------------------------------------- #
+    def _shardings(self, abstract_params, opt_abs):
+        if self.model.axes is None:
+            jax.eval_shape(self.model.init, jax.random.key(0))
+        p_sh = shd.param_shardings(abstract_params, self.model.axes,
+                                   self.mesh)
+        rep = shd.replicated(self.mesh)
+        o_sh = {"step": rep,
+                "m": jax.tree.map(lambda _, s: s, opt_abs["m"], p_sh),
+                "v": jax.tree.map(lambda _, s: s, opt_abs["v"], p_sh),
+                "master": jax.tree.map(lambda _, s: s, opt_abs["master"],
+                                       p_sh)}
+        if "ef" in opt_abs:
+            o_sh["ef"] = jax.tree.map(lambda _, s: s, opt_abs["ef"], p_sh)
+        return p_sh, o_sh
+
+    def init_state(self) -> TrainState:
+        with shd.use_mesh(self.mesh):
+            abstract_params = self.model.abstract_params()
+            opt_abs = jax.eval_shape(
+                lambda p: init_opt_state(self.opt_cfg, p), abstract_params)
+            p_sh, o_sh = self._shardings(abstract_params, opt_abs)
+            params = jax.jit(self.model.init, out_shardings=p_sh)(
+                jax.random.key(self.data_cfg.seed))
+            opt_state = jax.jit(
+                lambda p: init_opt_state(self.opt_cfg, p),
+                out_shardings=o_sh)(params)
+        return TrainState(params, opt_state, 0)
+
+    # -------------------------------------------------------------- #
+    def _resume(self, state: TrainState) -> TrainState:
+        last = ckpt.latest_step(self.loop_cfg.ckpt_dir)
+        if last is None or not self.loop_cfg.auto_resume:
+            return state
+        abstract = jax.eval_shape(lambda t: t,
+                                  {"params": state.params,
+                                   "opt": state.opt_state})
+        shards = {"params": jax.tree.map(lambda x: x.sharding, state.params),
+                  "opt": jax.tree.map(lambda x: x.sharding, state.opt_state)}
+        tree, extra = ckpt.restore(self.loop_cfg.ckpt_dir, abstract,
+                                   shardings=shards)
+        self._events.append({"event": "resumed", "step": extra["step"]})
+        return TrainState(tree["params"], tree["opt"], int(extra["step"]))
+
+    def _save(self, state: TrainState) -> None:
+        ckpt.save(self.loop_cfg.ckpt_dir, state.step,
+                  {"params": state.params, "opt": state.opt_state},
+                  extra={"step": state.step,
+                         "model": self.model_cfg.name,
+                         "data_seed": self.data_cfg.seed},
+                  keep=self.loop_cfg.ckpt_keep)
+
+    # -------------------------------------------------------------- #
+    def run(self, state: TrainState | None = None,
+            on_metrics: Callable[[int, dict], None] | None = None
+            ) -> TrainState:
+        from ..launch.steps import make_train_step   # (avoids import cycle)
+        lc = self.loop_cfg
+        state = state or self.init_state()
+        state = self._resume(state)
+        step_fn = make_train_step(self.model, self.opt_cfg, lc.microbatches)
+        preempt = _Preemption().install()
+        metrics_file = (open(lc.metrics_path, "a")
+                        if lc.metrics_path else None)
+        step_times: list[float] = []
+        try:
+            with shd.use_mesh(self.mesh):
+                jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+                batch_sh = None
+                metrics = {}
+                while state.step < lc.total_steps:
+                    t0 = time.perf_counter()
+                    np_batch = self.pipeline.batch_at(state.step)
+                    if batch_sh is None:
+                        batch_sh = {
+                            k: jax.NamedSharding(
+                                self.mesh,
+                                shd.batch_spec(v.shape, self.mesh))
+                            for k, v in np_batch.items()}
+                    batch = {k: jax.device_put(v, batch_sh[k])
+                             for k, v in np_batch.items()}
+                    params, opt_state, metrics = jit_step(
+                        state.params, state.opt_state, batch)
+                    state = TrainState(params, opt_state, state.step + 1)
+
+                    if state.step % lc.log_every == 0 or \
+                            state.step == lc.total_steps:
+                        host = {k: float(np.asarray(v))
+                                for k, v in metrics.items()}
+                        dt = time.perf_counter() - t0
+                        host["step_time_s"] = dt
+                        host["tokens_per_s"] = (
+                            self.data_cfg.global_batch
+                            * self.data_cfg.seq_len / max(dt, 1e-9))
+                        if on_metrics:
+                            on_metrics(state.step, host)
+                        if metrics_file:
+                            metrics_file.write(json.dumps(
+                                {"step": state.step, **host}) + "\n")
+                            metrics_file.flush()
+
+                    # straggler watchdog (robust median of recent steps)
+                    dt = time.perf_counter() - t0
+                    step_times.append(dt)
+                    if len(step_times) >= 8:
+                        med = float(np.median(step_times[-32:]))
+                        if dt > lc.watchdog_factor * med:
+                            self._events.append({
+                                "event": "straggler", "step": state.step,
+                                "step_time_s": dt, "median_s": med})
+                            if lc.checkpoint_on_straggler:
+                                self._save(state)
+
+                    if state.step % lc.ckpt_every == 0:
+                        self._save(state)
+                    if preempt.flagged:
+                        self._events.append({"event": "preempted",
+                                             "step": state.step})
+                        self._save(state)
+                        break
+                # final checkpoint so a completed run is always resumable
+                self._save(state)
+        finally:
+            preempt.uninstall()
+            if metrics_file:
+                metrics_file.close()
+        return state
+
+    @property
+    def events(self) -> list[dict]:
+        return list(self._events)
+
+
+def train_shape_cell(model_cfg: ModelConfig, shape_name: str, mesh,
+                     **loop_kwargs) -> TrainLoop:
+    """Loop wired to one assigned shape cell (launchers use this)."""
+    cell = SHAPES[shape_name]
+    data_cfg = DataConfig(vocab=model_cfg.vocab, seq_len=cell["seq_len"],
+                          global_batch=cell["global_batch"])
+    return TrainLoop(model_cfg, mesh,
+                     loop_cfg=TrainLoopConfig(**loop_kwargs),
+                     data_cfg=data_cfg)

@@ -1,0 +1,5 @@
+import sys
+from pathlib import Path
+
+# make `import sweeps` work from any pytest rootdir
+sys.path.insert(0, str(Path(__file__).resolve().parent))

@@ -1,0 +1,55 @@
+"""Property-style sweep harness (hypothesis is not installable offline).
+
+``sweep(n)(f)`` runs ``f(rng)`` for ``n`` independent seeded RNGs; on the
+first failure it re-raises with the failing seed in the message so the case
+is reproducible with ``rng = random.Random(seed)``.  ``f`` generates its own
+random case from the rng — same generate-check loop as a property test,
+minus shrinking.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+
+BASE_SEED = 20230701
+
+
+def sweep(n: int = 50, base_seed: int = BASE_SEED):
+    def deco(f):
+        # NOTE: no functools.wraps — pytest must not see ``rng`` in the
+        # wrapper's signature (it would look like a fixture).
+        def wrapper():
+            for i in range(n):
+                seed = base_seed + i
+                try:
+                    f(random.Random(seed))
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"[sweep seed={seed} case={i}/{n}] {e}") from e
+        wrapper.__name__ = f.__name__
+        wrapper.__doc__ = f.__doc__
+        return wrapper
+    return deco
+
+
+def random_subspace(rng: random.Random, max_params: int = 5,
+                    max_vals: int = 6, constrained: bool = True):
+    """A random small SearchSpace (optionally with a random constraint)."""
+    from repro.core.space import Constraint, Param, SearchSpace
+
+    n_params = rng.randint(1, max_params)
+    params = []
+    for i in range(n_params):
+        k = rng.randint(2, max_vals)
+        vals = rng.sample(range(1, 64), k)
+        params.append(Param(f"p{i}", tuple(vals)))
+    constraints = []
+    if constrained and n_params >= 2 and rng.random() < 0.7:
+        a, b = rng.sample(range(n_params), 2)
+
+        def fn(cfg, a=a, b=b):
+            return (cfg[f"p{a}"] + cfg[f"p{b}"]) % 2 == 0
+
+        constraints.append(Constraint("parity", fn))
+    return SearchSpace(params, constraints, name="rand")

@@ -1,0 +1,211 @@
+"""Analysis-layer tests: the five paper characteristics on landscapes with
+known ground truth."""
+
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.analysis.centrality import (build_ffg, pagerank,
+                                            proportion_of_centrality)
+from repro.core.analysis.convergence import (evals_to_reach, median_curve,
+                                             random_search_curves)
+from repro.core.analysis.distribution import (distribution_profile,
+                                              relative_performance,
+                                              speedup_over_median,
+                                              top_cluster_fraction)
+from repro.core.analysis.importance import (feature_importance,
+                                            important_params, reduced_space)
+from repro.core.analysis.portability import portability_matrix
+from repro.core.analysis.spacestats import space_stats
+from repro.core.mlmodel import (GradientBoostedTrees, permutation_importance,
+                                r2_score)
+from repro.core.problem import FunctionProblem
+from repro.core.results import ResultTable
+from repro.core.space import Param, SearchSpace
+
+
+def _table(space, fn, arch="v5e", protocol="exhaustive"):
+    prob = FunctionProblem(space, fn)
+    trials = prob.exhaustive(arch)
+    return ResultTable.from_trials(prob, arch, trials, protocol)
+
+
+def _grid_space(n=2, k=8):
+    return SearchSpace([Param(f"p{i}", tuple(range(k))) for i in range(n)])
+
+
+# ------------------------------------------------------------------ #
+# distribution / speedup (Fig 1, Fig 4)
+# ------------------------------------------------------------------ #
+def test_relative_performance_and_speedup():
+    space = _grid_space(1, 10)
+    table = _table(space, lambda c, a: float(c["p0"] + 1))   # 1..10 seconds
+    rel = relative_performance(table)
+    assert rel.max() == pytest.approx(1.0)                   # best == 1
+    assert rel.min() == pytest.approx(0.1)
+    # median runtime 5.5s, best 1s -> 5.5x speedup over median
+    assert speedup_over_median(table) == pytest.approx(5.5)
+
+
+def test_distribution_profile_monotone():
+    space = _grid_space(2, 12)
+    table = _table(space, lambda c, a: 1.0 + c["p0"] * 0.3 + c["p1"] ** 1.7)
+    prof = distribution_profile(table, quantiles=np.linspace(0, 1, 21))
+    assert len(prof["quantiles"]) == 21 and prof["n"] == 144
+    perf = np.array(prof["rel_perf"])
+    assert np.all(np.diff(perf) >= -1e-12)                   # quantile curve
+    # median-normalized curve crosses 1.0 at the median quantile
+    mid = np.array(prof["rel_to_median"])[10]
+    assert mid == pytest.approx(1.0, rel=0.05)
+
+
+def test_top_cluster_fraction_detects_hotspot_shape():
+    """A landscape with a big near-optimal cluster (Hotspot's signature) has
+    a much larger top-cluster fraction than a needle-in-haystack one."""
+    space = _grid_space(2, 16)                               # 256 configs
+
+    def clustered(c, a):          # ~25% of configs are within 10% of best
+        return 1.0 if (c["p0"] < 8 and c["p1"] < 8) else 12.0
+
+    def needle(c, a):
+        return 1.0 if (c["p0"] == 3 and c["p1"] == 7) else 12.0
+
+    f_clu = top_cluster_fraction(_table(space, clustered), within=0.10)
+    f_ndl = top_cluster_fraction(_table(space, needle), within=0.10)
+    assert f_clu > 0.2 and f_ndl < 0.01
+
+
+# ------------------------------------------------------------------ #
+# convergence (Fig 2)
+# ------------------------------------------------------------------ #
+def test_random_search_convergence_properties():
+    space = _grid_space(2, 16)
+    table = _table(space, lambda c, a: 1.0 + abs(c["p0"] - 7) + abs(c["p1"] - 3))
+    curves = random_search_curves(table, budget=100, repeats=30, seed=1)
+    assert curves.shape == (30, 100)
+    med = median_curve(table, budget=256, repeats=30, seed=1)
+    assert np.all(np.diff(med) >= -1e-12)                    # monotone up
+    assert med[-1] == pytest.approx(1.0)    # exhausted w/o replacement
+    # clustered landscapes converge faster than needles (paper C2)
+    t_clu = _table(space, lambda c, a: 1.0 if c["p0"] < 8 else 10.0)
+    t_ndl = _table(space, lambda c, a: 1.0 if (c["p0"], c["p1"]) == (3, 7)
+                   else 10.0)
+    m_clu = median_curve(t_clu, budget=60, repeats=30, seed=2)
+    m_ndl = median_curve(t_ndl, budget=60, repeats=30, seed=2)
+    e_clu, e_ndl = evals_to_reach(m_clu, 0.9), evals_to_reach(m_ndl, 0.9)
+    assert e_clu != -1 and (e_ndl == -1 or e_clu < e_ndl)
+
+
+# ------------------------------------------------------------------ #
+# centrality (Fig 3)
+# ------------------------------------------------------------------ #
+def test_ffg_structure_on_known_landscape():
+    """1-D monotone landscape: every node flows toward the single minimum;
+    the minimum holds all the 'good minima' mass -> proportion == 1."""
+    space = _grid_space(1, 10)
+    table = _table(space, lambda c, a: float(c["p0"] + 1))
+    ffg = build_ffg(space, table)
+    assert ffg.n == 10
+    assert ffg.minima.sum() == 1                            # unique minimum
+    pr = pagerank(ffg)
+    assert pr.sum() == pytest.approx(1.0, abs=1e-6)
+    poc = proportion_of_centrality(space, table, p=0.05)
+    assert poc == pytest.approx(1.0)
+
+
+def test_centrality_separates_easy_from_deceptive():
+    """A global optimum hidden behind a fitness wall gets little random-walk
+    mass (hard for local search); a smooth unimodal landscape scores 1."""
+    space = _grid_space(2, 11)
+
+    def easy(c, a):
+        return 1.0 + 0.1 * (abs(c["p0"] - 5) + abs(c["p1"] - 5))
+
+    def deceptive(c, a):
+        x, y = c["p0"], c["p1"]
+        if (x, y) == (5, 5):
+            return 0.5                          # global min, walled off
+        if x == 5 or y == 5:
+            return 3.0                          # the wall
+        return 1.0 + 0.01 * (x + y)             # wide basin -> (0,0) @ 1.0
+
+    poc_easy = proportion_of_centrality(space, _table(space, easy), p=0.05)
+    poc_dec = proportion_of_centrality(space, _table(space, deceptive), p=0.05)
+    assert poc_easy == pytest.approx(1.0)
+    assert poc_dec < 0.5 * poc_easy
+
+
+# ------------------------------------------------------------------ #
+# PFI / surrogate (Fig 6, Table VIII reduction)
+# ------------------------------------------------------------------ #
+def test_gbdt_fits_and_pfi_finds_important_feature():
+    rng = np.random.default_rng(0)
+    X = rng.integers(0, 8, size=(600, 4))
+    y = 3.0 * X[:, 1] + 0.3 * X[:, 3] + rng.normal(0, 0.05, 600)
+    model = GradientBoostedTrees(n_trees=80, max_depth=4, seed=0).fit(X, y)
+    assert r2_score(y, model.predict(X)) > 0.97
+    pfi = permutation_importance(model, X, y, n_repeats=3, seed=0)
+    assert pfi[1] == max(pfi)
+    assert pfi[1] > 5 * max(pfi[0], pfi[2])
+
+
+def test_feature_importance_pipeline_and_reduction():
+    space = SearchSpace([Param("big", tuple(range(8))),
+                         Param("tiny", tuple(range(8))),
+                         Param("dead", tuple(range(4)))])
+
+    def fn(c, a):
+        # 'big' dominates; 'big'×'tiny' interaction; 'dead' is irrelevant
+        return math.exp(0.5 * c["big"] + 0.08 * c["big"] * (c["tiny"] > 4))
+
+    table = _table(space, fn)
+    imp = feature_importance(table, seed=0)
+    by_name = dict(zip(imp["params"], imp["pfi"]))
+    assert imp["r2"] > 0.95
+    assert by_name["big"] > 10 * max(by_name["dead"], 1e-9)
+    keep = important_params({"v5e": imp}, threshold=0.05)
+    assert "big" in keep and "dead" not in keep
+    best_cfg = space.decode(table.best()[0])
+    red = reduced_space(space, {"v5e": imp}, best_cfg, threshold=0.05)
+    assert red.cardinality < space.cardinality
+
+
+# ------------------------------------------------------------------ #
+# portability (Fig 5)
+# ------------------------------------------------------------------ #
+def test_portability_matrix_properties():
+    space = _grid_space(2, 8)
+
+    def make(shift):
+        return _table(space, lambda c, a: 1.0 + (c["p0"] - shift) ** 2
+                      + 0.5 * (c["p1"] - shift) ** 2)
+
+    tables = {"v5e": make(2), "v5p": make(2), "v4": make(6)}
+    m = portability_matrix(tables)
+    mat = np.array(m["matrix"])
+    names = m["archs"]
+    # diagonal is exactly 1 (own optimum), all entries in (0, 1]
+    assert np.allclose(np.diag(mat), 1.0)
+    assert (mat > 0).all() and (mat <= 1.0 + 1e-9).all()
+    # same-optimum archs transfer perfectly; shifted arch does not
+    i5e, i5p, i4 = (names.index(a) for a in ("v5e", "v5p", "v4"))
+    assert mat[i5e][i5p] == pytest.approx(1.0)
+    assert mat[i5e][i4] < 0.9
+
+
+# ------------------------------------------------------------------ #
+# Table VIII accounting
+# ------------------------------------------------------------------ #
+def test_space_stats_counts():
+    space = SearchSpace(
+        [Param("a", (1, 2, 3, 4)), Param("b", (1, 2))],
+        [__import__("repro.core.space", fromlist=["Constraint"]).Constraint(
+            "even", lambda c: (c["a"] + c["b"]) % 2 == 0)])
+
+    prob = FunctionProblem(space, lambda c, a: float(c["a"]))
+    st = space_stats(prob, archs=("v5e",))
+    assert st["cardinality"] == 8
+    assert st["constrained"] == 4
+    assert st["valid"]["v5e"] == 4

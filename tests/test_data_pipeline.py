@@ -1,0 +1,66 @@
+"""Data pipeline fault-tolerance contract: deterministic addressing, host
+sharding, resumability, learnable structure."""
+
+import numpy as np
+
+from repro.data import DataConfig, make_pipeline
+
+
+def _cfg(**kw):
+    base = dict(vocab=256, seq_len=64, global_batch=8, seed=13)
+    base.update(kw)
+    return DataConfig(**base)
+
+
+def test_deterministic_and_resumable():
+    p1 = make_pipeline(_cfg())
+    p2 = make_pipeline(_cfg())                  # fresh process, same seed
+    for step in (0, 5, 1000):
+        b1, b2 = p1.batch_at(step), p2.batch_at(step)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        np.testing.assert_array_equal(b1["labels"], b2["labels"])
+    # different steps produce different data
+    assert not np.array_equal(p1.batch_at(0)["tokens"],
+                              p1.batch_at(1)["tokens"])
+
+
+def test_host_sharding_consistency():
+    """Concatenating two hosts' slices == the single-host global batch —
+    the elastic-restart invariant (restarting on a different host grid
+    replays the same global batch)."""
+    full = make_pipeline(_cfg()).batch_at(7)
+    h0 = make_pipeline(_cfg(), host_id=0, n_hosts=2).batch_at(7)
+    h1 = make_pipeline(_cfg(), host_id=1, n_hosts=2).batch_at(7)
+    np.testing.assert_array_equal(
+        full["tokens"], np.concatenate([h0["tokens"], h1["tokens"]]))
+    q0 = make_pipeline(_cfg(), host_id=0, n_hosts=4).batch_at(7)
+    np.testing.assert_array_equal(full["tokens"][:2], q0["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    b = make_pipeline(_cfg()).batch_at(3)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+    assert (b["labels"][:, -1] == -1).all()
+
+
+def test_tokens_in_vocab_and_shapes():
+    cfg = _cfg(vocab=100, seq_len=32, global_batch=4)
+    b = make_pipeline(cfg).batch_at(0)
+    assert b["tokens"].shape == (4, 32)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 100
+
+
+def test_markov_structure_is_learnable():
+    """The source must be low-entropy relative to uniform — otherwise the
+    train examples can't show learning."""
+    cfg = _cfg(vocab=512, branching=16)
+    p = make_pipeline(cfg)
+    floor = p.entropy_floor()
+    assert floor < 0.75 * np.log(cfg.vocab)     # well below uniform entropy
+    assert floor > 0.0
+
+
+def test_bad_host_split_rejected():
+    import pytest
+    with pytest.raises(ValueError):
+        make_pipeline(_cfg(global_batch=5), host_id=0, n_hosts=2)

@@ -1,0 +1,143 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracle, swept
+over sampled configs from each kernel's own search space + shape variants.
+
+interpret mode executes the kernel body on CPU — the same BlockSpec/grid
+program that runs on TPU — so this validates indexing, accumulation and
+masking logic for every tunable parameter combination sampled.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.attention.space import AttentionProblem
+from repro.kernels.conv2d.space import Conv2dProblem
+from repro.kernels.dedisp.space import DedispProblem
+from repro.kernels.expdist.space import ExpdistProblem
+from repro.kernels.hotspot.space import HotspotProblem
+from repro.kernels.matmul.space import GemmProblem
+from repro.kernels.nbody.space import NbodyProblem
+from repro.kernels.pnpoly.space import PnpolyProblem
+
+PROBLEMS = {
+    "gemm": GemmProblem,
+    "conv2d": Conv2dProblem,
+    "nbody": NbodyProblem,
+    "hotspot": HotspotProblem,
+    "pnpoly": PnpolyProblem,
+    "expdist": ExpdistProblem,
+    "dedisp": DedispProblem,
+    "attention": AttentionProblem,
+}
+
+N_CONFIGS = 4          # sampled tunable configs per kernel
+
+#: relative-L2 tolerance: (full-precision configs, low-precision configs).
+#: bf16 accumulate/compute configs lose ~8 mantissa bits; the oracle runs in
+#: f32, so the config-dependent budget is part of the contract under test.
+TOLS = {
+    "gemm": (5e-3, 2e-2),
+    "conv2d": (5e-3, 3e-2),
+    "nbody": (1e-3, 8e-2),      # 1/r^3 amplifies bf16 rounding near pairs
+    "hotspot": (5e-3, 3e-2),
+    "pnpoly": (0.0, 0.0),       # integer output: exact
+    "expdist": (1e-3, 2e-2),
+    "dedisp": (1e-3, 2e-2),
+    "attention": (5e-3, 2e-2),
+}
+
+
+def _is_lowprec(config) -> bool:
+    return any(v == "bf16" for v in config.values())
+
+
+def _check(name, prob, config, key):
+    inputs = prob.make_inputs(key, small=True)
+    want = prob.run_reference(config, inputs)
+    got = prob.run_kernel(config, inputs, interpret=True)
+    w = np.asarray(want, dtype=np.float64)
+    g = np.asarray(got, dtype=np.float64)
+    assert g.shape == w.shape, (g.shape, w.shape)
+    tol = TOLS[name][1 if _is_lowprec(config) else 0]
+    err = np.linalg.norm(g - w) / max(np.linalg.norm(w), 1e-12)
+    assert err <= tol + 1e-12, f"{name} {config}: rel_l2={err:.4g}"
+
+
+@pytest.mark.parametrize("name", list(PROBLEMS))
+def test_kernel_matches_oracle_across_configs(name):
+    prob = PROBLEMS[name]()
+    cfgs = prob.space.sample_distinct(N_CONFIGS, seed=42)
+    # always include the deployment default where it is valid
+    for i, cfg in enumerate(cfgs):
+        _check(name, prob, cfg, jax.random.key(100 + i))
+
+
+@pytest.mark.parametrize("name", ["gemm", "attention", "conv2d"])
+def test_kernel_dtype_sweep(name):
+    """Shape/dtype sweep for the LM-stack kernels (deliverable c)."""
+    prob = PROBLEMS[name]()
+    cfg = prob.space.sample_distinct(1, seed=7)[0]
+    for i, dtype in enumerate((jnp.float32, jnp.bfloat16)):
+        prob.dtype = dtype
+        _check(name, prob, cfg, jax.random.key(i))
+
+
+def test_gemm_shape_sweep():
+    prob = GemmProblem()
+    cfg = {"block_m": 64, "block_n": 128, "block_k": 128, "unroll_k": 1,
+           "grid_order": "mn", "split_k": 1, "acc_dtype": "f32",
+           "rhs_layout": "kn"}
+    for m, n, k in ((128, 128, 128), (256, 128, 512), (128, 256, 256)):
+        a = jax.random.normal(jax.random.key(0), (m, k), jnp.bfloat16)
+        b = jax.random.normal(jax.random.key(1), (k, n), jnp.bfloat16)
+        c = jax.random.normal(jax.random.key(2), (m, n), jnp.bfloat16)
+        from repro.kernels.matmul.kernel import gemm
+        from repro.kernels.matmul.ref import gemm_reference
+        got = gemm(a, b, c, alpha=1.0, beta=1.0, interpret=True, **cfg)
+        want = gemm_reference(a, b, c, 1.0, 1.0)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+
+def test_attention_causal_and_full():
+    prob = AttentionProblem()
+    cfg = {"block_q": 64, "block_kv": 128}
+    from repro.kernels.attention.kernel import flash_attention
+    from repro.kernels.attention.ref import mha_reference
+    q = jax.random.normal(jax.random.key(0), (4, 128, 64), jnp.float32)
+    k = jax.random.normal(jax.random.key(1), (2, 256, 64), jnp.float32)
+    v = jax.random.normal(jax.random.key(2), (2, 256, 64), jnp.float32)
+    for causal in (False, True):
+        got = flash_attention(q, k, v, causal=causal, interpret=True, **cfg)
+        want = mha_reference(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_ops_dispatch_uses_reference_on_cpu():
+    """ops wrappers fall back to the XLA reference on non-TPU backends."""
+    from repro.kernels.matmul.ops import gemm as gemm_op
+    from repro.kernels.matmul.ref import gemm_reference
+    a = jax.random.normal(jax.random.key(0), (64, 64), jnp.float32)
+    b = jax.random.normal(jax.random.key(1), (64, 64), jnp.float32)
+    c = jnp.zeros((64, 64), jnp.float32)
+    np.testing.assert_allclose(np.asarray(gemm_op(a, b, c)),
+                               np.asarray(gemm_reference(a, b, c, 1.0, 1.0)),
+                               rtol=1e-5)
+
+
+def test_invalid_configs_evaluate_to_inf():
+    """Constraint-violating configs are invalid trials (the suite's analogue
+    of a CUDA compile failure), never exceptions."""
+    import math
+    prob = GemmProblem()
+    cfg = dict(prob.space.sample_distinct(1, seed=0)[0])
+    cfg["block_m"] = 512
+    cfg["block_k"] = 1024
+    cfg["acc_dtype"] = "f32"
+    cfg["block_n"] = 512
+    t = prob.evaluate(cfg)          # VMEM constraint must trip
+    if not prob.space.satisfies(cfg):
+        assert not t.valid and math.isinf(t.objective)

@@ -1,0 +1,115 @@
+"""Sharding-rule unit tests (single device: rules are pure functions of
+shapes + mesh topology, so they are fully testable without 256 chips)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+
+
+def _fake_mesh(shape, axes):
+    """Mesh over *abstract* devices — spec_for/batch_spec only read the
+    topology, so single-host construction suffices via mock device arrays."""
+    n = int(np.prod(shape))
+    devs = np.array([jax.devices("cpu")[0]] * n, dtype=object).reshape(shape)
+    return Mesh(devs, axes)
+
+
+MESH = _fake_mesh((16, 16), ("data", "model"))
+MESH3 = _fake_mesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_spec_for_prefers_model_axes_in_order():
+    # vocab beats heads for the model axis
+    spec = shd.spec_for((151_936, 4096), ("vocab", "embed"), MESH)
+    assert spec == P("model", "data")
+    # heads divisible: model on heads; data falls to embed
+    spec = shd.spec_for((4096, 32, 128), ("embed", "heads", "head_dim"), MESH)
+    assert spec == P("data", "model", None)
+
+
+def test_spec_for_divisibility_fallback():
+    """56 heads don't divide model=16 -> TP falls through to head_dim."""
+    spec = shd.spec_for((7168, 56, 128), ("embed", "heads", "head_dim"), MESH)
+    assert spec == P("data", None, "model")
+    # 8 kv heads don't divide 16 either
+    spec = shd.spec_for((4096, 8, 128), ("embed", "kv_heads", "head_dim"),
+                        MESH)
+    assert spec == P("data", None, "model")
+
+
+def test_spec_for_expert_sharding():
+    spec = shd.spec_for((160, 5120, 1536), ("expert", "embed", "ff"), MESH)
+    assert spec == P("model", "data", None)
+
+
+def test_batch_spec_full_data_parallel():
+    assert shd.batch_spec((256, 4096), MESH) == P("data", None)
+    assert shd.batch_spec((256, 4096), MESH3) == P(("pod", "data"), None)
+
+
+def test_batch_spec_sequence_fallback_long_context():
+    """batch=1 (long_500k): the sequence axis takes the data shard."""
+    spec = shd.batch_spec((1, 524_288), MESH)
+    assert spec == P(None, "data")
+    spec3 = shd.batch_spec((1, 524_288), MESH3)
+    assert spec3 == P(None, ("pod", "data"))
+
+
+def test_batch_spec_pod_spillover():
+    """batch divisible by data but not pod*data: sequence takes the pod."""
+    spec = shd.batch_spec((16, 4096), MESH3)
+    assert spec[0] == "data" and spec[1] == "pod"
+
+
+def test_param_shardings_tree_alignment():
+    from repro.configs import ARCHS, reduce_config
+    from repro.models import build_model
+    cfg = reduce_config(ARCHS["qwen3-8b"])
+    model = build_model(cfg)
+    abstract = model.abstract_params()
+    if model.axes is None:
+        jax.eval_shape(model.init, jax.random.key(0))
+    sh = shd.param_shardings(abstract, model.axes, MESH)
+    flat_p = jax.tree.leaves(abstract)
+    flat_s = jax.tree.leaves(
+        sh, is_leaf=lambda v: isinstance(v, jax.sharding.NamedSharding))
+    assert len(flat_p) == len(flat_s)
+    for p, s in zip(flat_p, flat_s):
+        # every sharded dim must divide evenly
+        spec = tuple(s.spec) + (None,) * (len(p.shape) - len(tuple(s.spec)))
+        sizes = dict(zip(MESH.axis_names, MESH.devices.shape))
+        for dim, name in enumerate(spec):
+            if name is None:
+                continue
+            names = name if isinstance(name, tuple) else (name,)
+            k = int(np.prod([sizes[n] for n in names]))
+            assert p.shape[dim] % k == 0, (p.shape, spec)
+
+
+def test_constrain_is_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    y = shd.constrain(x, "data", None)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_cache_shardings_decode_cell():
+    """decode_32k: batch 128 -> (pod,data) infeasible (128 % 256 != 0 on the
+    flat axis? it is 128 % 16 == 0 for data) ... the rule must place data on
+    batch when divisible and model on kv-head-like dims."""
+    cache = {"k": jax.ShapeDtypeStruct((128, 32_768, 8, 128), jnp.bfloat16)}
+    sh = shd.cache_shardings(cache, MESH, n_kv_heads=8, batch=128)
+    spec = tuple(sh["k"].spec)
+    assert spec[0] == "data"
+    # one of the trailing dims may carry "model"; all shards must divide
+    sizes = dict(zip(MESH.axis_names, MESH.devices.shape))
+    shape = (128, 32_768, 8, 128)
+    for dim, name in enumerate(spec):
+        if name is None:
+            continue
+        names = name if isinstance(name, tuple) else (name,)
+        k = int(np.prod([sizes[n] for n in names]))
+        assert shape[dim] % k == 0

@@ -1,0 +1,111 @@
+"""SearchSpace invariants: encode/decode bijection, enumeration == counted
+sampling support, neighborhood validity, reduction semantics."""
+
+import math
+import random
+
+import pytest
+
+from repro.core.space import (Constraint, Param, SearchSpace, divisors,
+                              powers_of_two)
+from sweeps import random_subspace, sweep
+
+
+def _toy():
+    return SearchSpace(
+        [Param("a", (1, 2, 4)), Param("b", (8, 16)), Param("c", (0, 1))],
+        [Constraint("a_le_b", lambda c: c["a"] <= c["b"])],
+        name="toy")
+
+
+def test_cardinality_and_constraints():
+    s = _toy()
+    assert s.cardinality == 12
+    assert s.constrained_cardinality() == 12      # a<=b always (4<=8)
+    s2 = SearchSpace(
+        [Param("a", (1, 2, 4)), Param("b", (2, 4))],
+        [Constraint("a_le_b", lambda c: c["a"] <= c["b"])])
+    valid = list(s2.enumerate(constrained=True))
+    assert len(valid) == 5
+    assert all(c["a"] <= c["b"] for c in valid)
+
+
+@sweep(40)
+def test_flat_index_bijection(rng):
+    s = random_subspace(rng, constrained=False)
+    total = s.cardinality
+    idxs = rng.sample(range(total), min(total, 25))
+    for i in idxs:
+        cfg = s.from_flat_index(i)
+        assert s.flat_index(cfg) == i
+        enc = s.encode(cfg)
+        assert s.decode(enc) == cfg
+
+
+@sweep(40)
+def test_sampling_respects_constraints(rng):
+    s = random_subspace(rng)
+    try:
+        cfgs = s.sample_batch(20, seed=rng.randint(0, 10**6))
+    except RuntimeError:
+        return                       # over-constrained random space: fine
+    for c in cfgs:
+        assert s.satisfies(c), c
+
+
+@sweep(30)
+def test_neighbors_are_hamming1_and_valid(rng):
+    s = random_subspace(rng)
+    try:
+        cfg = s.sample(random.Random(rng.randint(0, 10**6)))
+    except RuntimeError:
+        return
+    for nb in s.neighbors(cfg):
+        assert s.satisfies(nb)
+        diff = [k for k in cfg if cfg[k] != nb[k]]
+        assert len(diff) == 1
+
+
+def test_sample_distinct_unique():
+    s = _toy()
+    cfgs = s.sample_distinct(12, seed=3)
+    keys = {s.flat_index(c) for c in cfgs}
+    assert len(keys) == len(cfgs) == 12            # full space reachable
+
+
+def test_reduce_freezes_and_rewraps_constraints():
+    s2 = SearchSpace(
+        [Param("a", (1, 2, 4)), Param("b", (2, 4)), Param("c", (0, 1))],
+        [Constraint("a_le_b", lambda c: c["a"] <= c["b"])])
+    r = s2.reduce(["a"], frozen={"b": 2})
+    vals = [c["a"] for c in r.enumerate()]
+    assert vals == [1, 2]                          # a=4 violates vs frozen b=2
+
+
+def test_duplicate_params_rejected():
+    with pytest.raises(ValueError):
+        SearchSpace([Param("a", (1,)), Param("a", (2,))])
+    with pytest.raises(ValueError):
+        Param("x", (1, 1))
+
+
+def test_helpers():
+    assert powers_of_two(16, 128) == (16, 32, 64, 128)
+    assert divisors(12) == (1, 2, 3, 4, 6, 12)
+
+
+def test_bat_space_sizes():
+    """Table VIII check for our BAT-TPU kernels: cardinalities are in the
+    'interesting' regime (>> PolyBench's 725) and constraints bite."""
+    from repro.kernels.matmul.space import GemmProblem
+    from repro.kernels.conv2d.space import Conv2dProblem
+    from repro.kernels.nbody.space import NbodyProblem
+    from repro.kernels.pnpoly.space import PnpolyProblem
+
+    for prob, lo in ((GemmProblem(), 1000), (Conv2dProblem(), 1000),
+                     (NbodyProblem(), 500), (PnpolyProblem(), 500)):
+        assert prob.space.cardinality >= lo
+        # at least one constraint is active (valid < cardinality) or the
+        # space is constraint-free by design
+        n_valid = prob.space.constrained_cardinality(limit=50_000)
+        assert 0 < n_valid <= min(prob.space.cardinality, 50_000)

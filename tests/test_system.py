@@ -1,0 +1,129 @@
+"""End-to-end behaviour of the paper's system: the full BAT loop —
+problem -> tuners -> results DB -> the five analyses — on real suite
+kernels (cost-model objective, small protocols) plus the C1..C7 claim
+*mechanisms* at test scale."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.analysis.centrality import proportion_of_centrality
+from repro.core.analysis.convergence import evals_to_reach, median_curve
+from repro.core.analysis.distribution import (relative_performance,
+                                              speedup_over_median)
+from repro.core.analysis.importance import feature_importance
+from repro.core.analysis.portability import portability_matrix
+from repro.core.costmodel import ARCH_NAMES
+from repro.core.results import ResultsDB, ResultTable
+from repro.core.tuners import TUNERS, run_tuner
+from repro.kernels.matmul.space import GemmProblem
+from repro.kernels.nbody.space import NbodyProblem
+
+
+@pytest.fixture(scope="module")
+def gemm_tables(tmp_path_factory):
+    """Sampled GEMM tables on all four TPU generations (module-cached)."""
+    db = ResultsDB(tmp_path_factory.mktemp("db"))
+    prob = GemmProblem()
+    return prob, {a: db.get_or_compute(prob, a, protocol="sampled", n=600)
+                  for a in ARCH_NAMES}
+
+
+def test_every_tuner_tunes_a_real_kernel(gemm_tables):
+    """The interoperability claim: all eight tuners drive the same problem
+    through the same interface, unmodified."""
+    prob, _ = gemm_tables
+    results = {}
+    for name, cls in TUNERS.items():
+        res = run_tuner(cls(prob.space, seed=3), prob, budget=30)
+        assert res.best.ok, name
+        results[name] = res.best.objective
+    best = min(results.values())
+    assert best < math.inf
+    # every tuner lands within 20x of the best-found (sanity, not a race)
+    assert all(v < 20 * best for v in results.values()), results
+
+
+def test_results_db_roundtrip_and_cache(gemm_tables, tmp_path):
+    prob, tables = gemm_tables
+    t = tables["v5e"]
+    db2 = ResultsDB(tmp_path)
+    p = db2.put(t)
+    assert p.exists()
+    back = db2.get(t.problem, t.arch, t.protocol)
+    assert back.objectives == t.objectives
+    assert back.param_names == t.param_names
+
+
+def test_landscape_characteristics_on_real_kernel(gemm_tables):
+    """C1/C4-style stats on the GEMM landscape: wide spread, real speedup
+    over the median config, structure stable across generations."""
+    _, tables = gemm_tables
+    speeds = {a: speedup_over_median(t) for a, t in tables.items()}
+    for a, s in speeds.items():
+        assert s > 1.2, (a, s)       # tuning matters on every arch
+    rel = relative_performance(tables["v5e"])
+    assert rel.min() < 0.5           # bad configs are much worse than best
+
+
+def test_convergence_statistic_on_real_kernel(gemm_tables):
+    _, tables = gemm_tables
+    med = median_curve(tables["v5e"], budget=300, repeats=25, seed=0)
+    n90 = evals_to_reach(med, 0.9)
+    assert n90 != -1
+    assert np.all(np.diff(med) >= -1e-12)
+
+
+def test_portability_across_tpu_generations(gemm_tables):
+    """C5 mechanism: transferring optima across generations costs
+    performance; diagonal is 1.0; same-family transfers are cheap.  A 0.0
+    entry is legitimate — the source optimum does not *run* on the target
+    (VMEM overflow == the paper's 'does not compile' case)."""
+    _, tables = gemm_tables
+    m = portability_matrix(tables)
+    mat = np.array(m["matrix"])
+    archs = m["archs"]
+    assert np.allclose(np.diag(mat), 1.0)
+    assert mat.min() < 0.999         # at least one lossy transfer
+    i5e, i5p = archs.index("v5e"), archs.index("v5p")
+    assert mat[i5e][i5p] > 0.8 and mat[i5p][i5e] > 0.8   # same family
+
+
+def test_pfi_on_real_kernel(gemm_tables):
+    """C6 mechanism: surrogate fits the landscape; a few parameters
+    dominate; block shape must matter for GEMM."""
+    _, tables = gemm_tables
+    imp = feature_importance(tables["v5e"], seed=0)
+    assert imp["r2"] > 0.8
+    by_name = dict(zip(imp["params"], imp["pfi"]))
+    blockish = max(by_name["block_m"], by_name["block_n"], by_name["block_k"])
+    assert blockish >= 0.05
+
+
+def test_centrality_on_small_kernel_space():
+    """Fig 3 machinery on a real (small) kernel space end to end."""
+    prob = NbodyProblem()
+    trials = prob.sampled(400, seed=1, arch="v5e")
+    table = ResultTable.from_trials(prob, "v5e", trials, "sampled_400_1")
+    poc = proportion_of_centrality(prob.space, table, p=0.10)
+    assert 0.0 <= poc <= 1.0 and not math.isnan(poc)
+
+
+def test_invalid_configs_never_win(gemm_tables):
+    prob, tables = gemm_tables
+    t = tables["v5e"]
+    _, best = t.best()
+    assert math.isfinite(best)
+
+
+def test_vmem_gate_varies_by_generation():
+    """v4 has 32 MiB VMEM vs 128 MiB on v5e+: some configs must be valid on
+    v5e but invalid on v4 (the 'compile failure' portability mechanism)."""
+    prob = GemmProblem()
+    n_flip = 0
+    for cfg in prob.space.sample_distinct(300, seed=5):
+        a = prob.evaluate(cfg, "v5e").ok
+        b = prob.evaluate(cfg, "v4").ok
+        n_flip += (a != b)
+    assert n_flip > 0

@@ -1,0 +1,159 @@
+"""Tuner behaviour: budget accounting, dedup, convergence, and
+finds-the-optimum checks on toy landscapes (the suite's own reference
+problems)."""
+
+import math
+import random
+
+import pytest
+
+from repro.core.problem import FunctionProblem
+from repro.core.space import Constraint, Param, SearchSpace
+from repro.core.tuners import (DifferentialEvolution, GeneticAlgorithm,
+                               GridSearch, LocalSearch, ParticleSwarm,
+                               RandomSearch, SimulatedAnnealing, SurrogateBO)
+from repro.core.tuners.base import run_many, run_tuner
+from sweeps import sweep
+
+ALL_TUNERS = [RandomSearch, GridSearch, LocalSearch, SimulatedAnnealing,
+              GeneticAlgorithm, DifferentialEvolution, ParticleSwarm,
+              SurrogateBO]
+
+
+def _quad_problem(n_params=4, k=8):
+    """Convex-ish separable landscape with a unique optimum at index 2."""
+    params = [Param(f"p{i}", tuple(range(k))) for i in range(n_params)]
+    space = SearchSpace(params, name="quad")
+
+    def fn(cfg, arch):
+        return 1.0 + sum((cfg[f"p{i}"] - 2) ** 2 for i in range(n_params))
+
+    return FunctionProblem(space, fn, name="quad")
+
+
+def _rastrigin_problem(n_params=4, k=10):
+    """Multimodal: many local minima, global at index 3."""
+    import math as m
+    params = [Param(f"p{i}", tuple(range(k))) for i in range(n_params)]
+    space = SearchSpace(params, name="rast")
+
+    def fn(cfg, arch):
+        tot = 0.0
+        for i in range(n_params):
+            x = (cfg[f"p{i}"] - 3) * 0.7
+            tot += x * x - 3.0 * m.cos(2 * m.pi * x) + 3.0
+        return 1.0 + tot
+
+    return FunctionProblem(space, fn, name="rast")
+
+
+@pytest.mark.parametrize("tuner_cls", ALL_TUNERS)
+def test_budget_and_validity(tuner_cls):
+    prob = _quad_problem()
+    res = run_tuner(tuner_cls(prob.space, seed=0), prob, budget=40)
+    assert res.evaluations <= 40
+    assert all(t.valid for t in res.trials)
+    curve = res.best_curve()
+    assert all(b2 <= b1 + 1e-12 for b1, b2 in zip(curve, curve[1:]))
+
+
+@pytest.mark.parametrize("tuner_cls", ALL_TUNERS)
+def test_finds_optimum_on_small_space(tuner_cls):
+    prob = _quad_problem(n_params=3, k=4)          # |S| = 64
+    res = run_tuner(tuner_cls(prob.space, seed=1), prob, budget=64)
+    assert res.best.objective == pytest.approx(1.0)
+
+
+def test_grid_search_exhausts_and_stops():
+    prob = _quad_problem(n_params=2, k=3)          # |S| = 9
+    res = run_tuner(GridSearch(prob.space, seed=0), prob, budget=100)
+    assert res.evaluations == 9
+    keys = {prob.space.flat_index(t.config) for t in res.trials}
+    assert len(keys) == 9
+
+
+def test_dedup_does_not_consume_budget():
+    prob = _quad_problem(n_params=1, k=4)          # tiny: forces repeats
+    res = run_tuner(RandomSearch(prob.space, seed=0), prob, budget=50)
+    assert res.evaluations == 4                    # only distinct configs
+
+
+def test_constrained_space_never_evaluates_invalid():
+    params = [Param("a", (1, 2, 3, 4)), Param("b", (1, 2, 3, 4))]
+    space = SearchSpace(params, [Constraint("sum_even",
+                                            lambda c: (c["a"] + c["b"]) % 2 == 0)])
+    seen = []
+
+    def fn(cfg, arch):
+        seen.append(cfg)
+        return float(cfg["a"] * cfg["b"])
+
+    prob = FunctionProblem(space, fn)
+    for cls in (RandomSearch, LocalSearch, GeneticAlgorithm):
+        run_tuner(cls(space, seed=2), prob, budget=8)
+    assert all((c["a"] + c["b"]) % 2 == 0 for c in seen)
+
+
+def test_local_search_beats_random_on_smooth():
+    """On a smooth landscape, hill climbing reaches the optimum with fewer
+    evaluations than random search (median over seeds)."""
+    prob = _quad_problem(n_params=5, k=8)           # |S| = 32768
+    budget = 120
+
+    def med_best(cls):
+        runs = run_many(lambda s, seed: cls(s, seed=seed), prob, budget,
+                        repeats=7)
+        vals = sorted(r.best.objective for r in runs)
+        return vals[len(vals) // 2]
+
+    assert med_best(LocalSearch) <= med_best(RandomSearch)
+
+
+def test_global_tuners_handle_multimodal():
+    """Population/model-based tuners must not lose to random search on a
+    multimodal landscape (median over seeds); GA/BO find the global basin."""
+    prob = _rastrigin_problem(n_params=4, k=10)
+    budget = 150
+
+    def meds(cls):
+        runs = run_many(lambda s, seed: cls(s, seed=seed), prob, budget,
+                        repeats=5)
+        vals = sorted(r.best.objective for r in runs)
+        return vals[len(vals) // 2], min(vals)
+
+    rnd_med, _ = meds(RandomSearch)
+    for cls in (GeneticAlgorithm, SimulatedAnnealing, DifferentialEvolution,
+                SurrogateBO):
+        med, best = meds(cls)
+        assert med <= rnd_med + 1e-9, f"{cls.__name__}: {med} vs {rnd_med}"
+    for cls in (GeneticAlgorithm, SurrogateBO):
+        med, best = meds(cls)
+        assert best < 3.0, f"{cls.__name__}: {best}"   # global basin reached
+
+
+@sweep(10)
+def test_tuners_on_random_constrained_spaces(rng):
+    """Any tuner on any random constrained space: returns valid trials and a
+    monotone best-curve (robustness sweep)."""
+    from sweeps import random_subspace
+    space = random_subspace(rng, max_params=4, max_vals=5)
+
+    def fn(cfg, arch):
+        return float(sum(hash((k, v)) % 97 for k, v in cfg.items()) + 1)
+
+    prob = FunctionProblem(space, fn)
+    cls = rng.choice(ALL_TUNERS)
+    try:
+        res = run_tuner(cls(space, seed=rng.randint(0, 9999)), prob, budget=15)
+    except RuntimeError:
+        return                                   # unsatisfiable sample: fine
+    assert all(t.valid for t in res.trials)
+    curve = res.best_curve()
+    assert all(b2 <= b1 + 1e-12 for b1, b2 in zip(curve, curve[1:]))
+
+
+def test_seeds_reproducible():
+    prob = _rastrigin_problem()
+    r1 = run_tuner(GeneticAlgorithm(prob.space, seed=7), prob, budget=60)
+    r2 = run_tuner(GeneticAlgorithm(prob.space, seed=7), prob, budget=60)
+    assert [t.config for t in r1.trials] == [t.config for t in r2.trials]
