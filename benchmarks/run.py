@@ -1,13 +1,16 @@
 """Benchmark harness entry point: one module per paper figure/table.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig1,fig4,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,fig4,...] [--workers N]
 
 Each module prints ``name,us_per_call,derived`` CSV lines and writes its
-full table(s) under experiments/benchmarks/."""
+full table(s) under experiments/benchmarks/.  ``--workers`` sets the
+orchestrator's evaluation parallelism for the modules that tune
+(``tuners``); results are identical at any worker count."""
 
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
@@ -36,7 +39,11 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of "
                          f"{','.join(MODULES)}")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="orchestrator worker-pool size for tuning modules")
     args = ap.parse_args()
+    if args.workers is not None:
+        os.environ["REPRO_TUNER_WORKERS"] = str(args.workers)
     names = args.only.split(",") if args.only else list(MODULES)
 
     print("name,us_per_call,derived")

@@ -3,14 +3,23 @@ benchmark the infrastructure exists to enable (the paper proposes the suite;
 this is the study it unlocks).
 
 Protocol: every tuner x every benchmark x 7 seeds, 220-evaluation budget on
-v5e; report median best relative performance at budgets 25/50/100/220."""
+v5e; report median best relative performance at budgets 25/50/100/220.
+
+Runs through the orchestrator: one worker pool per benchmark evaluates each
+session's batches in parallel (``REPRO_TUNER_WORKERS`` / ``--workers``
+controls the pool).  Trajectories are worker-count-independent — batch
+width is set by the tuner, results are told in ask order — so the reported
+curves are reproducible regardless of parallelism.
+"""
 
 from __future__ import annotations
+
+import os
 
 import numpy as np
 
 from repro.core.tuners import TUNERS
-from repro.core.tuners.base import run_tuner
+from repro.orchestrator import SessionSpec, WorkerPool, run_session
 
 from .common import BENCHMARKS, emit, load_tables, timed, write_csv
 
@@ -20,17 +29,20 @@ CHECKPOINTS = (25, 50, 100, 220)
 
 
 def run() -> dict:
+    workers = int(os.environ.get("REPRO_TUNER_WORKERS", "4"))
     rows = []
     out = {}
     for name in BENCHMARKS:
         prob, tables = load_tables(name)
         t_best = min(o for o in tables["v5e"].objectives if np.isfinite(o))
-        with timed() as t:
+        with timed() as t, WorkerPool(prob, "v5e", workers=workers) as pool:
             for tname, cls in TUNERS.items():
                 curves = []
                 for seed in range(SEEDS):
-                    res = run_tuner(cls(prob.space, seed=seed), prob,
-                                    budget=BUDGET, arch="v5e")
+                    spec = SessionSpec(problem=name, tuner=tname, arch="v5e",
+                                       budget=BUDGET, seed=seed,
+                                       workers=workers)
+                    res = run_session(spec, problem=prob, pool=pool)
                     c = res.best_curve()
                     c = c + [c[-1]] * (BUDGET - len(c))
                     curves.append([t_best / v if np.isfinite(v) else 0.0

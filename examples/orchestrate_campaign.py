@@ -1,0 +1,60 @@
+"""Orchestrated tuning campaign: parallel, fault-tolerant, resumable.
+
+    PYTHONPATH=src python examples/orchestrate_campaign.py
+
+1. build a campaign grid (2 kernels x 2 tuners x 2 seeds on v5e),
+2. run it through the orchestrator — each session evaluates its batches on
+   a worker pool, journaling every evaluation to the session store,
+3. kill one session mid-flight (checkpoint-and-stop) and resume it: the
+   journal replays for free and only the remaining budget hits the
+   evaluator,
+4. print the campaign status table — the same view the CLI gives you:
+
+    python -m repro.orchestrator status --store experiments/sessions
+"""
+
+from pathlib import Path
+
+from repro.orchestrator import (Campaign, SessionSpec, SessionStore,
+                                make_problem, run_session)
+
+STORE = Path(__file__).resolve().parents[1] / "experiments" / "sessions"
+WORKERS = 8
+BUDGET = 120
+
+
+def main() -> None:
+    store = SessionStore(STORE)
+
+    # -- 1+2. the grid, orchestrated ------------------------------------- #
+    campaign = Campaign.grid(problems=["gemm", "conv2d"],
+                             tuners=["random", "genetic"],
+                             seeds=range(2), budget=BUDGET, workers=WORKERS)
+    print(f"campaign: {len(campaign)} sessions -> {STORE}")
+    results = campaign.run(store)
+    for sid, res in results.items():
+        print(f"  {sid:48s} best {res.best.objective * 1e3:8.3f} ms")
+
+    # -- 3. interrupt + resume ------------------------------------------- #
+    spec = SessionSpec(problem="gemm", tuner="diffevo", arch="v5e",
+                       budget=BUDGET, seed=7, workers=WORKERS)
+    prob = make_problem("gemm")
+    partial = run_session(spec, problem=prob, store=store,
+                          stop_after=BUDGET // 3)      # simulated kill
+    print(f"\ninterrupted {spec.session_id} at "
+          f"{len(partial.trials)}/{BUDGET} trials "
+          f"(status={store.meta(spec.session_id)['status']})")
+    full = run_session(spec, problem=prob, store=store)  # journal replays
+    print(f"resumed: {len(full.trials)}/{BUDGET} trials, "
+          f"best {full.best.objective * 1e3:.3f} ms "
+          f"(status={store.meta(spec.session_id)['status']})")
+
+    # -- 4. status table --------------------------------------------------- #
+    print(f"\n{'session':48s} {'status':8s} {'progress':>10s}")
+    for row in campaign.status(store):
+        print(f"{row['session']:48s} {row['status']:8s} "
+              f"{row['evaluated']}/{row['budget']:<6}")
+
+
+if __name__ == "__main__":
+    main()

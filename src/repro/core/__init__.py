@@ -6,7 +6,8 @@ model, eight tuners, the results database, and the landscape analyses
 """
 
 from .costmodel import (ARCH_NAMES, DEFAULT_ARCH, TPU_GENERATIONS,
-                        KernelFeatures, estimate_seconds)
+                        KernelFeatures, estimate_seconds,
+                        estimate_seconds_many)
 from .problem import FunctionProblem, MeasuredProblem, Trial, TunableProblem
 from .results import ResultsDB, ResultTable
 from .space import Config, Constraint, Param, SearchSpace, powers_of_two
@@ -15,6 +16,7 @@ __all__ = [
     "SearchSpace", "Param", "Constraint", "Config", "powers_of_two",
     "TunableProblem", "FunctionProblem", "MeasuredProblem", "Trial",
     "ResultsDB", "ResultTable",
-    "KernelFeatures", "estimate_seconds", "TPU_GENERATIONS",
+    "KernelFeatures", "estimate_seconds", "estimate_seconds_many",
+    "TPU_GENERATIONS",
     "ARCH_NAMES", "DEFAULT_ARCH",
 ]

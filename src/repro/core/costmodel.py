@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+from typing import Sequence
 
 MiB = 1024 * 1024
 
@@ -193,6 +194,93 @@ def estimate_seconds(features: KernelFeatures, arch: str = DEFAULT_ARCH) -> floa
 
     t_grid = gen.grid_overhead_s * max(0.0, f.grid_steps - 1.0)
     return t_body + t_grid + gen.launch_overhead_s + f.extra_seconds
+
+
+def estimate_seconds_many(features: Sequence[KernelFeatures],
+                          arch: str = DEFAULT_ARCH) -> list[float]:
+    """Vectorized :func:`estimate_seconds` over a batch of feature sets.
+
+    One numpy pass over the whole batch instead of per-config Python math —
+    the fast path behind ``TunableProblem.evaluate_many`` and the
+    orchestrator's worker pool.  Mirrors the scalar expressions term for
+    term (same float64 operation order) so both paths agree.
+    """
+    if not features:
+        return []
+    import numpy as np
+
+    gen = TPU_GENERATIONS[arch]
+    f64 = np.float64
+    arr = lambda g: np.array([g(f) for f in features], dtype=f64)  # noqa: E731
+
+    vmem = arr(lambda f: f.vmem_working_set)
+    dtype_bytes = np.array([f.dtype_bytes for f in features])
+    mxu_flops = arr(lambda f: f.mxu_flops)
+    vpu_flops = arr(lambda f: f.vpu_flops)
+    transcend = arr(lambda f: f.transcendental_ops)
+    hbm_bytes = arr(lambda f: f.hbm_bytes)
+    gather = arr(lambda f: f.gather_bytes)
+    grid_steps = arr(lambda f: f.grid_steps)
+    serialization = arr(lambda f: f.serialization)
+    extra = arr(lambda f: f.extra_seconds)
+
+    # --- MXU utilization ------------------------------------------------ #
+    d = float(gen.mxu_dim)
+    m = arr(lambda f: max(1, int(f.mxu_tile[0])))
+    n = arr(lambda f: max(1, int(f.mxu_tile[1])))
+    k = arr(lambda f: max(1, int(f.mxu_tile[2])))
+    um = m / (np.ceil(m / d) * d)
+    un = n / (np.ceil(n / d) * d)
+    uk = k / (k + d)
+    uk = np.minimum(1.0, uk / (d / (d + 512)))
+    mxu_util = np.maximum(um * un * uk, 1e-3)
+
+    # --- VPU utilization ------------------------------------------------ #
+    lane = float(gen.lane)
+    sub = np.array([gen.sublane(int(b)) for b in dtype_bytes], dtype=f64)
+    lane_ext = arr(lambda f: f.lane_extent)
+    sub_ext = arr(lambda f: f.sublane_extent)
+    ul = lane_ext / (np.ceil(lane_ext / lane) * lane)
+    us = sub_ext / (np.ceil(sub_ext / sub) * sub)
+    vpu_util = np.maximum(ul * us, 1e-3)
+
+    # --- issue efficiency ----------------------------------------------- #
+    unroll = np.array([f.unroll for f in features], dtype=f64)
+    trip = np.array([f.inner_trip for f in features], dtype=f64)
+    safe_trip = np.maximum(trip, 1.0)
+    u = np.maximum(1.0, np.minimum(unroll, safe_trip))
+    base = u / (u + 0.35)
+    waste = np.where(unroll > safe_trip, safe_trip / np.maximum(unroll, 1.0), 1.0)
+    rem = np.mod(safe_trip, u)
+    tail = 1.0 - 0.1 * (rem / safe_trip)
+    issue = np.where(trip <= 0, 1.0, base * waste * tail)
+
+    # --- compute / memory / overlap (same structure as the scalar path) - #
+    peak = np.where(dtype_bytes <= 2, gen.peak_flops_bf16, gen.peak_flops_f32)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t_mxu = np.where(mxu_flops != 0.0,
+                         mxu_flops / (peak * mxu_util * issue), 0.0)
+        vpu_work = vpu_flops + 8.0 * transcend
+        t_vpu = np.where(vpu_work != 0.0,
+                         vpu_work / (gen.vpu_flops * vpu_util * issue), 0.0)
+    t_compute = t_mxu + t_vpu
+    t_hbm = hbm_bytes / gen.hbm_bw
+    t_gather = np.where(gather != 0.0, gather / (0.25 * gen.hbm_bw), 0.0)
+    t_mem = t_hbm + t_gather
+
+    fits_double = 2.0 * vmem <= gen.vmem_bytes
+    pressure = np.minimum(1.0, (2.0 * vmem - gen.vmem_bytes)
+                          / max(gen.vmem_bytes, 1))
+    serial = np.where(
+        fits_double,
+        np.minimum(1.0, np.maximum(0.0, serialization)),
+        np.minimum(1.0, np.maximum(serialization, 0.35 + 0.65 * pressure)))
+    t_body = (np.maximum(t_compute, t_mem)
+              + serial * np.minimum(t_compute, t_mem))
+    t_grid = gen.grid_overhead_s * np.maximum(0.0, grid_steps - 1.0)
+    total = t_body + t_grid + gen.launch_overhead_s + extra
+    total = np.where(vmem > gen.vmem_bytes, np.inf, total)
+    return [float(t) for t in total]
 
 
 def roofline_terms(features: KernelFeatures, arch: str = DEFAULT_ARCH

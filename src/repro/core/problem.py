@@ -15,7 +15,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
 
-from .costmodel import ARCH_NAMES, DEFAULT_ARCH, KernelFeatures, estimate_seconds
+from .costmodel import (ARCH_NAMES, DEFAULT_ARCH, KernelFeatures,
+                        estimate_seconds, estimate_seconds_many)
 from .space import Config, SearchSpace
 
 
@@ -63,7 +64,32 @@ class TunableProblem:
     # -- convenience ------------------------------------------------------ #
     def evaluate_many(self, configs: Sequence[Config],
                       arch: str = DEFAULT_ARCH) -> list[Trial]:
-        return [self.evaluate(c, arch) for c in configs]
+        """Evaluate a batch of configs.
+
+        Problems on the analytical path (``features`` + the TPU cost model)
+        take a vectorized fast path: one numpy sweep over the whole batch
+        via :func:`estimate_seconds_many`.  Subclasses that override
+        :meth:`evaluate` (measured problems, function problems) fall back to
+        the per-config loop.
+        """
+        configs = list(configs)
+        if type(self).evaluate is not TunableProblem.evaluate:
+            return [self.evaluate(c, arch) for c in configs]
+        trials: list[Trial | None] = []
+        feats: list[KernelFeatures] = []
+        slots: list[int] = []
+        for cfg in configs:
+            if not self.space.satisfies(cfg):
+                trials.append(Trial(cfg, math.inf, arch, valid=False,
+                                    info={"violated": self.space.violated(cfg)}))
+            else:
+                slots.append(len(trials))
+                feats.append(self.features(cfg, arch))
+                trials.append(None)
+        for j, f, t in zip(slots, feats, estimate_seconds_many(feats, arch)):
+            trials[j] = Trial(configs[j], t, arch, valid=math.isfinite(t),
+                              info={"features": f})
+        return trials  # type: ignore[return-value]
 
     def exhaustive(self, arch: str = DEFAULT_ARCH,
                    limit: int | None = None) -> list[Trial]:

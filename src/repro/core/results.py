@@ -3,33 +3,62 @@
 Full-space / sampled evaluation data is expensive to (re)compute, and every
 analysis (Figs 1-6, Table VIII) reads the same tables.  We persist one JSON
 file per (problem × arch) under a cache directory, plus tuner-run traces.
-orjson + zstd keep multi-100k-row tables compact.
+
+orjson + zstd keep multi-100k-row tables compact when available (the
+``[fast]`` extra); otherwise we fall back to stdlib ``json`` + ``zlib``.
+The compressor is identified by the frame header — zstd frames start with
+the magic ``28 B5 2F FD``, zlib streams with ``0x78`` — so files written by
+either path load under the other without corrupting the cache (reading a
+zstd file does require zstandard).
 """
 
 from __future__ import annotations
 
+import json
 import math
 import os
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Sequence
 
-import orjson
-import zstandard
-
+from .compression import ZSTD_MAGIC as _ZSTD_MAGIC
+from .compression import compress, decompress, zstandard
 from .problem import Trial, TunableProblem
 from .space import Config, SearchSpace
 
-_ZCTX = zstandard.ZstdCompressor(level=6)
-_DCTX = zstandard.ZstdDecompressor()
+try:  # optional fast path: pip install .[fast]
+    import orjson
+except ImportError:  # pragma: no cover - depends on environment
+    orjson = None
+
+
+def _np_default(obj):
+    """stdlib-json fallback for numpy scalars/arrays (orjson handles these
+    natively via OPT_SERIALIZE_NUMPY)."""
+    if hasattr(obj, "item"):
+        return obj.item()
+    if hasattr(obj, "tolist"):
+        return obj.tolist()
+    raise TypeError(f"not JSON serializable: {type(obj)!r}")
+
+
+def _json_dumps(obj) -> bytes:
+    if orjson is not None:
+        return orjson.dumps(obj, option=orjson.OPT_SERIALIZE_NUMPY)
+    return json.dumps(obj, default=_np_default,
+                      separators=(",", ":")).encode()
+
+
+def _json_loads(raw: bytes):
+    return orjson.loads(raw) if orjson is not None else json.loads(raw)
 
 
 def _dump(obj) -> bytes:
-    return _ZCTX.compress(orjson.dumps(obj, option=orjson.OPT_SERIALIZE_NUMPY))
+    return compress(_json_dumps(obj), level=6)
 
 
 def _load(raw: bytes):
-    return orjson.loads(_DCTX.decompress(raw))
+    return _json_loads(decompress(raw, what="cachefile"))
 
 
 @dataclass

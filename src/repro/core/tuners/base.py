@@ -49,9 +49,20 @@ class TuneResult:
 
 class Tuner:
     """Base optimizer.  Subclasses implement :meth:`ask` and may use
-    :meth:`tell` to update internal state."""
+    :meth:`tell` to update internal state.
+
+    The batched protocol (:meth:`ask_batch` / :meth:`tell_batch`) is what the
+    orchestrator's worker pool drives: ask a batch, evaluate it in parallel,
+    tell the results back *in ask order*.  :attr:`max_parallel_asks` declares
+    how many configs a tuner can safely propose before seeing any result —
+    1 for strictly sequential tuners (local search, annealing, BO), the
+    population size for generational tuners, ``None`` (unbounded) when asks
+    are independent of tells (random, grid).
+    """
 
     name: str = "tuner"
+    #: max configs safely asked before a tell; ``None`` == unbounded.
+    max_parallel_asks: int | None = 1
 
     def __init__(self, space: SearchSpace, seed: int = 0):
         self.space = space
@@ -63,6 +74,20 @@ class Tuner:
 
     def tell(self, trial: Trial) -> None:
         pass
+
+    # -- batched protocol ------------------------------------------------- #
+    def ask_batch(self, n: int) -> list[Config]:
+        """Propose up to ``n`` configs at once (default: loop over
+        :meth:`ask`).  Callers must clamp ``n`` to
+        :attr:`max_parallel_asks` and tell every asked config exactly once,
+        in ask order, before the next batch."""
+        return [self.ask() for _ in range(max(1, n))]
+
+    def tell_batch(self, trials: Sequence[Trial]) -> None:
+        """Report evaluated trials, in the order they were asked (default:
+        loop over :meth:`tell`)."""
+        for t in trials:
+            self.tell(t)
 
     def finished(self) -> bool:
         """Optional early-termination signal (e.g. grid exhausted)."""

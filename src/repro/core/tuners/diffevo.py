@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import math
+from collections import deque
 
 from ..problem import Trial
 from ..space import Config, SearchSpace
@@ -18,9 +19,13 @@ class DifferentialEvolution(Tuner):
         self.pop_size = pop_size
         self.f = f
         self.cr = cr
+        # each ask records which population slot its challenger targets; tells
+        # consume the queue in ask order, so a whole generation of challengers
+        # can be in flight at once (the batched/orchestrated protocol).
+        self.max_parallel_asks = pop_size
         self.pop: list[list[int]] = []        # encoded index vectors
         self.obj: list[float] = []
-        self._target: int | None = None
+        self._targets: deque[int | None] = deque()
 
     def _decode(self, vec) -> Config:
         clipped = [max(0, min(int(round(v)), p.cardinality - 1))
@@ -28,11 +33,9 @@ class DifferentialEvolution(Tuner):
         return self.space.decode(clipped)
 
     def ask(self) -> Config:
-        if len(self.pop) < self.pop_size:
-            self._target = None
-            cfg = self.space.sample(self.rng)
-            self._seed_cfg = cfg
-            return cfg
+        if len(self.pop) + len(self._targets) < self.pop_size:
+            self._targets.append(None)
+            return self.space.sample(self.rng)
         for _ in range(100):
             i = self.rng.randrange(self.pop_size)
             a, b, c = self.rng.sample(range(self.pop_size), 3)
@@ -44,23 +47,22 @@ class DifferentialEvolution(Tuner):
                          for d in range(len(self.space.params))]
             cfg = self._decode(trial_vec)
             if self.space.satisfies(cfg):
-                self._target = i
+                self._targets.append(i)
                 return cfg
-        self._target = None
-        cfg = self.space.sample(self.rng)
-        self._seed_cfg = cfg
-        return cfg
+        self._targets.append(None)
+        return self.space.sample(self.rng)
 
     def tell(self, trial: Trial) -> None:
         obj = trial.objective if trial.ok else math.inf
         enc = list(self.space.encode(trial.config))
-        if self._target is None:
+        target = self._targets.popleft() if self._targets else None
+        if target is None or target >= len(self.pop):
             self.pop.append(enc)
             self.obj.append(obj)
             if len(self.pop) > self.pop_size:
                 worst = max(range(len(self.obj)), key=lambda j: self.obj[j])
                 self.pop.pop(worst)
                 self.obj.pop(worst)
-        elif obj <= self.obj[self._target]:
-            self.pop[self._target] = enc
-            self.obj[self._target] = obj
+        elif obj <= self.obj[target]:
+            self.pop[target] = enc
+            self.obj[target] = obj

@@ -19,6 +19,10 @@ class GeneticAlgorithm(Tuner):
         self.pop_size = pop_size
         self.mutation_rate = mutation_rate
         self.tournament = tournament
+        # ask() breeds from the *current* population without mutating it, so
+        # a whole generation can be asked before any tell (batched protocol);
+        # telling the batch in ask order then reproduces generational GA.
+        self.max_parallel_asks = pop_size
         self.pop: list[tuple[float, Config]] = []
         self._pending: Config | None = None
 

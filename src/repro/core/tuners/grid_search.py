@@ -8,6 +8,7 @@ from .base import Tuner
 
 class GridSearch(Tuner):
     name = "grid"
+    max_parallel_asks = None        # the visit order never depends on tells
 
     def __init__(self, space: SearchSpace, seed: int = 0, shuffle: bool = True):
         super().__init__(space, seed)

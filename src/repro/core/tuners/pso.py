@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import math
+from collections import deque
 
 from ..problem import Trial
 from ..space import Config, SearchSpace
@@ -17,12 +18,16 @@ class ParticleSwarm(Tuner):
         super().__init__(space, seed)
         self.n = n_particles
         self.w, self.c1, self.c2 = w, c1, c2
+        # asks cycle through particles; the queue pairs each in-flight ask
+        # with its particle so a full swarm step can be evaluated in parallel.
+        self.max_parallel_asks = n_particles
         dims = len(space.params)
         self.pos: list[list[float]] = []
         self.vel: list[list[float]] = []
         self.pbest: list[tuple[float, list[float]]] = []
         self.gbest: tuple[float, list[float]] = (math.inf, [0.0] * dims)
         self._cur = 0
+        self._pending: deque[int] = deque()
         self._init_left = n_particles
 
     def _decode(self, vec) -> Config:
@@ -39,8 +44,10 @@ class ParticleSwarm(Tuner):
             self.pbest.append((math.inf, list(enc)))
             self._cur = len(self.pos) - 1
             self._init_left -= 1
+            self._pending.append(self._cur)
             return cfg
         i = self._cur = (self._cur + 1) % self.n
+        self._pending.append(i)
         for _ in range(30):
             new_v, new_p = [], []
             for d in range(len(self.space.params)):
@@ -59,7 +66,7 @@ class ParticleSwarm(Tuner):
 
     def tell(self, trial: Trial) -> None:
         obj = trial.objective if trial.ok else math.inf
-        i = self._cur
+        i = self._pending.popleft() if self._pending else self._cur
         enc = [float(x) for x in self.space.encode(trial.config)]
         if obj < self.pbest[i][0]:
             self.pbest[i] = (obj, enc)

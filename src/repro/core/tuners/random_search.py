@@ -8,6 +8,7 @@ from .base import Tuner
 
 class RandomSearch(Tuner):
     name = "random"
+    max_parallel_asks = None        # asks are independent: batch freely
 
     def ask(self) -> Config:
         return self.space.sample(self.rng)

@@ -1,0 +1,22 @@
+"""repro.orchestrator — distributed tuning-session orchestration.
+
+The scale-out layer over the shared problem/tuner interface: sessions
+(problem × tuner × arch × budget × seed) run batched ask/tell over a
+fault-tolerant worker pool, journal every evaluation for exact resume, and
+compose into campaigns — the paper's full study grid as one restartable
+unit.  See the README's orchestrator section for the architecture.
+"""
+
+from .campaign import Campaign
+from .queue import Job, JobQueue
+from .registry import make_problem, problem_names
+from .runner import resume_session, run_session
+from .session import SessionSpec
+from .store import SessionStore
+from .workers import WorkerPool
+
+__all__ = [
+    "Campaign", "Job", "JobQueue", "SessionSpec", "SessionStore",
+    "WorkerPool", "make_problem", "problem_names", "resume_session",
+    "run_session",
+]

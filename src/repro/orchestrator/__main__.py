@@ -1,0 +1,7 @@
+"""``python -m repro.orchestrator`` — see :mod:`repro.orchestrator.cli`."""
+
+import sys
+
+from .cli import main
+
+sys.exit(main())

@@ -1,0 +1,84 @@
+"""Campaigns: grids of sessions (the paper's protocol, orchestrated).
+
+The paper's study shape — every tuner × every benchmark × repeated seeds ×
+multiple architectures — is a Cartesian product of sessions.  A
+:class:`Campaign` materializes that product as specs, runs them through the
+session runner (each session internally parallel over the worker pool), and
+aggregates.  With a store, a killed campaign resumes where it stopped:
+finished sessions are skipped via their published traces, the interrupted
+one continues from its journal.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Sequence
+
+from ..core.tuners.base import TuneResult
+from .session import DONE, SessionSpec
+from .store import SessionStore
+from .runner import run_session
+
+
+@dataclass
+class Campaign:
+    """An ordered set of session specs run as one unit."""
+
+    specs: list[SessionSpec] = field(default_factory=list)
+
+    @staticmethod
+    def grid(problems: Sequence[str], tuners: Sequence[str],
+             archs: Sequence[str] = ("v5e",), seeds: Iterable[int] = (0,),
+             budget: int = 100, workers: int = 4,
+             tuner_kwargs: dict | None = None) -> "Campaign":
+        """The full cross product, in deterministic order."""
+        specs = [
+            SessionSpec(problem=p, tuner=t, arch=a, budget=budget, seed=s,
+                        workers=workers, tuner_kwargs=dict(tuner_kwargs or {}))
+            for p in problems for t in tuners for a in archs for s in seeds
+        ]
+        return Campaign(specs)
+
+    def __len__(self) -> int:
+        return len(self.specs)
+
+    # -- execution --------------------------------------------------------- #
+    def run(self, store: SessionStore | None = None, *,
+            workers: int | None = None, mode: str = "auto",
+            max_retries: int = 2,
+            on_session: Callable[[SessionSpec, TuneResult], None] | None = None
+            ) -> dict[str, TuneResult]:
+        """Run every session; returns {session_id: trace}.
+
+        Sessions already marked done in the store are re-run as pure journal
+        replays (no hardware evaluations), which is cheap and keeps the
+        return value complete.
+        """
+        out: dict[str, TuneResult] = {}
+        for spec in self.specs:
+            res = run_session(spec, store=store, workers=workers, mode=mode,
+                              max_retries=max_retries)
+            out[spec.session_id] = res
+            if on_session is not None:
+                on_session(spec, res)
+        return out
+
+    # -- reporting --------------------------------------------------------- #
+    def status(self, store: SessionStore) -> list[dict]:
+        """One row per session: id, state, progress, best objective."""
+        rows = []
+        for spec in self.specs:
+            sid = spec.session_id
+            if store.exists(sid):
+                m = store.meta(sid)
+                rows.append({"session": sid, "status": m["status"],
+                             "evaluated": m.get("evaluated", 0),
+                             "budget": spec.budget, "best": m.get("best")})
+            else:
+                rows.append({"session": sid, "status": "not-submitted",
+                             "evaluated": 0, "budget": spec.budget,
+                             "best": None})
+        return rows
+
+    def done(self, store: SessionStore) -> bool:
+        return all(r["status"] == DONE for r in self.status(store))

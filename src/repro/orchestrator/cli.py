@@ -1,0 +1,140 @@
+"""Command-line front end: ``python -m repro.orchestrator`` (or ``repro``).
+
+Subcommands::
+
+    submit  — register a session in a store and run it
+    status  — show every session in a store (or one, with its curve tail)
+    resume  — continue an interrupted session from its journal
+
+Example::
+
+    python -m repro.orchestrator submit --problem gemm --tuner genetic \\
+        --arch v5e --budget 200 --seed 0 --workers 8 --store experiments/sessions
+    python -m repro.orchestrator status --store experiments/sessions
+    python -m repro.orchestrator resume <session-id> --store experiments/sessions
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+from .registry import problem_names
+from .runner import resume_session, run_session
+from .session import SessionSpec
+from .store import SessionStore
+
+
+def _fmt_best(best) -> str:
+    if best is None or not math.isfinite(best):
+        return "-"
+    return f"{best * 1e3:.4f}ms" if best < 1.0 else f"{best:.4f}s"
+
+
+def _print_status(store: SessionStore, sid: str | None) -> int:
+    sids = [sid] if sid else store.list_sessions()
+    if sid and not store.exists(sid):
+        print(f"error: no session {sid!r} in {store.root}", file=sys.stderr)
+        return 2
+    if not sids:
+        print(f"(no sessions under {store.root})")
+        return 0
+    hdr = f"{'session':58s} {'status':12s} {'progress':>12s} {'best':>12s}"
+    print(hdr)
+    print("-" * len(hdr))
+    for s in sids:
+        m = store.meta(s)
+        prog = f"{m.get('evaluated', 0)}/{m['spec']['budget']}"
+        print(f"{s:58s} {m['status']:12s} {prog:>12s} "
+              f"{_fmt_best(m.get('best')):>12s}")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.orchestrator",
+        description="distributed tuning-session orchestrator")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p_sub = sub.add_parser("submit", help="register a session and run it")
+    p_sub.add_argument("--problem", required=True,
+                       help=f"one of: {', '.join(problem_names())}")
+    p_sub.add_argument("--tuner", required=True,
+                       help="registered tuner name (e.g. random, genetic)")
+    p_sub.add_argument("--arch", default="v5e")
+    p_sub.add_argument("--budget", type=int, default=100)
+    p_sub.add_argument("--seed", type=int, default=0)
+    p_sub.add_argument("--workers", type=int, default=4)
+    p_sub.add_argument("--mode", default="auto",
+                       choices=("auto", "thread", "process"))
+    p_sub.add_argument("--max-retries", type=int, default=2)
+    p_sub.add_argument("--store", required=True, help="session store dir")
+    p_sub.add_argument("--tuner-kwargs", default="{}",
+                       help="JSON dict of tuner constructor kwargs")
+    p_sub.add_argument("--stop-after", type=int, default=None,
+                       help="checkpoint-and-stop after N trials")
+
+    p_st = sub.add_parser("status", help="show sessions in a store")
+    p_st.add_argument("session", nargs="?", default=None)
+    p_st.add_argument("--store", required=True)
+
+    p_re = sub.add_parser("resume", help="continue an interrupted session")
+    p_re.add_argument("session")
+    p_re.add_argument("--store", required=True)
+    p_re.add_argument("--workers", type=int, default=None,
+                      help="override evaluation parallelism (trajectory is "
+                           "unchanged; batches are set by the tuner)")
+
+    args = ap.parse_args(argv)
+    store = SessionStore(args.store)
+
+    if args.cmd == "status":
+        return _print_status(store, args.session)
+
+    if args.cmd == "submit":
+        if args.problem not in problem_names():
+            print(f"error: unknown problem {args.problem!r}; "
+                  f"registered: {', '.join(problem_names())}", file=sys.stderr)
+            return 2
+        from ..core.tuners import TUNERS
+        if args.tuner not in TUNERS:
+            print(f"error: unknown tuner {args.tuner!r}; "
+                  f"registered: {', '.join(sorted(TUNERS))}", file=sys.stderr)
+            return 2
+        try:
+            tuner_kwargs = json.loads(args.tuner_kwargs)
+        except json.JSONDecodeError as e:
+            print(f"error: --tuner-kwargs is not valid JSON: {e}",
+                  file=sys.stderr)
+            return 2
+        spec = SessionSpec(problem=args.problem, tuner=args.tuner,
+                           arch=args.arch, budget=args.budget, seed=args.seed,
+                           workers=args.workers, tuner_kwargs=tuner_kwargs)
+        sid = store.create(spec)
+        print(f"session {sid}")
+        res = run_session(spec, store=store, mode=args.mode,
+                          max_retries=args.max_retries,
+                          stop_after=args.stop_after)
+        b = res.best
+        print(f"{len(res.trials)} trials; best {_fmt_best(b.objective)} "
+              f"config={b.config if b.ok else None}")
+        return 0
+
+    if args.cmd == "resume":
+        if not store.exists(args.session):
+            print(f"error: no session {args.session!r} in {store.root}",
+                  file=sys.stderr)
+            return 2
+        res = resume_session(args.session, store, workers=args.workers)
+        b = res.best
+        print(f"session {args.session}: {len(res.trials)} trials; "
+              f"best {_fmt_best(b.objective)}")
+        return 0
+
+    return 2  # pragma: no cover — argparse enforces the subcommand
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

@@ -1,0 +1,194 @@
+"""The session runner: batched ask/tell over a worker pool, with resume.
+
+The loop generalizes ``run_tuner`` (same budget accounting, dedup cache and
+stall guard) to batches:
+
+1. ask the tuner for a batch (its declared safe width, capped by the
+   remaining budget),
+2. resolve each asked config against the dedup cache and the resume
+   journal, evaluate the genuinely new ones in parallel,
+3. journal the fresh evaluations, then tell the whole batch back *in ask
+   order* and append the budget-consuming trials to the trace.
+
+Determinism: batch width depends only on the tuner (not on worker count or
+completion timing) and results are told in ask order, so a session's
+trajectory is a pure function of (spec, tuner) — the property that makes
+resume exact.  Resume replays the journal *through the tuner*: re-asked
+journaled configs are answered from disk (consuming budget, not hardware),
+which reconstructs the tuner's RNG state and then continues with fresh
+evaluations.  For ask-independent tuners (random, grid) the parallel trace
+is bit-for-bit identical to serial ``run_tuner``; sequential tuners
+(``max_parallel_asks == 1``) degrade to the serial protocol exactly.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+from ..core.problem import TunableProblem
+from ..core.tuners import TUNERS
+from ..core.tuners.base import Tuner, TuneResult
+from .registry import make_problem
+from .session import DONE, FAILED, INTERRUPTED, RUNNING, SessionSpec
+from .store import SessionStore
+from .workers import WorkerPool
+
+#: batch width for tuners with unbounded parallel asks.  A constant — never
+#: derived from worker count — so the ask stream, budget accounting, and
+#: journal are identical at any parallelism (a worker-scaled width would
+#: change, e.g., how many post-exhaustion grid fallbacks a unique=False
+#: session records).
+_UNBOUNDED_BATCH = 16
+
+
+def _batch_cap(tuner: Tuner) -> int:
+    if tuner.max_parallel_asks is None:
+        return _UNBOUNDED_BATCH
+    return max(1, tuner.max_parallel_asks)
+
+
+def run_session(spec: SessionSpec, *, problem: TunableProblem | None = None,
+                tuner: Tuner | None = None, store: SessionStore | None = None,
+                pool: WorkerPool | None = None, workers: int | None = None,
+                mode: str = "auto", max_retries: int = 2,
+                stop_after: int | None = None,
+                on_batch: Callable[[TuneResult], None] | None = None
+                ) -> TuneResult:
+    """Run (or resume) one tuning session; returns the full trace.
+
+    ``problem``/``tuner`` default to registry/``TUNERS`` lookups from the
+    spec.  With a ``store``, every completed batch is journaled so the
+    session survives a kill; an existing journal is replayed first.
+    ``stop_after`` ends the run at the first batch boundary with at least
+    that many trials recorded (checkpoint-and-stop — also how tests
+    simulate a crash).
+    """
+    if problem is None:
+        problem = make_problem(spec.problem, **spec.problem_kwargs)
+    if tuner is None:
+        if spec.tuner not in TUNERS:
+            raise KeyError(f"unknown tuner {spec.tuner!r}; "
+                           f"registered: {', '.join(sorted(TUNERS))}")
+        tuner = TUNERS[spec.tuner](problem.space, seed=spec.seed,
+                                   **spec.tuner_kwargs)
+    workers = spec.workers if workers is None else workers
+    space = problem.space
+    res = TuneResult(tuner.name, problem.name, spec.arch, spec.seed)
+
+    sid = None
+    replay: dict[int, list] = {}       # key -> [trial, remaining_count]
+    if store is not None:
+        sid = store.create(spec)
+        for key, t in store.load_journal(sid, space, spec.arch):
+            if key in replay:
+                replay[key][1] += 1
+            else:
+                replay[key] = [t, 1]
+        store.update_meta(sid, status=RUNNING)
+
+    own_pool = pool is None
+    if pool is None:
+        pool = WorkerPool(problem, spec.arch, workers=workers, mode=mode,
+                          max_retries=max_retries)
+
+    cache: dict[int, object] = {}
+    cap = _batch_cap(tuner)
+    asks = 0
+    stopped_early = False
+    try:
+        while len(res.trials) < spec.budget and asks < 50 * spec.budget:
+            if tuner.finished():
+                break
+            if stop_after is not None and len(res.trials) >= stop_after:
+                stopped_early = True
+                break
+            # stop_after checks at batch boundaries only (loop top) and never
+            # reshapes batches: truncating a batch would shift the generation
+            # boundaries of population tuners, making the resumed trajectory
+            # diverge from the never-interrupted one.  A real kill has the
+            # same semantics — only whole journaled batches survive.
+            n = min(cap, spec.budget - len(res.trials))
+            cfgs = tuner.ask_batch(n)
+            asks += len(cfgs)
+
+            keys = [space.flat_index(c) for c in cfgs]
+            results: list = [None] * len(cfgs)
+            consume = [False] * len(cfgs)
+            fresh: list[int] = []          # positions to actually evaluate
+            first_seen: dict[int, int] = {}
+            for j, key in enumerate(keys):
+                if key in cache:
+                    results[j] = cache[key]
+                    consume[j] = not spec.unique
+                elif key in replay:        # answered from the journal
+                    entry = replay[key]
+                    entry[1] -= 1
+                    if entry[1] <= 0:
+                        del replay[key]
+                    cache[key] = entry[0]
+                    results[j] = entry[0]
+                    consume[j] = True      # consumed budget in the prior run
+                elif key in first_seen:    # intra-batch duplicate
+                    consume[j] = not spec.unique
+                else:
+                    first_seen[key] = j
+                    fresh.append(j)
+
+            evaluated = pool.evaluate([cfgs[j] for j in fresh]) if fresh else []
+            journal_records = []
+            for j, t in zip(fresh, evaluated):
+                cache[keys[j]] = t
+                results[j] = t
+                consume[j] = True
+                journal_records.append((keys[j], t))
+            for j in range(len(cfgs)):     # resolve intra-batch duplicates
+                if results[j] is None:
+                    results[j] = cache[keys[j]]
+
+            if store is not None and journal_records:
+                store.append_trials(sid, space, journal_records)
+            tuner.tell_batch(results)
+            for j in range(len(cfgs)):
+                if consume[j]:
+                    res.trials.append(results[j])
+
+            if store is not None:
+                b = res.best
+                store.update_meta(
+                    sid, evaluated=len(res.trials),
+                    best=None if not math.isfinite(b.objective) else b.objective)
+            if on_batch is not None:
+                on_batch(res)
+    except BaseException:
+        # never leave a dead session looking alive; the journal keeps every
+        # completed batch, so a failed session resumes like any other
+        if store is not None:
+            store.update_meta(sid, status=FAILED)
+        raise
+    finally:
+        if own_pool:
+            pool.close()
+
+    if store is not None:
+        if stopped_early:
+            store.update_meta(sid, status=INTERRUPTED)
+        else:
+            store.update_meta(sid, status=DONE, evaluated=len(res.trials))
+            store.publish_trace(sid, problem, res)
+    return res
+
+
+def resume_session(sid: str, store: SessionStore, *,
+                   workers: int | None = None, mode: str = "auto",
+                   max_retries: int = 2,
+                   stop_after: int | None = None) -> TuneResult:
+    """Continue an interrupted session from its journal.
+
+    The spec (including worker count, hence the batch schedule) comes from
+    the store, so the replayed prefix matches the original run exactly and
+    no journaled config is ever re-evaluated.
+    """
+    spec = store.load_spec(sid)
+    return run_session(spec, store=store, workers=workers, mode=mode,
+                       max_retries=max_retries, stop_after=stop_after)

@@ -1,0 +1,72 @@
+"""Tuning sessions — the orchestrator's unit of work.
+
+A :class:`SessionSpec` names one tuning run: problem × tuner × arch ×
+budget × seed (plus tuner kwargs and the evaluation-parallelism settings
+that make the run reproducible).  The spec is pure data — JSON-serializable,
+content-addressed (``session_id``) — so a campaign can be submitted, killed
+and resumed across processes and machines.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import dataclass, field
+from typing import Any
+
+#: lifecycle states persisted in the session store
+CREATED, RUNNING, INTERRUPTED, DONE, FAILED = (
+    "created", "running", "interrupted", "done", "failed")
+
+
+@dataclass
+class SessionSpec:
+    """One tuning run, fully described by data.
+
+    ``workers`` is the session's stored evaluation parallelism (the CLI can
+    override it at resume time).  It never affects the trajectory: batch
+    width is set by the tuner alone, so any worker count replays the same
+    ask stream, budget accounting, and journal.
+    """
+
+    problem: str
+    tuner: str
+    arch: str = "v5e"
+    budget: int = 100
+    seed: int = 0
+    workers: int = 4
+    unique: bool = True
+    tuner_kwargs: dict[str, Any] = field(default_factory=dict)
+    problem_kwargs: dict[str, Any] = field(default_factory=dict)
+
+    # -- identity --------------------------------------------------------- #
+    def canonical(self) -> dict:
+        return {
+            "problem": self.problem, "tuner": self.tuner, "arch": self.arch,
+            "budget": int(self.budget), "seed": int(self.seed),
+            "workers": int(self.workers), "unique": bool(self.unique),
+            "tuner_kwargs": dict(sorted(self.tuner_kwargs.items())),
+            "problem_kwargs": dict(sorted(self.problem_kwargs.items())),
+        }
+
+    @property
+    def session_id(self) -> str:
+        """Content-addressed id: stable across processes, unique per spec."""
+        blob = json.dumps(self.canonical(), sort_keys=True).encode()
+        h = hashlib.sha1(blob).hexdigest()[:8]
+        return (f"{self.problem}-{self.tuner}-{self.arch}"
+                f"-b{self.budget}-s{self.seed}-{h}")
+
+    # -- (de)serialization ------------------------------------------------ #
+    def to_json(self) -> dict:
+        return self.canonical()
+
+    @staticmethod
+    def from_json(d: dict) -> "SessionSpec":
+        return SessionSpec(
+            problem=d["problem"], tuner=d["tuner"], arch=d.get("arch", "v5e"),
+            budget=int(d.get("budget", 100)), seed=int(d.get("seed", 0)),
+            workers=int(d.get("workers", 4)),
+            unique=bool(d.get("unique", True)),
+            tuner_kwargs=dict(d.get("tuner_kwargs", {})),
+            problem_kwargs=dict(d.get("problem_kwargs", {})))

@@ -1,0 +1,155 @@
+"""Session persistence: crash-safe journals + finished traces in ResultsDB.
+
+Layout (one directory per session under the store root)::
+
+    <root>/<session_id>/meta.json      # spec + status + progress counters
+    <root>/<session_id>/trials.jsonl   # append-only evaluation journal
+    <root>/tables/                     # ResultsDB: finished session traces
+
+The journal is the resume mechanism: one line per *budget-consuming*
+evaluation, appended (and flushed) as batches complete.  A killed session
+loses at most the in-flight batch; on resume the runner replays the journal
+through the tuner — journaled configs are answered from the journal instead
+of being re-evaluated, which reconstructs the tuner's RNG state and the
+trial trace exactly, then continues with fresh evaluations.
+
+Finished sessions additionally publish their full trace as a
+:class:`ResultTable` through :class:`ResultsDB` (protocol
+``session_<id>``), so campaign analyses read tuning traces through the same
+cache layer as the paper's exhaustive/sampled tables.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from pathlib import Path
+from typing import Iterable
+
+from ..core.problem import Trial, TunableProblem
+from ..core.results import ResultsDB, ResultTable
+from ..core.space import SearchSpace
+from ..core.tuners.base import TuneResult
+from .session import CREATED, SessionSpec
+
+
+class SessionStore:
+    """Directory-backed session state with atomic metadata updates."""
+
+    def __init__(self, root: str | Path):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.tables = ResultsDB(self.root / "tables")
+
+    # -- paths ------------------------------------------------------------ #
+    def _dir(self, sid: str) -> Path:
+        return self.root / sid
+
+    def _meta_path(self, sid: str) -> Path:
+        return self._dir(sid) / "meta.json"
+
+    def _journal_path(self, sid: str) -> Path:
+        return self._dir(sid) / "trials.jsonl"
+
+    def exists(self, sid: str) -> bool:
+        return self._meta_path(sid).exists()
+
+    def list_sessions(self) -> list[str]:
+        return sorted(p.parent.name for p in self.root.glob("*/meta.json"))
+
+    # -- lifecycle -------------------------------------------------------- #
+    def create(self, spec: SessionSpec) -> str:
+        """Register a session (idempotent): returns its id."""
+        sid = spec.session_id
+        d = self._dir(sid)
+        d.mkdir(parents=True, exist_ok=True)
+        if not self._meta_path(sid).exists():
+            self._write_meta(sid, {
+                "spec": spec.to_json(), "status": CREATED,
+                "evaluated": 0, "best": None,
+                "created_at": time.time(), "updated_at": time.time()})
+        return sid
+
+    def load_spec(self, sid: str) -> SessionSpec:
+        return SessionSpec.from_json(self.meta(sid)["spec"])
+
+    def meta(self, sid: str) -> dict:
+        return json.loads(self._meta_path(sid).read_text())
+
+    def _write_meta(self, sid: str, meta: dict) -> None:
+        p = self._meta_path(sid)
+        tmp = p.with_suffix(".tmp")
+        tmp.write_text(json.dumps(meta, indent=1, sort_keys=True))
+        os.replace(tmp, p)            # atomic: readers never see a torn file
+
+    def update_meta(self, sid: str, **fields) -> dict:
+        meta = self.meta(sid)
+        meta.update(fields)
+        meta["updated_at"] = time.time()
+        self._write_meta(sid, meta)
+        return meta
+
+    # -- journal ---------------------------------------------------------- #
+    def append_trials(self, sid: str, space: SearchSpace,
+                      trials: Iterable[tuple[int, Trial]]) -> None:
+        """Append (key, trial) records and fsync — the crash-safety point."""
+        lines = []
+        for key, t in trials:
+            rec = {"k": key, "c": list(space.encode(t.config)),
+                   "o": None if not math.isfinite(t.objective) else t.objective,
+                   "v": bool(t.valid)}
+            if "error" in t.info:
+                rec["e"] = str(t.info["error"])
+            lines.append(json.dumps(rec, separators=(",", ":")))
+        if not lines:
+            return
+        with open(self._journal_path(sid), "ab+") as f:
+            # a crash mid-append can leave a torn final line; never glue new
+            # records onto it — the torn line must stay its own (skippable) line
+            if f.tell() > 0:
+                f.seek(-1, os.SEEK_END)
+                if f.read(1) != b"\n":
+                    f.write(b"\n")
+            f.write(("\n".join(lines) + "\n").encode())
+            f.flush()
+            os.fsync(f.fileno())
+
+    def load_journal(self, sid: str, space: SearchSpace,
+                     arch: str = "v5e") -> list[tuple[int, Trial]]:
+        """Journaled evaluations in original ask order.
+
+        A crash mid-append can tear one line (append_trials guarantees the
+        tear never merges with later records); torn lines are skipped — the
+        one lost evaluation is simply redone — and everything else replays.
+        """
+        p = self._journal_path(sid)
+        if not p.exists():
+            return []
+        out: list[tuple[int, Trial]] = []
+        for line in p.read_text().splitlines():
+            if not line.strip():
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue               # torn line from a crash mid-append
+            cfg = space.decode(rec["c"])
+            obj = math.inf if rec["o"] is None else float(rec["o"])
+            info = {"journaled": True}
+            if "e" in rec:
+                info["error"] = rec["e"]
+            out.append((int(rec["k"]),
+                        Trial(cfg, obj, arch, valid=bool(rec["v"]), info=info)))
+        return out
+
+    # -- finished traces --------------------------------------------------- #
+    def publish_trace(self, sid: str, problem: TunableProblem,
+                      result: TuneResult) -> Path:
+        """Write the completed trace as a ResultTable through ResultsDB."""
+        table = ResultTable.from_trials(problem, result.arch, result.trials,
+                                        protocol=f"session_{sid}")
+        table.meta = {"tuner": result.tuner, "seed": result.seed,
+                      "session": sid}
+        return self.tables.put(table)

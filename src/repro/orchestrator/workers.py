@@ -1,0 +1,170 @@
+"""Worker pool: parallel config evaluation with fault isolation.
+
+Two execution modes, chosen automatically:
+
+* ``thread`` — for analytical problems (the TPU cost model).  Chunks of the
+  batch go through ``TunableProblem.evaluate_many`` (the vectorized fast
+  path), one chunk per worker thread.
+* ``process`` — for :class:`MeasuredProblem` (wall-clock measurement), where
+  a worker can take down its interpreter (OOM, crashing kernel build) and
+  measurements must not contend on the GIL.  The problem must be picklable.
+
+Fault handling: a chunk that raises is retried config-by-config through a
+:class:`JobQueue`; a config that keeps raising past the retry cap is
+*poisoned* — returned as an invalid :class:`Trial` carrying the error, so
+one bad config can never wedge a session.
+"""
+
+from __future__ import annotations
+
+import math
+from concurrent.futures import (FIRST_COMPLETED, BrokenExecutor, Executor,
+                                ProcessPoolExecutor, ThreadPoolExecutor, wait)
+from typing import Sequence
+
+from ..core.problem import MeasuredProblem, Trial, TunableProblem
+from ..core.space import Config
+from .queue import DONE, JobQueue
+
+
+def _evaluate_chunk(problem: TunableProblem, configs: list[Config],
+                    arch: str) -> list[Trial]:
+    # module-level so the process pool can pickle it
+    return problem.evaluate_many(configs, arch)
+
+
+def _evaluate_one(problem: TunableProblem, config: Config, arch: str) -> Trial:
+    return problem.evaluate(config, arch)
+
+
+class WorkerPool:
+    """Evaluates batches of configs for one problem on one arch.
+
+    Results always come back in input order regardless of completion order —
+    the property the session runner relies on for determinism.
+    """
+
+    def __init__(self, problem: TunableProblem, arch: str, workers: int = 4,
+                 mode: str = "auto", max_retries: int = 2):
+        if mode == "auto":
+            mode = "process" if isinstance(problem, MeasuredProblem) else "thread"
+        if mode not in ("thread", "process"):
+            raise ValueError(f"unknown worker mode {mode!r}")
+        self.problem = problem
+        self.arch = arch
+        self.workers = max(1, int(workers))
+        self.mode = mode
+        self.max_retries = max_retries
+        self._ex: Executor | None = None
+
+    # -- lifecycle -------------------------------------------------------- #
+    def _executor(self) -> Executor:
+        if self._ex is None:
+            cls = (ProcessPoolExecutor if self.mode == "process"
+                   else ThreadPoolExecutor)
+            self._ex = cls(max_workers=self.workers)
+        return self._ex
+
+    def _rebuild(self) -> Executor:
+        """Replace a broken executor (a worker OOM/segfault kills the whole
+        ProcessPoolExecutor, not just its job)."""
+        if self._ex is not None:
+            self._ex.shutdown(wait=False)
+            self._ex = None
+        return self._executor()
+
+    def close(self) -> None:
+        if self._ex is not None:
+            self._ex.shutdown(wait=True)
+            self._ex = None
+
+    def __enter__(self) -> "WorkerPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- evaluation ------------------------------------------------------- #
+    def evaluate(self, configs: Sequence[Config],
+                 arch: str | None = None) -> list[Trial]:
+        """Evaluate ``configs`` in parallel; ordered, fault-isolated."""
+        configs = list(configs)
+        if not configs:
+            return []
+        arch = arch or self.arch
+        ex = self._executor()
+
+        # 1. chunked fast path: one evaluate_many per worker
+        n_chunks = min(self.workers, len(configs))
+        bounds = [round(i * len(configs) / n_chunks) for i in range(n_chunks + 1)]
+        spans = [(bounds[i], bounds[i + 1]) for i in range(n_chunks)
+                 if bounds[i] < bounds[i + 1]]
+        futs = [ex.submit(_evaluate_chunk, self.problem,
+                          configs[lo:hi], arch) for lo, hi in spans]
+        out: list[Trial | None] = [None] * len(configs)
+        retry: list[int] = []
+        broken = False
+        for (lo, hi), fut in zip(spans, futs):
+            try:
+                out[lo:hi] = fut.result()
+            except BrokenExecutor:
+                retry.extend(range(lo, hi))
+                broken = True
+            except Exception:
+                retry.extend(range(lo, hi))   # isolate the poison config(s)
+
+        # 2. per-config retry path through the job queue
+        if retry:
+            if broken:
+                ex = self._rebuild()
+            self._evaluate_with_retries(configs, retry, out, arch, ex)
+        return out  # type: ignore[return-value]
+
+    def _evaluate_with_retries(self, configs: list[Config], indices: list[int],
+                               out: list, arch: str, ex: Executor) -> None:
+        queue = JobQueue(self.max_retries)
+        for i in indices:
+            queue.submit(i, configs[i])       # key == batch index: unique
+
+        running = {}
+
+        def launch() -> None:
+            nonlocal ex
+            while True:
+                job = queue.take()
+                if job is None:
+                    return
+                try:
+                    fut = ex.submit(_evaluate_one, self.problem, job.config,
+                                    arch)
+                except BrokenExecutor:
+                    ex = self._rebuild()
+                    fut = ex.submit(_evaluate_one, self.problem, job.config,
+                                    arch)
+                running[fut] = job
+
+        launch()
+        while running:
+            done, _ = wait(list(running), return_when=FIRST_COMPLETED)
+            for fut in done:
+                job = running.pop(fut)
+                err = fut.exception()
+                if err is None:
+                    queue.complete(job, fut.result())
+                else:
+                    # a BrokenExecutor here also fails innocent in-flight
+                    # jobs; their retries run on the rebuilt pool.  Attempts
+                    # are counted for everyone so a config that kills its
+                    # worker every time still terminates as poisoned.
+                    queue.fail(job, repr(err))   # requeue or poison
+            launch()
+
+        for i in indices:
+            job = queue.job(i)
+            if job is not None and job.state == DONE:
+                out[i] = job.result
+            else:
+                out[i] = Trial(configs[i], math.inf, arch, valid=False,
+                               info={"error": job.error if job else "lost",
+                                     "poison": True,
+                                     "attempts": job.attempts if job else 0})

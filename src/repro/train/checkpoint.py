@@ -36,10 +36,16 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
 
-_ZC = zstandard.ZstdCompressor(level=3)
-_ZD = zstandard.ZstdDecompressor()
+from ..core.compression import compress, decompress
+
+
+def _compress(payload: bytes) -> bytes:
+    return compress(payload, level=3)
+
+
+def _decompress(blob: bytes) -> bytes:
+    return decompress(blob, what="checkpoint shard")
 
 
 # ------------------------------------------------------------------ #
@@ -82,7 +88,7 @@ def save(root: str | Path, step: int, tree: Any, *, extra: dict | None = None,
         raw = np.ascontiguousarray(a).tobytes()
         metas.append(dict(_leaf_meta(a), offset=len(payload), nbytes=len(raw)))
         payload.extend(raw)
-    blob = _ZC.compress(bytes(payload))
+    blob = _compress(bytes(payload))
     (tmp / "shard_00000.bin.zst").write_bytes(blob)
     meta = {
         "step": step,
@@ -146,7 +152,7 @@ def restore(root: str | Path, like: Any, *, step: int | None = None,
     blob = (d / "shard_00000.bin.zst").read_bytes()
     if zlib.crc32(blob) != meta["crc32"]:
         raise IOError(f"checkpoint {d} failed crc32 integrity check")
-    payload = _ZD.decompress(blob)
+    payload = _decompress(blob)
 
     leaves_like, treedef = _flatten(like)
     if len(leaves_like) != len(meta["leaves"]):
