@@ -17,6 +17,7 @@ from pathlib import Path
 
 from repro.core.costmodel import ARCH_NAMES
 from repro.core.results import ResultsDB, ResultTable
+from repro.core.spacetable import set_cache_dir
 from repro.kernels.attention.space import AttentionProblem
 from repro.kernels.conv2d.space import Conv2dProblem
 from repro.kernels.dedisp.space import DedispProblem
@@ -29,6 +30,12 @@ from repro.kernels.pnpoly.space import PnpolyProblem
 ROOT = Path(__file__).resolve().parents[1]
 DB_DIR = ROOT / "experiments" / "results_db"
 OUT_DIR = ROOT / "experiments" / "benchmarks"
+SPACE_CACHE = ROOT / "experiments" / "space_cache"
+
+# exhaustive-table cache: compiled valid-row masks + CSR neighbor tables
+# persist here (one .npz per space fingerprint), so re-running figures skips
+# the constraint sweep and neighbor-table build entirely
+set_cache_dir(SPACE_CACHE)
 
 #: benchmark -> (problem factory, protocol)   [paper §V-A]
 BENCHMARKS = {

@@ -1,0 +1,185 @@
+"""Compiled-space engine microbenchmark: iterator path vs CompiledSpace.
+
+Measures, per benchmark space, the three stages the engine replaced:
+
+* **enumerate** — materialize the constrained space as encoded rows.
+  Legacy: ``SearchSpace.enumerate`` (per-config dicts + per-config
+  ``satisfies``) followed by per-config ``encode`` (what
+  ``ResultTable.from_trials`` and the dict-FFG consumed).  Compiled:
+  ``CompiledSpace.build`` (vectorized constraint mask) + the code matrix of
+  the valid rows.
+* **ffg** — fitness-flow-graph construction from the exhaustive table.
+  Legacy: ``build_ffg_reference`` (dict-of-tuples double loop), paid per
+  architecture.  Compiled: ``build_ffg`` — timed **cold** (first call on a
+  freshly compiled space, which builds the CSR neighbor table) and **warm**
+  (subsequent architectures reuse the arch-independent CSR).  The combined
+  number amortizes over the paper's four-architecture protocol:
+  ``(enum_legacy + A*ffg_legacy) / (enum_compiled + ffg_cold +
+  (A-1)*ffg_warm)`` with ``A = len(ARCH_NAMES)`` — exactly the work fig3
+  does per benchmark.
+* **evaluate** — cost-model evaluation of the full valid set.  Legacy:
+  per-config ``evaluate``.  Compiled: ``evaluate_many`` (FeatureBatch
+  struct-of-arrays fast path).
+
+Both paths are verified to produce identical rows/edges/minima/objectives
+before timing (the equality half of the acceptance criterion; the property
+tests in tests/test_spacetable.py cover the general case).  Results land in
+``BENCH_space.json`` at the repo root; the combined enumerate+ffg speedup on
+the largest exhaustive space (gemm) is the headline number.
+
+Usage:  python -m benchmarks.space_bench [--smoke]
+``--smoke`` restricts to the two smallest spaces (CI guard against engine
+regressions; asserts the paths still agree and the speedup stays > 1).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.core.analysis.centrality import build_ffg, build_ffg_reference
+from repro.core.costmodel import ARCH_NAMES
+from repro.core.results import ResultTable
+from repro.core.space import SearchSpace
+from repro.core.spacetable import CompiledSpace, set_cache_dir
+
+from .common import BENCHMARKS, ROOT, emit
+
+# benchmarks.common enables the on-disk table cache for the figure modules;
+# here it must be OFF or CompiledSpace.build would time an npz *load*
+# instead of the vectorized constraint sweep it claims to measure
+set_cache_dir(None)
+
+#: spaces benchmarked: the paper-protocol exhaustive set, largest (gemm)
+#: last so its combined number is the headline
+SPACES = ("pnpoly", "hotspot", "conv2d", "gemm")
+SMOKE_SPACES = ("pnpoly", "conv2d")
+ARCH = "v5e"
+OUT_PATH = ROOT / "BENCH_space.json"
+
+
+def _fresh(space: SearchSpace) -> SearchSpace:
+    """Uncompiled copy: the legacy iterator-path reference instance."""
+    return SearchSpace(space.params, space.constraints, name=space.name)
+
+
+def _best_of(fn, repeats: int = 3) -> tuple[float, object]:
+    best, out = np.inf, None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def bench_space(name: str, repeats: int = 3) -> dict:
+    factory, _ = BENCHMARKS[name]
+    prob = factory()
+    space = prob.space
+
+    # -- enumerate: encoded valid rows ---------------------------------- #
+    def legacy_enum():
+        s = _fresh(space)
+        return [s.encode(c) for c in s.enumerate(constrained=True)]
+
+    def compiled_enum():
+        comp = CompiledSpace.build(space)       # rebuild: no cached mask
+        return CompiledSpace.codes_for(space, comp.valid_rows)
+
+    t_enum_legacy, rows_legacy = _best_of(legacy_enum, repeats)
+    t_enum_comp, rows_comp = _best_of(compiled_enum, repeats)
+    assert [tuple(r) for r in rows_comp.tolist()] == rows_legacy, name
+
+    # -- evaluate: full valid set through the cost model ----------------- #
+    comp = space.compiled()
+    cfgs = comp.valid_configs()
+
+    def legacy_eval():
+        return [prob.evaluate(c, ARCH) for c in cfgs]
+
+    def compiled_eval():
+        return prob.evaluate_many(cfgs, ARCH)
+
+    t_eval_legacy, trials_legacy = _best_of(legacy_eval, 1)
+    t_eval_comp, trials_comp = _best_of(compiled_eval, repeats)
+    assert [t.objective for t in trials_comp] \
+        == [t.objective for t in trials_legacy], name
+
+    # -- ffg: exhaustive fitness-flow graph ------------------------------ #
+    table = ResultTable.from_trials(prob, ARCH, trials_comp, "exhaustive")
+    t_ffg_legacy, ref = _best_of(lambda: build_ffg_reference(space, table),
+                                 repeats)
+
+    def ffg_cold():
+        # fresh compiled space: the timing includes the one-time CSR
+        # neighbor-table build (the cost the first architecture pays)
+        s = _fresh(space)
+        s.compiled()
+        return build_ffg(s, table)
+
+    t_ffg_cold, vec = _best_of(ffg_cold, repeats)
+    build_ffg(space, table)           # warm the CSR on the shared space
+    t_ffg_warm, _ = _best_of(lambda: build_ffg(space, table), repeats)
+    assert ref.n == vec.n and np.array_equal(ref.src, vec.src) \
+        and np.array_equal(ref.dst, vec.dst) \
+        and np.array_equal(ref.fitness, vec.fitness) \
+        and np.array_equal(ref.minima, vec.minima), name
+
+    n_archs = len(ARCH_NAMES)
+    combined = ((t_enum_legacy + n_archs * t_ffg_legacy)
+                / (t_enum_comp + t_ffg_cold + (n_archs - 1) * t_ffg_warm))
+    res = {
+        "cardinality": space.cardinality,
+        "n_valid": comp.n_valid,
+        "ffg_nodes": int(vec.n),
+        "ffg_edges": int(len(vec.src)),
+        "enumerate": {"legacy_s": t_enum_legacy, "compiled_s": t_enum_comp,
+                      "speedup": t_enum_legacy / t_enum_comp},
+        "ffg": {"legacy_s": t_ffg_legacy, "compiled_cold_s": t_ffg_cold,
+                "compiled_warm_s": t_ffg_warm,
+                "speedup_cold": t_ffg_legacy / t_ffg_cold,
+                "speedup_warm": t_ffg_legacy / t_ffg_warm},
+        "evaluate": {"legacy_s": t_eval_legacy, "compiled_s": t_eval_comp,
+                     "speedup": t_eval_legacy / t_eval_comp},
+        "n_archs_amortized": n_archs,
+        "enumerate_ffg_combined_speedup": combined,
+        "identical": True,
+    }
+    emit(f"space_bench/{name}",
+         (t_enum_comp + t_ffg_cold) * 1e6,
+         f"combined_speedup={combined:.1f}x;eval_speedup="
+         f"{t_eval_legacy / t_eval_comp:.1f}x")
+    return res
+
+
+def run(smoke: bool = False) -> dict:
+    names = SMOKE_SPACES if smoke else SPACES
+    out = {
+        "arch": ARCH,
+        "protocol": ("smoke" if smoke else "full"),
+        "spaces": {},
+    }
+    for name in names:
+        out["spaces"][name] = bench_space(name, repeats=1 if smoke else 3)
+    headline = names[-1]
+    out["headline"] = {
+        "space": headline,
+        "enumerate_ffg_combined_speedup":
+            out["spaces"][headline]["enumerate_ffg_combined_speedup"],
+    }
+    if smoke:
+        # CI regression guard: paths must agree (asserted above) and the
+        # compiled engine must not regress below the iterator path
+        for name, st in out["spaces"].items():
+            assert st["enumerate_ffg_combined_speedup"] > 1.0, name
+    else:
+        OUT_PATH.write_text(json.dumps(out, indent=2) + "\n")
+        print(f"wrote {OUT_PATH}")
+    return out
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv[1:])

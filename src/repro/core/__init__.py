@@ -6,17 +6,20 @@ model, eight tuners, the results database, and the landscape analyses
 """
 
 from .costmodel import (ARCH_NAMES, DEFAULT_ARCH, TPU_GENERATIONS,
-                        KernelFeatures, estimate_seconds,
-                        estimate_seconds_many)
+                        FeatureBatch, KernelFeatures, estimate_seconds,
+                        estimate_seconds_batch, estimate_seconds_many)
 from .problem import FunctionProblem, MeasuredProblem, Trial, TunableProblem
 from .results import ResultsDB, ResultTable
 from .space import Config, Constraint, Param, SearchSpace, powers_of_two
+from .spacetable import CompiledSpace, set_cache_dir
 
 __all__ = [
     "SearchSpace", "Param", "Constraint", "Config", "powers_of_two",
+    "CompiledSpace", "set_cache_dir",
     "TunableProblem", "FunctionProblem", "MeasuredProblem", "Trial",
     "ResultsDB", "ResultTable",
-    "KernelFeatures", "estimate_seconds", "estimate_seconds_many",
+    "KernelFeatures", "FeatureBatch", "estimate_seconds",
+    "estimate_seconds_batch", "estimate_seconds_many",
     "TPU_GENERATIONS",
     "ARCH_NAMES", "DEFAULT_ARCH",
 ]

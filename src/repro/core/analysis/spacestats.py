@@ -17,19 +17,23 @@ from ..space import SearchSpace
 def space_stats(problem: TunableProblem, archs: tuple[str, ...] = ("v5e",),
                 exhaustive_limit: int = 300_000,
                 sample_n: int = 4000) -> dict:
+    """Cardinality accounting, exact wherever the compiled table reaches.
+
+    'Constrained' comes straight from the compiled valid-row mask whenever
+    the cross product fits the compile limit (so spaces the sampling
+    estimator previously approximated are now exact); the per-arch 'Valid'
+    column needs a cost-model evaluation per constrained config and stays
+    exhaustive only under ``exhaustive_limit``.
+    """
     sp = problem.space
     card = sp.cardinality
     out = {"problem": problem.name, "cardinality": card}
 
-    if card <= exhaustive_limit:
-        constrained = sp.constrained_cardinality()
-        out["constrained"] = constrained
-        valid = {}
-        for a in archs:
-            nv = sum(1 for t in problem.exhaustive(a) if t.ok)
-            valid[a] = nv
-        out["valid"] = valid
-        out["exact"] = True
+    comp = sp.compiled()
+    if comp is not None:
+        out["constrained"] = comp.n_valid
+    elif card <= exhaustive_limit:
+        out["constrained"] = sp.constrained_cardinality()
     else:
         # estimate the constrained fraction by sampling the raw cross product
         import random
@@ -40,20 +44,28 @@ def space_stats(problem: TunableProblem, archs: tuple[str, ...] = ("v5e",),
             if sp.satisfies(cfg):
                 hits += 1
         out["constrained"] = int(card * hits / sample_n)
-        valid = {}
+
+    exact_constrained = comp is not None or card <= exhaustive_limit
+    valid = {}
+    if exact_constrained and out["constrained"] <= exhaustive_limit:
+        for a in archs:
+            valid[a] = sum(1 for t in problem.exhaustive(a) if t.ok)
+        out["exact"] = True
+    else:
         for a in archs:
             trials = problem.sampled(min(sample_n, 2000), 0, a)
             frac = sum(t.ok for t in trials) / max(1, len(trials))
             valid[a] = int(out["constrained"] * frac)
-        out["valid"] = valid
         out["exact"] = False
+    out["valid"] = valid
     return out
 
 
 def reduced_stats(space: SearchSpace, reduced: SearchSpace,
                   exhaustive_limit: int = 300_000) -> dict:
     out = {"reduced": reduced.cardinality}
-    if reduced.cardinality <= exhaustive_limit:
+    if reduced.compiled() is not None \
+            or reduced.cardinality <= exhaustive_limit:
         out["reduce_constrained"] = reduced.constrained_cardinality()
     else:
         import random

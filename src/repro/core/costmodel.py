@@ -196,39 +196,76 @@ def estimate_seconds(features: KernelFeatures, arch: str = DEFAULT_ARCH) -> floa
     return t_body + t_grid + gen.launch_overhead_s + f.extra_seconds
 
 
-def estimate_seconds_many(features: Sequence[KernelFeatures],
-                          arch: str = DEFAULT_ARCH) -> list[float]:
-    """Vectorized :func:`estimate_seconds` over a batch of feature sets.
+class FeatureBatch:
+    """Struct-of-arrays view of a batch of :class:`KernelFeatures`.
+
+    ``estimate_seconds_many`` used to rebuild ~15 numpy columns from
+    per-field Python lambdas on every call; a ``FeatureBatch`` carries the
+    columns directly, built in one pass (:meth:`from_features`) or supplied
+    natively by a problem's vectorized ``features_many`` override.  All
+    columns are float64 of equal length.
+    """
+
+    #: column order of the packed matrix built by :meth:`from_features`
+    FIELDS = ("vmem_working_set", "dtype_bytes", "mxu_flops", "vpu_flops",
+              "transcendental_ops", "hbm_bytes", "gather_bytes", "grid_steps",
+              "serialization", "extra_seconds", "tile_m", "tile_n", "tile_k",
+              "lane_extent", "sublane_extent", "unroll", "inner_trip")
+
+    __slots__ = FIELDS + ("n", "features")
+
+    def __init__(self, *, features: Sequence[KernelFeatures] = (), **columns):
+        import numpy as np
+        n = None
+        for name in self.FIELDS:
+            col = np.asarray(columns[name], dtype=np.float64)
+            setattr(self, name, col)
+            if n is None:
+                n = len(col)
+            elif len(col) != n:
+                raise ValueError(f"column {name!r}: length {len(col)} != {n}")
+        self.n = n or 0
+        #: optional per-row source features (kept for ``Trial.info``)
+        self.features = tuple(features)
+
+    @staticmethod
+    def from_features(features: Sequence[KernelFeatures]) -> "FeatureBatch":
+        """Pack per-config features into columns in a single pass."""
+        import numpy as np
+        rows = [(f.vmem_working_set, f.dtype_bytes, f.mxu_flops, f.vpu_flops,
+                 f.transcendental_ops, f.hbm_bytes, f.gather_bytes,
+                 f.grid_steps, f.serialization, f.extra_seconds,
+                 max(1, int(f.mxu_tile[0])), max(1, int(f.mxu_tile[1])),
+                 max(1, int(f.mxu_tile[2])), f.lane_extent, f.sublane_extent,
+                 f.unroll, f.inner_trip) for f in features]
+        mat = np.array(rows, dtype=np.float64).reshape(len(rows),
+                                                       len(FeatureBatch.FIELDS))
+        return FeatureBatch(
+            features=features,
+            **{name: mat[:, i] for i, name in enumerate(FeatureBatch.FIELDS)})
+
+    def __len__(self) -> int:
+        return self.n
+
+
+def estimate_seconds_batch(batch: FeatureBatch,
+                           arch: str = DEFAULT_ARCH) -> "object":
+    """Vectorized :func:`estimate_seconds` over a :class:`FeatureBatch`.
 
     One numpy pass over the whole batch instead of per-config Python math —
     the fast path behind ``TunableProblem.evaluate_many`` and the
     orchestrator's worker pool.  Mirrors the scalar expressions term for
-    term (same float64 operation order) so both paths agree.
+    term (same float64 operation order) so both paths agree exactly.
+    Returns a float64 array of seconds (``inf`` == VMEM overflow).
     """
-    if not features:
-        return []
     import numpy as np
 
     gen = TPU_GENERATIONS[arch]
-    f64 = np.float64
-    arr = lambda g: np.array([g(f) for f in features], dtype=f64)  # noqa: E731
-
-    vmem = arr(lambda f: f.vmem_working_set)
-    dtype_bytes = np.array([f.dtype_bytes for f in features])
-    mxu_flops = arr(lambda f: f.mxu_flops)
-    vpu_flops = arr(lambda f: f.vpu_flops)
-    transcend = arr(lambda f: f.transcendental_ops)
-    hbm_bytes = arr(lambda f: f.hbm_bytes)
-    gather = arr(lambda f: f.gather_bytes)
-    grid_steps = arr(lambda f: f.grid_steps)
-    serialization = arr(lambda f: f.serialization)
-    extra = arr(lambda f: f.extra_seconds)
+    f = batch
 
     # --- MXU utilization ------------------------------------------------ #
     d = float(gen.mxu_dim)
-    m = arr(lambda f: max(1, int(f.mxu_tile[0])))
-    n = arr(lambda f: max(1, int(f.mxu_tile[1])))
-    k = arr(lambda f: max(1, int(f.mxu_tile[2])))
+    m, n, k = f.tile_m, f.tile_n, f.tile_k
     um = m / (np.ceil(m / d) * d)
     un = n / (np.ceil(n / d) * d)
     uk = k / (k + d)
@@ -237,16 +274,14 @@ def estimate_seconds_many(features: Sequence[KernelFeatures],
 
     # --- VPU utilization ------------------------------------------------ #
     lane = float(gen.lane)
-    sub = np.array([gen.sublane(int(b)) for b in dtype_bytes], dtype=f64)
-    lane_ext = arr(lambda f: f.lane_extent)
-    sub_ext = arr(lambda f: f.sublane_extent)
-    ul = lane_ext / (np.ceil(lane_ext / lane) * lane)
-    us = sub_ext / (np.ceil(sub_ext / sub) * sub)
+    sub = np.array([gen.sublane(int(b)) for b in f.dtype_bytes],
+                   dtype=np.float64)
+    ul = f.lane_extent / (np.ceil(f.lane_extent / lane) * lane)
+    us = f.sublane_extent / (np.ceil(f.sublane_extent / sub) * sub)
     vpu_util = np.maximum(ul * us, 1e-3)
 
     # --- issue efficiency ----------------------------------------------- #
-    unroll = np.array([f.unroll for f in features], dtype=f64)
-    trip = np.array([f.inner_trip for f in features], dtype=f64)
+    unroll, trip = f.unroll, f.inner_trip
     safe_trip = np.maximum(trip, 1.0)
     u = np.maximum(1.0, np.minimum(unroll, safe_trip))
     base = u / (u + 0.35)
@@ -256,30 +291,41 @@ def estimate_seconds_many(features: Sequence[KernelFeatures],
     issue = np.where(trip <= 0, 1.0, base * waste * tail)
 
     # --- compute / memory / overlap (same structure as the scalar path) - #
-    peak = np.where(dtype_bytes <= 2, gen.peak_flops_bf16, gen.peak_flops_f32)
+    peak = np.where(f.dtype_bytes <= 2, gen.peak_flops_bf16, gen.peak_flops_f32)
     with np.errstate(divide="ignore", invalid="ignore"):
-        t_mxu = np.where(mxu_flops != 0.0,
-                         mxu_flops / (peak * mxu_util * issue), 0.0)
-        vpu_work = vpu_flops + 8.0 * transcend
+        t_mxu = np.where(f.mxu_flops != 0.0,
+                         f.mxu_flops / (peak * mxu_util * issue), 0.0)
+        vpu_work = f.vpu_flops + 8.0 * f.transcendental_ops
         t_vpu = np.where(vpu_work != 0.0,
                          vpu_work / (gen.vpu_flops * vpu_util * issue), 0.0)
     t_compute = t_mxu + t_vpu
-    t_hbm = hbm_bytes / gen.hbm_bw
-    t_gather = np.where(gather != 0.0, gather / (0.25 * gen.hbm_bw), 0.0)
+    t_hbm = f.hbm_bytes / gen.hbm_bw
+    t_gather = np.where(f.gather_bytes != 0.0,
+                        f.gather_bytes / (0.25 * gen.hbm_bw), 0.0)
     t_mem = t_hbm + t_gather
 
+    vmem = f.vmem_working_set
     fits_double = 2.0 * vmem <= gen.vmem_bytes
     pressure = np.minimum(1.0, (2.0 * vmem - gen.vmem_bytes)
                           / max(gen.vmem_bytes, 1))
     serial = np.where(
         fits_double,
-        np.minimum(1.0, np.maximum(0.0, serialization)),
-        np.minimum(1.0, np.maximum(serialization, 0.35 + 0.65 * pressure)))
+        np.minimum(1.0, np.maximum(0.0, f.serialization)),
+        np.minimum(1.0, np.maximum(f.serialization, 0.35 + 0.65 * pressure)))
     t_body = (np.maximum(t_compute, t_mem)
               + serial * np.minimum(t_compute, t_mem))
-    t_grid = gen.grid_overhead_s * np.maximum(0.0, grid_steps - 1.0)
-    total = t_body + t_grid + gen.launch_overhead_s + extra
-    total = np.where(vmem > gen.vmem_bytes, np.inf, total)
+    t_grid = gen.grid_overhead_s * np.maximum(0.0, f.grid_steps - 1.0)
+    total = t_body + t_grid + gen.launch_overhead_s + f.extra_seconds
+    return np.where(vmem > gen.vmem_bytes, np.inf, total)
+
+
+def estimate_seconds_many(features: Sequence[KernelFeatures],
+                          arch: str = DEFAULT_ARCH) -> list[float]:
+    """List-of-features convenience wrapper over
+    :func:`estimate_seconds_batch`."""
+    if not features:
+        return []
+    total = estimate_seconds_batch(FeatureBatch.from_features(features), arch)
     return [float(t) for t in total]
 
 

@@ -15,8 +15,9 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
 
-from .costmodel import (ARCH_NAMES, DEFAULT_ARCH, KernelFeatures,
-                        estimate_seconds, estimate_seconds_many)
+from .costmodel import (ARCH_NAMES, DEFAULT_ARCH, FeatureBatch,
+                        KernelFeatures, estimate_seconds,
+                        estimate_seconds_batch)
 from .space import Config, SearchSpace
 
 
@@ -61,6 +62,19 @@ class TunableProblem:
         return Trial(config, t, arch, valid=math.isfinite(t),
                      info={"features": feats})
 
+    def features_many(self, configs: Sequence[Config],
+                      arch: str) -> FeatureBatch:
+        """Struct-of-arrays features for a batch of *valid* configs.
+
+        The default packs per-config :meth:`features` results into a
+        :class:`FeatureBatch` in one pass.  Problems whose feature math
+        vectorizes can override this to build the column arrays directly
+        (such overrides may leave ``FeatureBatch.features`` empty, in which
+        case trials carry no per-config feature payload in ``info``).
+        """
+        return FeatureBatch.from_features(
+            [self.features(c, arch) for c in configs])
+
     # -- convenience ------------------------------------------------------ #
     def evaluate_many(self, configs: Sequence[Config],
                       arch: str = DEFAULT_ARCH) -> list[Trial]:
@@ -68,15 +82,14 @@ class TunableProblem:
 
         Problems on the analytical path (``features`` + the TPU cost model)
         take a vectorized fast path: one numpy sweep over the whole batch
-        via :func:`estimate_seconds_many`.  Subclasses that override
-        :meth:`evaluate` (measured problems, function problems) fall back to
-        the per-config loop.
+        via :meth:`features_many` + :func:`estimate_seconds_batch`.
+        Subclasses that override :meth:`evaluate` (measured problems,
+        function problems) fall back to the per-config loop.
         """
         configs = list(configs)
         if type(self).evaluate is not TunableProblem.evaluate:
             return [self.evaluate(c, arch) for c in configs]
         trials: list[Trial | None] = []
-        feats: list[KernelFeatures] = []
         slots: list[int] = []
         for cfg in configs:
             if not self.space.satisfies(cfg):
@@ -84,21 +97,29 @@ class TunableProblem:
                                     info={"violated": self.space.violated(cfg)}))
             else:
                 slots.append(len(trials))
-                feats.append(self.features(cfg, arch))
                 trials.append(None)
-        for j, f, t in zip(slots, feats, estimate_seconds_many(feats, arch)):
-            trials[j] = Trial(configs[j], t, arch, valid=math.isfinite(t),
-                              info={"features": f})
+        if slots:
+            batch = self.features_many([configs[j] for j in slots], arch)
+            times = estimate_seconds_batch(batch, arch)
+            per_row = batch.features or None
+            for i, j in enumerate(slots):
+                t = float(times[i])
+                info = {"features": per_row[i]} if per_row else {}
+                trials[j] = Trial(configs[j], t, arch,
+                                  valid=math.isfinite(t), info=info)
         return trials  # type: ignore[return-value]
 
     def exhaustive(self, arch: str = DEFAULT_ARCH,
                    limit: int | None = None) -> list[Trial]:
-        out = []
-        for cfg in self.space.enumerate(constrained=True):
-            out.append(self.evaluate(cfg, arch))
-            if limit is not None and len(out) >= limit:
-                break
-        return out
+        """Evaluate the whole constrained space (vectorized: compiled
+        enumeration feeding the batched cost-model path)."""
+        if limit is None:
+            cfgs = self.space.valid_configs()
+        else:
+            import itertools
+            cfgs = list(itertools.islice(
+                self.space.enumerate(constrained=True), limit))
+        return self.evaluate_many(cfgs, arch)
 
     def sampled(self, n: int, seed: int = 0,
                 arch: str = DEFAULT_ARCH) -> list[Trial]:

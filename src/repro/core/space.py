@@ -14,8 +14,14 @@ from __future__ import annotations
 import itertools
 import math
 import random
+import threading
 from dataclasses import dataclass, field
-from typing import Any, Callable, Iterator, Sequence
+from typing import TYPE_CHECKING, Any, Callable, Iterator, Sequence
+
+if TYPE_CHECKING:  # pragma: no cover
+    import numpy as np
+
+    from .spacetable import CompiledSpace
 
 Config = dict[str, Any]
 
@@ -32,21 +38,45 @@ class Param:
             raise ValueError(f"parameter {self.name!r} has no values")
         if len(set(self.values)) != len(self.values):
             raise ValueError(f"parameter {self.name!r} has duplicate values")
+        # value -> index lookup; every encode/flat_index everywhere hits this
+        try:
+            index = {v: i for i, v in enumerate(self.values)}
+        except TypeError:             # unhashable values: linear fallback
+            index = None
+        object.__setattr__(self, "_index", index)
 
     @property
     def cardinality(self) -> int:
         return len(self.values)
 
     def index_of(self, value) -> int:
-        return self.values.index(value)
+        if self._index is None:
+            return self.values.index(value)
+        try:
+            return self._index[value]
+        except KeyError:
+            raise ValueError(
+                f"{value!r} is not a value of parameter {self.name!r}") \
+                from None
+        except TypeError:             # unhashable query: linear fallback
+            return self.values.index(value)
 
 
 @dataclass(frozen=True)
 class Constraint:
-    """A named predicate over full configs.  ``fn(config) -> bool``."""
+    """A named predicate over full configs.  ``fn(config) -> bool``.
+
+    ``vec`` is the optional vectorized form used by
+    :class:`~repro.core.spacetable.CompiledSpace`: it receives a dict of
+    per-parameter *value* column arrays covering the whole cross product and
+    returns a boolean array over rows.  It must be a total function (it is
+    evaluated on every row, not only rows that passed earlier constraints)
+    and must agree elementwise with ``fn``.
+    """
 
     name: str
     fn: Callable[[Config], bool]
+    vec: Callable[[dict], "np.ndarray"] | None = None
 
     def __call__(self, config: Config) -> bool:
         return bool(self.fn(config))
@@ -69,6 +99,53 @@ class SearchSpace:
         self.params: tuple[Param, ...] = tuple(params)
         self.constraints: tuple[Constraint, ...] = tuple(constraints)
         self._by_name = {p.name: p for p in self.params}
+        self._compiled: "CompiledSpace | None" = None
+        self._compile_lock = threading.Lock()
+
+    # the compiled table and its lock are per-process derived state; drop
+    # them when the space crosses a pickle boundary (process worker pools)
+    def __getstate__(self) -> dict:
+        state = self.__dict__.copy()
+        state["_compiled"] = None
+        state["_compile_lock"] = None
+        return state
+
+    def __setstate__(self, state: dict) -> None:
+        self.__dict__.update(state)
+        self._compile_lock = threading.Lock()
+
+    # ------------------------------------------------------------------ #
+    # compiled fast path
+    # ------------------------------------------------------------------ #
+    def compiled(self, limit: int | None = None,
+                 build: bool = True) -> "CompiledSpace | None":
+        """The :class:`~repro.core.spacetable.CompiledSpace` for this space,
+        built lazily and cached (``None`` when the cross product exceeds
+        ``limit``, default ``spacetable.DEFAULT_COMPILE_LIMIT``).  Compiled
+        paths are exact drop-ins: identical configs, orders and draws as the
+        iterator paths."""
+        if self._compiled is not None:
+            return self._compiled
+        if not build:
+            return None
+        from .spacetable import DEFAULT_COMPILE_LIMIT, CompiledSpace
+        lim = DEFAULT_COMPILE_LIMIT if limit is None else limit
+        if self.cardinality > lim:
+            return None
+        with self._compile_lock:
+            if self._compiled is None:
+                self._compiled = CompiledSpace.build(self)
+        return self._compiled
+
+    def compile_eagerly(self, py_limit: int = 1 << 16
+                        ) -> "CompiledSpace | None":
+        """The tuning-entry compile policy (tuner construction, session
+        start): compile up to the full limit when every constraint has a
+        vectorized form, but cap Python-fallback sweeps at ``py_limit`` rows
+        so a tiny tuning budget never pays seconds of predicate sweeping
+        up front."""
+        all_vec = all(c.vec is not None for c in self.constraints)
+        return self.compiled(limit=None if all_vec else py_limit)
 
     # ------------------------------------------------------------------ #
     # basic accessors
@@ -89,6 +166,11 @@ class SearchSpace:
         return out
 
     def satisfies(self, config: Config) -> bool:
+        if self._compiled is not None:
+            try:
+                return bool(self._compiled.mask[self.flat_index(config)])
+            except (ValueError, TypeError):
+                pass                  # value outside the space: run predicates
         return all(c(config) for c in self.constraints)
 
     def violated(self, config: Config) -> list[str]:
@@ -119,6 +201,32 @@ class SearchSpace:
         return {p.name: out[p.name] for p in self.params}
 
     # ------------------------------------------------------------------ #
+    # batched encode / flat-index
+    # ------------------------------------------------------------------ #
+    def encode_many(self, configs: Sequence[Config]) -> "np.ndarray":
+        """(B, P) per-parameter index matrix for a batch of configs."""
+        import numpy as np
+        out = np.empty((len(configs), len(self.params)), dtype=np.int64)
+        for i, p in enumerate(self.params):
+            idx = p._index
+            name = p.name
+            if idx is None:
+                out[:, i] = [p.values.index(c[name]) for c in configs]
+            else:
+                out[:, i] = [idx[c[name]] for c in configs]
+        return out
+
+    def flat_index_many(self, configs: Sequence[Config]) -> "np.ndarray":
+        """Mixed-radix flat indices for a batch (matches ``flat_index``)."""
+        import numpy as np
+        if self.cardinality > 2 ** 62:     # int64 would overflow
+            return np.array([self.flat_index(c) for c in configs],
+                            dtype=object)
+        from .spacetable import mixed_radix_strides
+        strides = mixed_radix_strides([p.cardinality for p in self.params])
+        return self.encode_many(configs) @ strides
+
+    # ------------------------------------------------------------------ #
     # enumeration & sampling
     # ------------------------------------------------------------------ #
     def enumerate(self, constrained: bool = True) -> Iterator[Config]:
@@ -127,9 +235,22 @@ class SearchSpace:
             if not constrained or self.satisfies(cfg):
                 yield cfg
 
+    def valid_configs(self) -> list[Config]:
+        """All constraint-satisfying configs in ``enumerate`` order —
+        vectorized through the compiled table when the space fits the
+        compile limit, bit-identical to ``list(self.enumerate())``."""
+        comp = self.compiled()
+        if comp is not None:
+            return comp.valid_configs()
+        return list(self.enumerate(constrained=True))
+
     def constrained_cardinality(self, limit: int | None = None) -> int:
         """Exact count of constraint-satisfying configs (Table VIII
-        'Constrained').  ``limit`` caps the work for huge spaces."""
+        'Constrained').  ``limit`` caps the count (a count that reaches
+        ``limit`` stops there and returns ``limit``)."""
+        comp = self.compiled()
+        if comp is not None:
+            return comp.n_valid if limit is None else min(comp.n_valid, limit)
         n = 0
         for _ in self.enumerate(constrained=True):
             n += 1
@@ -138,11 +259,30 @@ class SearchSpace:
         return n
 
     def sample(self, rng: random.Random, max_tries: int = 10_000) -> Config:
-        """Uniform sample from the *constrained* space via rejection."""
-        for _ in range(max_tries):
-            cfg = {p.name: rng.choice(p.values) for p in self.params}
-            if self.satisfies(cfg):
-                return cfg
+        """Uniform sample from the *constrained* space via rejection.
+
+        With a compiled table the constraint evaluation per try collapses to
+        one mask lookup; the rng draw sequence (one ``choice`` per parameter
+        per try) is unchanged, so compiled and legacy paths return the same
+        configs for the same rng state.
+        """
+        comp = self._compiled
+        if comp is not None:
+            mask, strides = comp.mask, comp.strides
+            for _ in range(max_tries):
+                row = 0
+                vals = []
+                for i, p in enumerate(self.params):
+                    v = rng.choice(p.values)
+                    vals.append(v)
+                    row += p.index_of(v) * int(strides[i])
+                if mask[row]:
+                    return dict(zip(self.param_names, vals))
+        else:
+            for _ in range(max_tries):
+                cfg = {p.name: rng.choice(p.values) for p in self.params}
+                if self.satisfies(cfg):
+                    return cfg
         raise RuntimeError(
             f"{self.name}: could not sample a valid config in {max_tries} tries")
 
@@ -191,6 +331,22 @@ class SearchSpace:
                 if not constrained or self.satisfies(cfg):
                     yield cfg
 
+    def neighbors_list(self, config: Config, constrained: bool = True,
+                       adjacent_only: bool = False) -> list[Config]:
+        """``list(self.neighbors(...))``, served from the compiled CSR
+        neighbor table when available (same configs, same order)."""
+        if constrained and not adjacent_only and self._compiled is not None:
+            comp = self._compiled
+            try:
+                row = self.flat_index(config)
+            except (ValueError, TypeError):
+                row = -1
+            if row >= 0:
+                rows = comp.neighbor_rows(row)
+                if rows is not None:      # invalid current row: fall back
+                    return comp.decode_many(rows)
+        return list(self.neighbors(config, constrained, adjacent_only))
+
     def random_neighbor(self, config: Config, rng: random.Random,
                         max_tries: int = 1000) -> Config:
         for _ in range(max_tries):
@@ -222,7 +378,17 @@ class SearchSpace:
                 full = dict(frozen)
                 full.update(cfg)
                 return _c(full)
-            return Constraint(c.name, fn)
+
+            vec = None
+            if c.vec is not None:     # frozen params become constant columns
+                def vec(cols: dict, _c=c):
+                    import numpy as np
+                    n = len(next(iter(cols.values())))
+                    full = {k: np.full(n, v) for k, v in frozen.items()
+                            if k not in cols}
+                    full.update(cols)
+                    return _c.vec(full)
+            return Constraint(c.name, fn, vec)
 
         return SearchSpace(kept, [wrap(c) for c in self.constraints],
                            name=name or f"{self.name}-reduced")

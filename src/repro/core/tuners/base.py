@@ -68,6 +68,11 @@ class Tuner:
         self.space = space
         self.rng = random.Random(seed)
         self.seed = seed
+        # compile once (no-op above the policy limit): every ask/tell then
+        # hits the O(1) valid-mask paths for sample/satisfies/neighbors.
+        # Compiled draws are bit-identical to the legacy rejection draws, so
+        # trajectories do not depend on whether compilation happened.
+        space.compile_eagerly()
 
     def ask(self) -> Config:
         raise NotImplementedError

@@ -12,13 +12,17 @@ class GridSearch(Tuner):
 
     def __init__(self, space: SearchSpace, seed: int = 0, shuffle: bool = True):
         super().__init__(space, seed)
-        self._iter = self.space.enumerate(constrained=True)
         self._shuffle = shuffle
         self._buf: list[Config] = []
         self._done = False
         if shuffle:
-            self._buf = list(self._iter)
+            # bulk enumeration via the compiled table (same configs/order as
+            # the iterator, so the shuffled visit sequence is unchanged)
+            self._iter = iter(())
+            self._buf = self.space.valid_configs()
             self.rng.shuffle(self._buf)
+        else:
+            self._iter = self.space.enumerate(constrained=True)
 
     def ask(self) -> Config:
         if self._shuffle:

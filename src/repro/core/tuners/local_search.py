@@ -49,7 +49,9 @@ class LocalSearch(Tuner):
         return self._pending.pop()
 
     def _fill_neighbors(self) -> None:
-        self._pending = list(self.space.neighbors(self.current))
+        # CSR neighbor-table path when compiled (same list, same order, so
+        # the shuffled exploration sequence matches the iterator path)
+        self._pending = self.space.neighbors_list(self.current)
         self.rng.shuffle(self._pending)
         self._best_nb = None
 

@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ...core.costmodel import KernelFeatures
 from ...core.space import Config, Constraint, Param, SearchSpace
@@ -41,15 +42,29 @@ class Conv2dProblem(KernelProblem):
             Param("acc_dtype", ("f32", "bf16")),
             Param("filter_smem", (0, 1)),
         ]
+        def vmem_ok_vec(c: dict) -> np.ndarray:
+            th = c["block_h"] + fh - 1
+            tw = c["block_w"] + fw - 1
+            acc_b = np.where(c["acc_dtype"] == "f32", 4, 2)
+            rows = np.where(c["row_chunk"] == 0, c["block_h"], c["row_chunk"])
+            ws = (th * tw * 4 + c["block_h"] * c["block_w"] * 4
+                  + rows * c["block_w"] * acc_b + fh * fw * 4)
+            return 2 * ws <= PORTABLE_VMEM
+
         constraints = [
             Constraint("fits_shape", lambda c: c["block_h"] <= h
-                       and c["block_w"] <= w),
+                       and c["block_w"] <= w,
+                       vec=lambda c: (c["block_h"] <= h) & (c["block_w"] <= w)),
             Constraint("unroll_divides", lambda c: fh % c["unroll_fh"] == 0
-                       and fw % c["unroll_fw"] == 0),
+                       and fw % c["unroll_fw"] == 0,
+                       vec=lambda c: (fh % c["unroll_fh"] == 0)
+                       & (fw % c["unroll_fw"] == 0)),
             Constraint("row_chunk_divides",
                        lambda c: c["row_chunk"] == 0
-                       or c["block_h"] % c["row_chunk"] == 0),
-            Constraint("vmem", vmem_ok),
+                       or c["block_h"] % c["row_chunk"] == 0,
+                       vec=lambda c: (c["row_chunk"] == 0)
+                       | (c["block_h"] % np.maximum(c["row_chunk"], 1) == 0)),
+            Constraint("vmem", vmem_ok, vec=vmem_ok_vec),
         ]
         return SearchSpace(params, constraints, name="conv2d")
 

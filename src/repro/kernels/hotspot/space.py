@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ...core.costmodel import KernelFeatures
 from ...core.space import Config, Constraint, Param, SearchSpace
@@ -44,10 +45,19 @@ class HotspotProblem(KernelProblem):
             Param("acc_dtype", ("f32", "bf16")),
             Param("grid_order", ("rm", "cm")),
         ]
+        def vmem_ok_vec(c: dict) -> np.ndarray:
+            th = c["block_h"] + 2 * c["tt"]
+            tw = c["block_w"] + 2 * c["tt"]
+            acc_b = np.where(c["acc_dtype"] == "f32", 4, 2)
+            ws = th * tw * (4 + 4 + 2 * acc_b) + c["block_h"] * c["block_w"] * 4
+            return 2 * ws <= PORTABLE_VMEM
+
         constraints = [
-            Constraint("unroll_divides_tt", lambda c: c["tt"] % c["unroll_t"] == 0),
-            Constraint("vmem", vmem_ok),
-            Constraint("halo_sane", lambda c: 2 * c["tt"] <= c["block_h"] + 8),
+            Constraint("unroll_divides_tt", lambda c: c["tt"] % c["unroll_t"] == 0,
+                       vec=lambda c: c["tt"] % c["unroll_t"] == 0),
+            Constraint("vmem", vmem_ok, vec=vmem_ok_vec),
+            Constraint("halo_sane", lambda c: 2 * c["tt"] <= c["block_h"] + 8,
+                       vec=lambda c: 2 * c["tt"] <= c["block_h"] + 8),
         ]
         return SearchSpace(params, constraints, name="hotspot")
 

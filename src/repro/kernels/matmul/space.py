@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ...core.costmodel import TPU_GENERATIONS, KernelFeatures
 from ...core.space import Config, Constraint, Param, SearchSpace
@@ -38,13 +39,27 @@ class GemmProblem(KernelProblem):
                   + c["block_m"] * c["block_n"] * (acc_b + ab + ab))
             return 2 * ws <= PORTABLE_VMEM      # double-buffered fit
 
+        # vectorized forms (CompiledSpace column protocol) of the same
+        # predicates — elementwise-identical by the spacetable property tests
+        def vmem_ok_vec(c: dict) -> np.ndarray:
+            acc_b = np.where(c["acc_dtype"] == "f32", 4, 2)
+            ws = (c["block_m"] * c["block_k"] * ab
+                  + c["block_k"] * c["block_n"] * ab
+                  + c["block_m"] * c["block_n"] * (acc_b + ab + ab))
+            return 2 * ws <= PORTABLE_VMEM
+
         constraints = [
             Constraint("fits_shape", lambda c: c["block_m"] <= max(m, 8)
                        and c["block_n"] <= max(n, 128)
-                       and c["split_k"] * c["block_k"] <= max(k, 128)),
+                       and c["split_k"] * c["block_k"] <= max(k, 128),
+                       vec=lambda c: (c["block_m"] <= max(m, 8))
+                       & (c["block_n"] <= max(n, 128))
+                       & (c["split_k"] * c["block_k"] <= max(k, 128))),
             Constraint("unroll_divides", lambda c: c["block_k"] % c["unroll_k"] == 0
-                       and c["block_k"] // c["unroll_k"] >= 128),
-            Constraint("vmem", vmem_ok),
+                       and c["block_k"] // c["unroll_k"] >= 128,
+                       vec=lambda c: (c["block_k"] % c["unroll_k"] == 0)
+                       & (c["block_k"] // c["unroll_k"] >= 128)),
+            Constraint("vmem", vmem_ok, vec=vmem_ok_vec),
         ]
         return SearchSpace(params, constraints, name="gemm")
 

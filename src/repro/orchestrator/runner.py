@@ -74,6 +74,7 @@ def run_session(spec: SessionSpec, *, problem: TunableProblem | None = None,
                                    **spec.tuner_kwargs)
     workers = spec.workers if workers is None else workers
     space = problem.space
+    space.compile_eagerly()   # one-time table build: mask-backed fast paths
     res = TuneResult(tuner.name, problem.name, spec.arch, spec.seed)
 
     sid = None
@@ -112,7 +113,8 @@ def run_session(spec: SessionSpec, *, problem: TunableProblem | None = None,
             cfgs = tuner.ask_batch(n)
             asks += len(cfgs)
 
-            keys = [space.flat_index(c) for c in cfgs]
+            keys = [int(k) for k in space.flat_index_many(cfgs)] \
+                if len(cfgs) > 1 else [space.flat_index(cfgs[0])]
             results: list = [None] * len(cfgs)
             consume = [False] * len(cfgs)
             fresh: list[int] = []          # positions to actually evaluate

@@ -7,7 +7,7 @@ import random
 import pytest
 
 from repro.core.space import (Constraint, Param, SearchSpace, divisors,
-                              powers_of_two)
+                              multiples, powers_of_two)
 from sweeps import random_subspace, sweep
 
 
@@ -92,6 +92,30 @@ def test_duplicate_params_rejected():
 def test_helpers():
     assert powers_of_two(16, 128) == (16, 32, 64, 128)
     assert divisors(12) == (1, 2, 3, 4, 6, 12)
+
+
+def test_multiples_boundaries():
+    # lo already on the grid: the `lo % step == 0` branch
+    assert multiples(8, 16, 64) == (16, 24, 32, 40, 48, 56, 64)
+    assert multiples(4, 4, 4) == (4,)
+    # lo off the grid: round up to the next multiple
+    assert multiples(8, 12, 64) == (16, 24, 32, 40, 48, 56, 64)
+    assert multiples(5, 7, 23) == (10, 15, 20)
+    assert multiples(8, 3, 30) == (8, 16, 24)
+    # rounded-up start beyond hi: empty
+    assert multiples(8, 12, 15) == ()
+    # hi exactly on the rounded-up start
+    assert multiples(8, 9, 16) == (16,)
+
+
+def test_constrained_cardinality_limit_caps_count():
+    s2 = SearchSpace(
+        [Param("a", (1, 2, 4)), Param("b", (2, 4))],
+        [Constraint("a_le_b", lambda c: c["a"] <= c["b"])])
+    assert s2.constrained_cardinality() == 5
+    assert s2.constrained_cardinality(limit=2) == 2
+    assert s2.constrained_cardinality(limit=5) == 5
+    assert s2.constrained_cardinality(limit=99) == 5
 
 
 def test_bat_space_sizes():

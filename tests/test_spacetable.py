@@ -1,0 +1,395 @@
+"""CompiledSpace engine: every compiled path must agree *exactly* with the
+legacy iterator path — same configs, same orders, same rng draw sequences,
+same FFG arrays.  The legacy implementations stay in the tree as the
+reference oracles (``SearchSpace.enumerate``/``neighbors``/rejection
+``sample``, ``build_ffg_reference``)."""
+
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.analysis.centrality import (build_ffg, build_ffg_reference,
+                                            pagerank)
+from repro.core.costmodel import (ARCH_NAMES, FeatureBatch, KernelFeatures,
+                                  estimate_seconds, estimate_seconds_batch)
+from repro.core.problem import FunctionProblem
+from repro.core.results import ResultTable
+from repro.core.space import Constraint, Param, SearchSpace
+from repro.core.spacetable import CompiledSpace, space_fingerprint
+from sweeps import random_subspace, sweep
+
+
+def _fresh(space):
+    """Uncompiled copy of a space: the legacy reference instance."""
+    return SearchSpace(space.params, space.constraints, name=space.name)
+
+
+# ------------------------------------------------------------------ #
+# enumeration / counting
+# ------------------------------------------------------------------ #
+@sweep(40)
+def test_valid_configs_match_iterator(rng):
+    s = random_subspace(rng)
+    legacy = list(_fresh(s).enumerate(constrained=True))
+    assert s.valid_configs() == legacy
+    comp = s.compiled()
+    assert comp.n_valid == len(legacy)
+    assert [tuple(r) for r in
+            CompiledSpace.codes_for(s, comp.valid_rows).tolist()] \
+        == [_fresh(s).encode(c) for c in legacy]
+
+
+@sweep(25)
+def test_constrained_cardinality_limit_semantics(rng):
+    s = random_subspace(rng)
+    n = len(list(_fresh(s).enumerate(constrained=True)))
+    assert s.constrained_cardinality() == n
+    for limit in (0, 1, max(0, n - 1), n, n + 5):
+        expect = min(n, limit)
+        assert s.constrained_cardinality(limit=limit) == expect
+
+
+def test_constrained_cardinality_legacy_branch(monkeypatch):
+    """With compilation disabled the iterator count must agree."""
+    monkeypatch.setattr("repro.core.spacetable.DEFAULT_COMPILE_LIMIT", 0)
+    s = SearchSpace(
+        [Param("a", (1, 2, 3, 4)), Param("b", (1, 2))],
+        [Constraint("even", lambda c: (c["a"] + c["b"]) % 2 == 0)])
+    assert s.compiled() is None
+    assert s.constrained_cardinality() == 4
+    assert s.constrained_cardinality(limit=3) == 3
+
+
+# ------------------------------------------------------------------ #
+# sampling: identical draw sequences
+# ------------------------------------------------------------------ #
+@sweep(30)
+def test_sample_sequence_identical_to_legacy(rng):
+    s = random_subspace(rng)
+    s.compiled()
+    seed = rng.randint(0, 10 ** 6)
+    try:
+        compiled_draws = [s.sample(random.Random(seed)) for _ in range(1)]
+        compiled_seq = []
+        r = random.Random(seed)
+        for _ in range(25):
+            compiled_seq.append(s.sample(r))
+    except RuntimeError:
+        return                        # over-constrained random space: fine
+    legacy = _fresh(s)
+    r = random.Random(seed)
+    legacy_seq = [legacy.sample(r) for _ in range(25)]
+    assert compiled_seq == legacy_seq
+    assert compiled_draws[0] == legacy_seq[0]
+
+
+@sweep(20)
+def test_sample_distinct_identical_to_legacy(rng):
+    s = random_subspace(rng)
+    s.compiled()
+    seed = rng.randint(0, 10 ** 6)
+    try:
+        got = s.sample_distinct(10, seed=seed)
+    except RuntimeError:
+        return
+    assert got == _fresh(s).sample_distinct(10, seed=seed)
+
+
+def test_rejection_free_sampling_uniform_support():
+    s = SearchSpace(
+        [Param("a", (1, 2, 3, 4)), Param("b", (1, 2))],
+        [Constraint("even", lambda c: (c["a"] + c["b"]) % 2 == 0)])
+    comp = s.compiled()
+    rng = random.Random(0)
+    seen = {comp.sample_row(rng) for _ in range(400)}
+    assert seen == set(comp.valid_rows.tolist())     # all 4 valid reachable
+    for _ in range(50):
+        assert s.satisfies(comp.sample(rng))
+    rows = comp.sample_rows_distinct(10, random.Random(1))
+    assert len(set(rows.tolist())) == len(rows) == comp.n_valid
+
+
+# ------------------------------------------------------------------ #
+# neighbors: CSR table vs iterator
+# ------------------------------------------------------------------ #
+@sweep(30)
+def test_neighbors_list_matches_iterator(rng):
+    s = random_subspace(rng)
+    legacy = _fresh(s)
+    try:
+        cfgs = s.sample_distinct(8, seed=rng.randint(0, 10 ** 6))
+    except RuntimeError:
+        return
+    s.compiled()
+    for cfg in cfgs:
+        assert s.neighbors_list(cfg) == list(legacy.neighbors(cfg))
+
+
+def test_neighbors_list_invalid_config_falls_back():
+    s = SearchSpace(
+        [Param("a", (1, 2, 3, 4)), Param("b", (1, 2))],
+        [Constraint("even", lambda c: (c["a"] + c["b"]) % 2 == 0)])
+    s.compiled()
+    bad = {"a": 1, "b": 2}            # violates the constraint
+    assert not s.satisfies(bad)
+    assert s.neighbors_list(bad) == list(_fresh(s).neighbors(bad))
+
+
+def test_csr_structure():
+    s = SearchSpace([Param("a", (0, 1, 2)), Param("b", (0, 1))])
+    comp = s.compiled()
+    indptr, indices = comp.csr_neighbors()
+    assert len(indptr) == comp.n_valid + 1
+    assert indptr[-1] == len(indices)
+    # unconstrained: every node has (3-1) + (2-1) = 3 Hamming-1 neighbors
+    assert np.all(np.diff(indptr) == 3)
+
+
+# ------------------------------------------------------------------ #
+# batched encode / flat index
+# ------------------------------------------------------------------ #
+@sweep(25)
+def test_batched_encode_flat_roundtrip(rng):
+    s = random_subspace(rng, constrained=False)
+    cfgs = [s.from_flat_index(i)
+            for i in rng.sample(range(s.cardinality),
+                                min(s.cardinality, 30))]
+    enc = s.encode_many(cfgs)
+    assert [tuple(r) for r in enc.tolist()] == [s.encode(c) for c in cfgs]
+    flat = s.flat_index_many(cfgs)
+    assert flat.tolist() == [s.flat_index(c) for c in cfgs]
+    comp = s.compiled()
+    assert comp.decode_many(flat) == cfgs
+    assert [comp.decode_row(int(i)) for i in flat] == cfgs
+
+
+# ------------------------------------------------------------------ #
+# FFG: vectorized join vs reference double loop
+# ------------------------------------------------------------------ #
+def _assert_ffg_equal(a, b):
+    assert a.n == b.n
+    assert np.array_equal(a.fitness, b.fitness)
+    assert np.array_equal(a.src, b.src)
+    assert np.array_equal(a.dst, b.dst)
+    assert np.array_equal(a.minima, b.minima)
+
+
+@sweep(25)
+def test_build_ffg_matches_reference_exhaustive(rng):
+    s = random_subspace(rng)
+    prob = FunctionProblem(
+        s, lambda c, a: float(sum(v * (i + 1)
+                                  for i, v in enumerate(c.values())) % 17))
+    trials = prob.exhaustive("v5e")
+    if not trials:
+        return
+    table = ResultTable.from_trials(prob, "v5e", trials, "exhaustive")
+    _assert_ffg_equal(build_ffg(s, table), build_ffg_reference(s, table))
+
+
+@sweep(15)
+def test_build_ffg_searchsorted_path_without_compiled_space(rng):
+    """With compilation disabled, the sort/searchsorted join (not the CSR
+    shortcut) must still reproduce the reference exactly."""
+    s = random_subspace(rng)
+    prob = FunctionProblem(
+        s, lambda c, a: float(sum(v for v in c.values()) % 11))
+    import repro.core.spacetable as st
+    saved = st.DEFAULT_COMPILE_LIMIT
+    st.DEFAULT_COMPILE_LIMIT = 0
+    try:
+        trials = prob.exhaustive("v5e")
+        if not trials:
+            return
+        table = ResultTable.from_trials(prob, "v5e", trials, "exhaustive")
+        assert s.compiled(build=False) is None
+        _assert_ffg_equal(build_ffg(s, table), build_ffg_reference(s, table))
+    finally:
+        st.DEFAULT_COMPILE_LIMIT = saved
+
+
+@sweep(15)
+def test_build_ffg_matches_reference_sampled_with_dups_and_inf(rng):
+    """Sampled tables: duplicates (first occurrence wins) and inf rows
+    (dropped) must behave identically on both paths."""
+    s = random_subspace(rng, constrained=False)
+    cfgs = [s.from_flat_index(rng.randrange(s.cardinality))
+            for _ in range(40)]
+    objectives = [math.inf if rng.random() < 0.15
+                  else float(rng.randint(0, 9)) for _ in cfgs]
+    table = ResultTable(
+        problem="toy", arch="v5e", param_names=s.param_names,
+        configs=[s.encode(c) for c in cfgs], objectives=objectives,
+        protocol="sampled")
+    _assert_ffg_equal(build_ffg(s, table), build_ffg_reference(s, table))
+
+
+def test_build_ffg_empty_table():
+    s = SearchSpace([Param("a", (0, 1))])
+    table = ResultTable(problem="t", arch="v5e", param_names=("a",),
+                        configs=[], objectives=[], protocol="x")
+    ffg = build_ffg(s, table)
+    assert ffg.n == 0 and len(ffg.src) == 0
+    assert len(pagerank(ffg)) == 0
+
+
+def test_pagerank_no_edges():
+    s = SearchSpace([Param("a", (0, 1, 2))])
+    table = ResultTable(problem="t", arch="v5e", param_names=("a",),
+                        configs=[(0,), (1,), (2,)],
+                        objectives=[1.0, 1.0, 1.0], protocol="x")
+    ffg = build_ffg(s, table)             # flat landscape: all dangling
+    pr = pagerank(ffg)
+    assert pr == pytest.approx([1 / 3] * 3)
+
+
+# ------------------------------------------------------------------ #
+# vectorized-constraint protocol
+# ------------------------------------------------------------------ #
+def _vec_space():
+    return SearchSpace(
+        [Param("x", (1, 2, 3, 4, 5)), Param("y", (2, 4, 6)),
+         Param("mode", ("lo", "hi"))],
+        [Constraint("x_le_y", lambda c: c["x"] <= c["y"],
+                    vec=lambda c: c["x"] <= c["y"]),
+         Constraint("hi_even", lambda c: c["mode"] == "lo"
+                    or c["x"] % 2 == 0,
+                    vec=lambda c: (c["mode"] == "lo") | (c["x"] % 2 == 0))],
+        name="vecdemo")
+
+
+def test_vectorized_constraints_match_python_predicates():
+    s = _vec_space()
+    legacy = SearchSpace(
+        s.params, [Constraint(c.name, c.fn) for c in s.constraints],
+        name=s.name)
+    assert s.valid_configs() == list(legacy.enumerate(constrained=True))
+
+
+def test_vectorized_constraint_bad_shape_rejected():
+    s = SearchSpace([Param("x", (1, 2, 3))],
+                    [Constraint("bad", lambda c: True,
+                                vec=lambda c: np.array([True]))])
+    with pytest.raises(ValueError, match="vec returned shape"):
+        CompiledSpace.build(s)
+
+
+def test_reduce_wraps_vectorized_constraints():
+    s = _vec_space()
+    r = s.reduce(["x"], frozen={"y": 4, "mode": "hi"})
+    assert r.constraints[0].vec is not None
+    legacy = [c["x"] for c in r.enumerate(constrained=True)]
+    comp = r.compiled()
+    assert [c["x"] for c in comp.valid_configs()] == legacy == [2, 4]
+
+
+# ------------------------------------------------------------------ #
+# mixed short-circuit ordering (python predicate guarded by earlier one)
+# ------------------------------------------------------------------ #
+def test_python_fallback_preserves_declaration_order():
+    """A python predicate that would raise on rows an earlier constraint
+    rejects must never see those rows (legacy ``satisfies`` short-circuit)."""
+    s = SearchSpace(
+        [Param("a", (0, 1, 2)), Param("b", (1, 2))],
+        [Constraint("a_pos", lambda c: c["a"] > 0),
+         Constraint("div", lambda c: c["b"] % c["a"] == 0)])
+    legacy = list(_fresh(s).enumerate(constrained=True))
+    assert s.valid_configs() == legacy
+
+
+# ------------------------------------------------------------------ #
+# on-disk exhaustive-table cache
+# ------------------------------------------------------------------ #
+def test_cache_roundtrip(tmp_path):
+    s = _vec_space()
+    comp = CompiledSpace.build(s, cache_dir=tmp_path)
+    # lazy CSR build re-persists into the same cache entry automatically
+    indptr, indices = comp.csr_neighbors()
+
+    loaded = CompiledSpace.build(_fresh(s), cache_dir=tmp_path)
+    assert np.array_equal(loaded.mask, comp.mask)
+    assert loaded._nbr_indptr is not None     # CSR came from disk, not lazy
+    lp, li = loaded.csr_neighbors()
+    assert np.array_equal(lp, indptr) and np.array_equal(li, indices)
+
+
+def test_cache_fingerprint_mismatch_rebuilds(tmp_path):
+    s = _vec_space()
+    CompiledSpace.build(s, cache_dir=tmp_path)
+    changed = SearchSpace(
+        [Param("x", (1, 2, 3, 4, 5)), Param("y", (2, 4, 6)),
+         Param("mode", ("lo", "hi", "xx"))],
+        s.constraints, name=s.name)    # same name, different values
+    comp = CompiledSpace.build(changed, cache_dir=tmp_path)
+    assert comp.n_total == changed.cardinality
+
+
+def test_cache_corrupt_file_rebuilds(tmp_path):
+    s = _vec_space()
+    path = tmp_path / f"{s.name}-{space_fingerprint(s)}.npz"
+    path.write_bytes(b"not an npz")
+    comp = CompiledSpace.build(s, cache_dir=tmp_path)
+    assert comp.n_valid == len(list(_fresh(s).enumerate(constrained=True)))
+
+
+# ------------------------------------------------------------------ #
+# pickling (process worker pools): derived state must not cross
+# ------------------------------------------------------------------ #
+def test_space_pickles_without_compiled_state():
+    import pickle
+    s = SearchSpace([Param("a", (1, 2, 3))], name="picklable")
+    s.compiled()
+    s2 = pickle.loads(pickle.dumps(s))
+    assert s2._compiled is None
+    assert s2.valid_configs() == s.valid_configs()
+
+
+# ------------------------------------------------------------------ #
+# FeatureBatch struct-of-arrays cost-model path
+# ------------------------------------------------------------------ #
+def test_feature_batch_columns_match_scalar():
+    rng = random.Random(3)
+    feats = [KernelFeatures(
+        mxu_flops=rng.uniform(1e9, 1e12), vpu_flops=rng.uniform(0, 1e10),
+        hbm_bytes=rng.uniform(1e3, 1e9),
+        vmem_working_set=rng.uniform(0, 2e8),
+        grid_steps=rng.uniform(1, 1e4),
+        mxu_tile=(rng.choice([8, 128]), rng.choice([8, 512]), 256),
+        dtype_bytes=rng.choice([2, 4]), lane_extent=rng.choice([100, 257]),
+        sublane_extent=8, unroll=rng.choice([1, 8]),
+        inner_trip=rng.choice([0, 4]),
+    ) for _ in range(50)]
+    batch = FeatureBatch.from_features(feats)
+    assert len(batch) == 50 and len(batch.features) == 50
+    for arch in ARCH_NAMES:
+        out = estimate_seconds_batch(batch, arch)
+        for f, v in zip(feats, out):
+            s = estimate_seconds(f, arch)
+            assert (math.isinf(s) and math.isinf(v)) or s == float(v)
+
+
+def test_feature_batch_native_columns():
+    """A problem building columns directly (no per-row KernelFeatures)."""
+    n = 16
+    cols = dict(
+        vmem_working_set=np.zeros(n), dtype_bytes=np.full(n, 4.0),
+        mxu_flops=np.zeros(n), vpu_flops=np.full(n, 1e9),
+        transcendental_ops=np.zeros(n), hbm_bytes=np.full(n, 1e6),
+        gather_bytes=np.zeros(n), grid_steps=np.ones(n),
+        serialization=np.zeros(n), extra_seconds=np.zeros(n),
+        tile_m=np.full(n, 128.0), tile_n=np.full(n, 128.0),
+        tile_k=np.full(n, 128.0), lane_extent=np.full(n, 128.0),
+        sublane_extent=np.full(n, 8.0), unroll=np.ones(n),
+        inner_trip=np.ones(n))
+    batch = FeatureBatch(**cols)
+    assert batch.features == ()
+    ref = estimate_seconds(KernelFeatures(
+        vpu_flops=1e9, hbm_bytes=1e6, dtype_bytes=4, lane_extent=128,
+        sublane_extent=8), "v5e")
+    out = estimate_seconds_batch(batch, "v5e")
+    assert out == pytest.approx([ref] * n)
+
+    with pytest.raises(ValueError, match="length"):
+        FeatureBatch(**{**cols, "unroll": np.ones(n + 1)})
