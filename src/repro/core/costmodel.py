@@ -228,6 +228,48 @@ class FeatureBatch:
         #: optional per-row source features (kept for ``Trial.info``)
         self.features = tuple(features)
 
+    #: per-column defaults mirroring ``KernelFeatures`` field defaults, as
+    #: processed by :meth:`from_features` (tile clamped to >= 1)
+    DEFAULTS = {
+        "vmem_working_set": 0.0, "dtype_bytes": 4.0, "mxu_flops": 0.0,
+        "vpu_flops": 0.0, "transcendental_ops": 0.0, "hbm_bytes": 0.0,
+        "gather_bytes": 0.0, "grid_steps": 1.0, "serialization": 0.0,
+        "extra_seconds": 0.0, "tile_m": 128.0, "tile_n": 128.0,
+        "tile_k": 128.0, "lane_extent": 128.0, "sublane_extent": 8.0,
+        "unroll": 1.0, "inner_trip": 1.0,
+    }
+
+    @staticmethod
+    def from_columns(n: int, **columns) -> "FeatureBatch":
+        """Columnar constructor for the per-kernel vectorized
+        ``feature_columns`` overrides: omitted fields take the
+        :class:`KernelFeatures` defaults.  Scalar-valued fields (defaults,
+        or per-kernel constants like a shape-only flop count) are kept as
+        plain floats — numpy broadcasting in :func:`estimate_seconds_batch`
+        handles them, and skipping ~17 ``np.full`` allocations per call
+        matters at generation-sized batches.  Carries no per-row feature
+        objects."""
+        import numpy as np
+        unknown = set(columns) - set(FeatureBatch.FIELDS)
+        if unknown:
+            raise TypeError(f"unknown feature columns: {sorted(unknown)}")
+        batch = FeatureBatch.__new__(FeatureBatch)
+        for name in FeatureBatch.FIELDS:
+            col = columns.get(name, FeatureBatch.DEFAULTS[name])
+            if isinstance(col, (int, float)):
+                col = float(col)
+            else:
+                col = np.asarray(col, dtype=np.float64)
+                if col.ndim == 0:
+                    col = float(col)
+                elif len(col) != n:
+                    raise ValueError(
+                        f"column {name!r}: length {len(col)} != {n}")
+            setattr(batch, name, col)
+        batch.n = n
+        batch.features = ()
+        return batch
+
     @staticmethod
     def from_features(features: Sequence[KernelFeatures]) -> "FeatureBatch":
         """Pack per-config features into columns in a single pass."""
@@ -274,8 +316,9 @@ def estimate_seconds_batch(batch: FeatureBatch,
 
     # --- VPU utilization ------------------------------------------------ #
     lane = float(gen.lane)
-    sub = np.array([gen.sublane(int(b)) for b in f.dtype_bytes],
-                   dtype=np.float64)
+    # vectorized ``gen.sublane``: 8 * max(1, 4 // dtype_bytes), elementwise
+    db = np.asarray(f.dtype_bytes).astype(np.int64)
+    sub = (8 * np.maximum(1, 4 // db)).astype(np.float64)
     ul = f.lane_extent / (np.ceil(f.lane_extent / lane) * lane)
     us = f.sublane_extent / (np.ceil(f.sublane_extent / sub) * sub)
     vpu_util = np.maximum(ul * us, 1e-3)

@@ -20,6 +20,10 @@ from .costmodel import (ARCH_NAMES, DEFAULT_ARCH, FeatureBatch,
                         estimate_seconds_batch)
 from .space import Config, SearchSpace
 
+#: below this many rows, columnar (numpy) evaluation loses to the scalar
+#: feature math — batched endpoints fall back (identical results)
+_COLUMNAR_MIN = 8
+
 
 @dataclass
 class Trial:
@@ -45,6 +49,10 @@ class TunableProblem:
     """
 
     name: str = "problem"
+    #: True when :meth:`features`/:meth:`feature_columns` ignore ``arch``
+    #: (the architecture enters only at cost-model-estimate time) — lets
+    #: multi-architecture sweeps build the feature columns once.
+    arch_independent_features: bool = False
 
     def __init__(self, space: SearchSpace):
         self.space = space
@@ -62,18 +70,162 @@ class TunableProblem:
         return Trial(config, t, arch, valid=math.isfinite(t),
                      info={"features": feats})
 
+    def feature_columns(self, cols: dict, arch: str) -> FeatureBatch | None:
+        """Optional vectorized feature hook: per-parameter *value* column
+        arrays in, :class:`FeatureBatch` out — no per-config
+        :class:`KernelFeatures` objects, no dicts.  The column math must
+        mirror :meth:`features` operation for operation so the batched cost
+        model produces bit-identical objectives (property-tested per
+        kernel).  Return ``None`` to fall back to the per-config path.
+        """
+        return None
+
     def features_many(self, configs: Sequence[Config],
                       arch: str) -> FeatureBatch:
         """Struct-of-arrays features for a batch of *valid* configs.
 
-        The default packs per-config :meth:`features` results into a
-        :class:`FeatureBatch` in one pass.  Problems whose feature math
-        vectorizes can override this to build the column arrays directly
-        (such overrides may leave ``FeatureBatch.features`` empty, in which
-        case trials carry no per-config feature payload in ``info``).
+        Routes through :meth:`feature_columns` when the problem provides it
+        (columns are built once per parameter, not once per config);
+        otherwise packs per-config :meth:`features` results into a
+        :class:`FeatureBatch` in one pass.  The columnar path leaves
+        ``FeatureBatch.features`` empty, in which case trials carry no
+        per-config feature payload in ``info``.
         """
+        if configs and \
+                type(self).feature_columns is not TunableProblem.feature_columns:
+            import numpy as np
+            cols = {p.name: np.asarray([c[p.name] for c in configs])
+                    for p in self.space.params}
+            fb = self.feature_columns(cols, arch)
+            if fb is not None:
+                return fb
         return FeatureBatch.from_features(
             [self.features(c, arch) for c in configs])
+
+    def _columnar_ok(self, n_rows: int) -> bool:
+        """Columnar evaluation pays ~45 numpy dispatches per *batch*; below
+        ``_COLUMNAR_MIN`` rows the scalar feature math is strictly faster,
+        so the row endpoints fall back (identical objectives either way)."""
+        return (n_rows >= _COLUMNAR_MIN
+                and self.space.compiled() is not None
+                and type(self).evaluate is TunableProblem.evaluate
+                and type(self).feature_columns
+                is not TunableProblem.feature_columns)
+
+    def objectives_for_rows(self, rows: Sequence[int],
+                            arch: str = DEFAULT_ARCH):
+        """Objective seconds for *valid* compiled-space rows, as a float64
+        array — the fully array-native endpoint (``inf`` == invalid on this
+        arch).  The row tell protocol needs nothing else: no ``Trial``, no
+        config dicts, no per-config features.  Falls back through
+        :meth:`trials_for_rows` when there is no columnar path.
+        """
+        import numpy as np
+        rows = list(rows)
+        if not rows:
+            return np.empty(0, dtype=np.float64)
+        if self._columnar_ok(len(rows)):
+            comp = self.space.compiled()
+            fb = self.feature_columns(comp.value_columns(rows), arch)
+            if fb is not None:
+                return np.ascontiguousarray(np.broadcast_to(
+                    np.asarray(estimate_seconds_batch(fb, arch),
+                               dtype=np.float64), (len(rows),)))
+        return np.array([t.objective if t.ok else math.inf
+                         for t in self.trials_for_rows(rows, arch)],
+                        dtype=np.float64)
+
+    def objectives_for_rows_archs(self, rows: Sequence[int],
+                                  archs: Sequence[str]):
+        """(len(archs), len(rows)) objective matrix — the four-generation
+        recording protocol's fast path: the mixed-radix decode and the
+        per-parameter value columns are built once and shared across
+        architectures (they are arch-independent); only the feature/
+        cost-model sweep runs per generation."""
+        import numpy as np
+        rows = list(rows)
+        out = np.empty((len(archs), len(rows)), dtype=np.float64)
+        if not rows:
+            return out
+        if self._columnar_ok(len(rows)):
+            comp = self.space.compiled()
+            cols = comp.value_columns(rows)
+            if self.arch_independent_features:
+                fbs = [self.feature_columns(cols, archs[0])] * len(archs)
+            else:
+                fbs = [self.feature_columns(cols, a) for a in archs]
+            if all(fb is not None for fb in fbs):
+                for i, (fb, arch) in enumerate(zip(fbs, archs)):
+                    out[i] = np.broadcast_to(
+                        np.asarray(estimate_seconds_batch(fb, arch)),
+                        (len(rows),))
+                return out
+        comp = self.space.compiled()
+        if comp is not None \
+                and type(self).evaluate is TunableProblem.evaluate:
+            # small batch: decode once, scalar feature math per arch (once
+            # overall when the features are arch-independent)
+            cfgs = comp.decode_many(rows)
+            if self.arch_independent_features:
+                feats = [self.features(c, archs[0]) for c in cfgs]
+                for i, arch in enumerate(archs):
+                    out[i] = [estimate_seconds(f, arch) for f in feats]
+            else:
+                for i, arch in enumerate(archs):
+                    out[i] = [estimate_seconds(self.features(c, arch), arch)
+                              for c in cfgs]
+            return out
+        for i, arch in enumerate(archs):
+            out[i] = self.objectives_for_rows(rows, arch)
+        return out
+
+    def trials_for_rows(self, rows: Sequence[int],
+                        arch: str = DEFAULT_ARCH) -> list[Trial]:
+        """Array-in/array-out evaluation of *valid* compiled-space rows —
+        the index-native runners' fast path.
+
+        Value columns come straight from the mixed-radix code matrix (no
+        per-config dicts), features from :meth:`feature_columns`, seconds
+        from the batched cost model; the one batched decode builds the
+        ``Trial`` configs for the trace.  Constraint checking is skipped:
+        callers pass mask-validated rows.  Falls back to
+        :meth:`evaluate_many` whenever the space is uncompiled, the problem
+        overrides :meth:`evaluate`, or there is no columnar feature path.
+        """
+        rows = list(rows)
+        if not rows:
+            return []
+        comp = self.space.compiled()
+        fb = None
+        if self._columnar_ok(len(rows)):
+            fb = self.feature_columns(comp.value_columns(rows), arch)
+        if fb is None:
+            if comp is not None \
+                    and type(self).evaluate is TunableProblem.evaluate:
+                # small batch: rows are pre-validated, so skip ``satisfies``
+                # and run the scalar feature math straight
+                out = []
+                for c in comp.decode_many(rows):
+                    feats = self.features(c, arch)
+                    t = estimate_seconds(feats, arch)
+                    out.append(Trial(c, t, arch, valid=math.isfinite(t),
+                                     info={"features": feats}))
+                return out
+            if comp is not None:
+                cfgs = comp.decode_many(rows)
+            else:
+                cfgs = [self.space.from_flat_index(int(r)) for r in rows]
+            return self.evaluate_many(cfgs, arch)
+        import numpy as np
+        times = np.broadcast_to(
+            np.asarray(estimate_seconds_batch(fb, arch), dtype=np.float64),
+            (len(rows),))
+        cfgs = comp.decode_many(rows)
+        out = []
+        for c, t in zip(cfgs, times):
+            t = float(t)
+            out.append(Trial(c, t, arch, valid=math.isfinite(t)))
+        return out
 
     # -- convenience ------------------------------------------------------ #
     def evaluate_many(self, configs: Sequence[Config],
@@ -99,8 +251,11 @@ class TunableProblem:
                 slots.append(len(trials))
                 trials.append(None)
         if slots:
+            import numpy as np
             batch = self.features_many([configs[j] for j in slots], arch)
-            times = estimate_seconds_batch(batch, arch)
+            times = np.broadcast_to(
+                np.asarray(estimate_seconds_batch(batch, arch),
+                           dtype=np.float64), (len(slots),))
             per_row = batch.features or None
             for i, j in enumerate(slots):
                 t = float(times[i])

@@ -23,6 +23,13 @@ pays that cost once, vectorized:
 * **Hamming-1 neighbor tables in CSR form** over the valid set, in the same
   per-node order as ``SearchSpace.neighbors`` (parameter order, then value
   order) so consumers can swap paths bit-for-bit,
+* **row-native draws** for the index-native tuners:
+  :meth:`sample_row_rejection` and :meth:`random_neighbor_row` replicate the
+  legacy ``SearchSpace.sample`` / ``random_neighbor`` rng draw sequences
+  exactly (pure-int row arithmetic + one mask lookup per try, no dicts), and
+  :meth:`sample_neighbor_alias` draws a Hamming-1 move in O(1) from per-row
+  alias tables over the CSR neighbor lists (same conditional distribution as
+  the rejection sampler, different — shorter — draw sequence),
 * an **on-disk cache** (``.npz``) of the mask and neighbor tables, keyed by a
   structural fingerprint of the space.
 
@@ -166,6 +173,12 @@ class CompiledSpace:
         self.row_pos[self.valid_rows] = np.arange(len(self.valid_rows))
         self._nbr_indptr = nbr_indptr
         self._nbr_indices = nbr_indices
+        self._alias: tuple[np.ndarray, np.ndarray] | None = None
+        self._value_arrays: list[np.ndarray] | None = None
+        #: plain-int copies for the tuners' per-candidate hot loops (numpy
+        #: scalar indexing costs ~3x a list lookup at these sizes)
+        self.py_cards = [int(c) for c in self.cards]
+        self.py_strides = [int(s) for s in self.strides]
 
     # ------------------------------------------------------------------ #
     # construction
@@ -211,18 +224,27 @@ class CompiledSpace:
 
     @staticmethod
     def _compute_mask(space: "SearchSpace") -> np.ndarray:
-        codes = CompiledSpace.codes_for(space)
-        n = len(codes)
+        cards = [p.cardinality for p in space.params]
+        n = 1
+        for c in cards:
+            n *= c
+        strides = mixed_radix_strides(cards)
         mask = np.ones(n, dtype=bool)
         names = space.param_names
         pyvals = [p.values for p in space.params]
         cols: dict[str, np.ndarray] | None = None
+        codes: np.ndarray | None = None       # built only for py fallbacks
         for c in space.constraints:
             vec = getattr(c, "vec", None)
             if vec is not None:
                 if cols is None:
-                    cols = {nm: _value_array(pv)[codes[:, i]]
-                            for i, (nm, pv) in enumerate(zip(names, pyvals))}
+                    # mixed-radix value columns by repeat/tile — identical
+                    # to fancy-indexing the code matrix, without building it
+                    cols = {nm: np.tile(np.repeat(_value_array(pv), s),
+                                        n // (s * k))
+                            for nm, pv, s, k
+                            in zip(names, pyvals,
+                                   (int(s) for s in strides), cards)}
                 res = np.asarray(vec(cols), dtype=bool)
                 if res.shape != (n,):
                     raise ValueError(
@@ -232,6 +254,8 @@ class CompiledSpace:
             else:
                 # Python fallback, only on rows still alive — preserves the
                 # declaration-order short-circuit of ``satisfies``.
+                if codes is None:
+                    codes = CompiledSpace.codes_for(space)
                 alive = np.flatnonzero(mask)
                 fn = c.fn
                 drop = [r for r in alive
@@ -286,6 +310,20 @@ class CompiledSpace:
         order (row order)."""
         return self.decode_many(self.valid_rows)
 
+    def value_columns(self, rows: Sequence[int] | np.ndarray
+                      ) -> dict[str, np.ndarray]:
+        """Per-parameter *value* column arrays for ``rows`` — the same
+        column form the vectorized constraints consume, fed to the
+        per-kernel ``feature_columns`` overrides.  No dicts per config."""
+        rows = np.asarray(rows, dtype=np.int64)
+        codes = CompiledSpace.codes_for(self.space, rows)
+        if self._value_arrays is None:
+            self._value_arrays = [_value_array(p.values)
+                                  for p in self.space.params]
+        return {p.name: va[codes[:, i]]
+                for i, (p, va) in enumerate(zip(self.space.params,
+                                                self._value_arrays))}
+
     # ------------------------------------------------------------------ #
     # sampling
     # ------------------------------------------------------------------ #
@@ -303,6 +341,128 @@ class CompiledSpace:
         k = min(n, len(self.valid_rows))
         return self.valid_rows[np.asarray(
             rng.sample(range(len(self.valid_rows)), k), dtype=np.int64)]
+
+    def sample_row_rejection(self, rng: random.Random,
+                             max_tries: int = 10_000) -> int:
+        """Rejection draw of a valid row with the *legacy draw sequence*.
+
+        ``SearchSpace.sample`` draws one ``rng.choice(p.values)`` per
+        parameter per try; ``rng.choice(seq)`` consumes exactly one
+        ``_randbelow(len(seq))``, which is what ``rng.randrange(card)``
+        consumes too — so this method returns the row of the config the
+        legacy path would return, from the identical rng state, without
+        building a single dict.  The index-native tuners use it wherever
+        their scalar oracles call ``space.sample``.
+        """
+        mask = self.mask
+        cards = self.py_cards
+        strides = self.py_strides
+        # rng.choice(seq) == seq[rng._randbelow(len(seq))] in CPython;
+        # calling _randbelow directly skips randrange's argument ceremony
+        # while consuming the identical draws (trajectory tests enforce it)
+        randbelow = rng._randbelow
+        n_params = len(cards)
+        for _ in range(max_tries):
+            row = 0
+            for i in range(n_params):
+                row += randbelow(cards[i]) * strides[i]
+            if mask[row]:
+                return row
+        raise RuntimeError(
+            f"{self.space.name}: could not sample a valid config "
+            f"in {max_tries} tries")
+
+    def random_neighbor_row(self, row: int, rng: random.Random,
+                            max_tries: int = 1000) -> int:
+        """Row-native ``SearchSpace.random_neighbor``: identical draw
+        sequence (param choice, value choice, retry on self/invalid),
+        returning ``row`` itself when no move is found — all in int
+        arithmetic plus one mask lookup per try."""
+        mask = self.mask
+        cards = self.py_cards
+        strides = self.py_strides
+        n_params = len(cards)
+        randbelow = rng._randbelow      # draw-identical to rng.choice
+        for _ in range(max_tries):
+            d = randbelow(n_params)
+            j = randbelow(cards[d])
+            cur = (row // strides[d]) % cards[d]
+            if j == cur:
+                continue
+            nrow = row + (j - cur) * strides[d]
+            if mask[nrow]:
+                return nrow
+        return row
+
+    # ------------------------------------------------------------------ #
+    # alias-sampled neighbor moves
+    # ------------------------------------------------------------------ #
+    def edge_params(self) -> np.ndarray:
+        """Per-CSR-edge moved-parameter index: edge ``e`` changes parameter
+        ``edge_params()[e]`` of its source config."""
+        indptr, indices = self.csr_neighbors()
+        src_pos = np.repeat(np.arange(len(indptr) - 1, dtype=np.int64),
+                            np.diff(indptr))
+        delta = np.abs(self.valid_rows[indices] - self.valid_rows[src_pos])
+        # a Hamming-1 move along dim d shifts the row by |j-cur| * strides[d]
+        # with |j-cur| < cards[d], so strides[d] <= |delta| < strides[d-1]:
+        # the dim is the first stride <= |delta| in the descending stride
+        # vector, i.e. the count of strides strictly greater than |delta|.
+        out = np.searchsorted(-self.strides, -delta, side="left")
+        return out.astype(np.int64)
+
+    def neighbor_alias(self) -> tuple[np.ndarray, np.ndarray]:
+        """Per-row Vose alias tables over the CSR neighbor lists, weighted
+        ``1/cards[moved_param]`` — the conditional distribution of the
+        accepted legacy rejection draw (uniform parameter, then uniform
+        value).  Aligned with ``csr_neighbors()``: entries
+        ``indptr[k]:indptr[k+1]`` are row ``k``'s (prob, alias) table, alias
+        indices *local* to the segment.  Built lazily, kept in memory."""
+        if self._alias is None:
+            indptr, indices = self.csr_neighbors()
+            w = 1.0 / self.cards[self.edge_params()].astype(np.float64)
+            prob = np.ones(len(indices), dtype=np.float64)
+            alias = np.zeros(len(indices), dtype=np.int64)
+            for k in range(len(indptr) - 1):
+                lo, hi = int(indptr[k]), int(indptr[k + 1])
+                deg = hi - lo
+                if deg == 0:
+                    continue
+                p = w[lo:hi] * (deg / w[lo:hi].sum())
+                small = [i for i in range(deg) if p[i] < 1.0]
+                large = [i for i in range(deg) if p[i] >= 1.0]
+                while small and large:
+                    s, g = small.pop(), large.pop()
+                    prob[lo + s] = p[s]
+                    alias[lo + s] = g
+                    p[g] = (p[g] + p[s]) - 1.0
+                    (small if p[g] < 1.0 else large).append(g)
+                for i in large + small:       # numerical leftovers: prob 1
+                    prob[lo + i] = 1.0
+                    alias[lo + i] = i
+        else:
+            return self._alias
+        self._alias = (prob, alias)
+        return self._alias
+
+    def sample_neighbor_alias(self, row: int, rng: random.Random) -> int:
+        """O(1) draw of a valid Hamming-1 neighbor row of a *valid* ``row``
+        from the alias tables (two rng draws: slot, coin).  Returns ``-1``
+        when the row has no valid neighbors (degenerate CSR row) and raises
+        ``ValueError`` for rows outside the valid set."""
+        pos = int(self.row_pos[row])
+        if pos < 0:
+            raise ValueError(f"row {row} is not a valid config row")
+        indptr, indices = self.csr_neighbors()
+        lo, hi = int(indptr[pos]), int(indptr[pos + 1])
+        deg = hi - lo
+        if deg == 0:
+            return -1
+        prob, alias = self.neighbor_alias()
+        k = rng.randrange(deg)
+        if rng.random() >= prob[lo + k]:
+            k = int(alias[lo + k])
+        return int(self.valid_rows[indices[lo + k]])
 
     # ------------------------------------------------------------------ #
     # CSR Hamming-1 neighbor tables

@@ -1,13 +1,23 @@
-"""Differential evolution adapted to discrete index space (rand/1/bin)."""
+"""Differential evolution adapted to discrete index space (rand/1/bin).
+
+Index-native path: the population lives as an ``int32[pop, n_params]`` code
+matrix (plus plain-int list mirrors for the per-challenger arithmetic,
+where Python beats numpy at these widths); donor/trial vectors use the
+scalar loop's exact float math and banker's rounding, and the
+decode/satisfies round-trip per challenger collapses to mixed-radix row
+arithmetic plus one validity-mask lookup.
+"""
 
 from __future__ import annotations
 
 import math
 from collections import deque
 
+import numpy as np
+
 from ..problem import Trial
 from ..space import Config, SearchSpace
-from .base import Tuner
+from .base import Tuner, sample_positions
 
 
 class DifferentialEvolution(Tuner):
@@ -23,16 +33,34 @@ class DifferentialEvolution(Tuner):
         # consume the queue in ask order, so a whole generation of challengers
         # can be in flight at once (the batched/orchestrated protocol).
         self.max_parallel_asks = pop_size
-        self.pop: list[list[int]] = []        # encoded index vectors
+        self.pop: list[list[int]] = []        # encoded index vectors (scalar)
         self.obj: list[float] = []
         self._targets: deque[int | None] = deque()
+        # index-native population: per-slot code rows + objectives, exposed
+        # as int32/float64 matrices via :attr:`pop_codes` /
+        # :attr:`pop_objectives` (derived views; the challenger loop reads
+        # the plain-int lists directly)
+        self._pop_n = 0
+        self._codes_py: list[list[int]] = []
+        self._obj_py: list[float] = []
 
+    @property
+    def pop_codes(self) -> np.ndarray:
+        """Struct-of-arrays view of the population: ``int32[pop, P]``."""
+        return np.asarray(self._codes_py, dtype=np.int32).reshape(
+            self._pop_n, len(self.space.params))
+
+    @property
+    def pop_objectives(self) -> np.ndarray:
+        return np.asarray(self._obj_py, dtype=np.float64)
+
+    # -- scalar path (oracle / fallback) ---------------------------------- #
     def _decode(self, vec) -> Config:
         clipped = [max(0, min(int(round(v)), p.cardinality - 1))
                    for v, p in zip(vec, self.space.params)]
         return self.space.decode(clipped)
 
-    def ask(self) -> Config:
+    def ask_scalar(self) -> Config:
         if len(self.pop) + len(self._targets) < self.pop_size:
             self._targets.append(None)
             return self.space.sample(self.rng)
@@ -52,7 +80,7 @@ class DifferentialEvolution(Tuner):
         self._targets.append(None)
         return self.space.sample(self.rng)
 
-    def tell(self, trial: Trial) -> None:
+    def tell_scalar(self, trial: Trial) -> None:
         obj = trial.objective if trial.ok else math.inf
         enc = list(self.space.encode(trial.config))
         target = self._targets.popleft() if self._targets else None
@@ -66,3 +94,70 @@ class DifferentialEvolution(Tuner):
         elif obj <= self.obj[target]:
             self.pop[target] = enc
             self.obj[target] = obj
+
+    # -- index-native path ------------------------------------------------ #
+    def _ask_row(self) -> int:
+        comp = self._comp
+        rng = self.rng
+        if self._pop_n + len(self._targets) < self.pop_size:
+            self._targets.append(None)
+            return comp.sample_row_rejection(rng)
+        cards = comp.py_cards
+        strides = comp.py_strides
+        mask = comp.mask
+        n_params = len(cards)
+        f, cr = self.f, self.cr
+        codes = self._codes_py
+        random_ = rng.random
+        randbelow = rng._randbelow      # draw-identical to randrange
+        for _ in range(100):
+            i = randbelow(self.pop_size)
+            a, b, c = sample_positions(rng, self.pop_size, 3)
+            pa, pb, pc = codes[a], codes[b], codes[c]
+            pi = codes[i]
+            jrand = randbelow(n_params)
+            # per-dim: one coin always (the scalar comprehension evaluates
+            # ``random() < cr`` before the ``or``), donor math in Python
+            # floats — the oracle's exact rounding/clipping
+            row = 0
+            for d in range(n_params):
+                if random_() < cr or d == jrand:
+                    v = int(round(pa[d] + f * (pb[d] - pc[d])))
+                    hi = cards[d] - 1
+                    if v > hi:
+                        v = hi
+                    if v < 0:
+                        v = 0
+                else:
+                    v = pi[d]
+                row += v * strides[d]
+            if mask[row]:
+                self._targets.append(i)
+                return row
+        self._targets.append(None)
+        return comp.sample_row_rejection(rng)
+
+    def ask_rows(self, n: int) -> list[int]:
+        return [self._ask_row() for _ in range(max(1, n))]
+
+    def tell_rows(self, rows, objectives) -> None:
+        from ..spacetable import CompiledSpace
+        codes = CompiledSpace.codes_for(self.space, np.asarray(rows))
+        for enc, obj in zip(codes.tolist(), objectives):
+            obj = float(obj)
+            target = self._targets.popleft() if self._targets else None
+            n = self._pop_n
+            if target is None or target >= n:
+                self._codes_py.append(enc)
+                self._obj_py.append(obj)
+                self._pop_n = n + 1
+                if self._pop_n > self.pop_size:
+                    # drop the worst (first maximum, like ``max(range, key)``)
+                    worst = max(range(self._pop_n),
+                                key=self._obj_py.__getitem__)
+                    self._codes_py.pop(worst)
+                    self._obj_py.pop(worst)
+                    self._pop_n = self.pop_size
+            elif obj <= self._obj_py[target]:
+                self._codes_py[target] = enc
+                self._obj_py[target] = obj

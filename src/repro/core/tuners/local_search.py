@@ -3,6 +3,11 @@
 This is the algorithm whose behaviour the fitness-flow-graph / proportion-of-
 centrality metric models (Schoonhoven et al.): walk to the first strictly
 better Hamming-1 neighbor; restart from a random config at local minima.
+
+Index-native path: the walk state is a row; the unexplored neighborhood is
+a shuffled list of rows served straight from the cached CSR neighbor table
+(same neighbor order as the iterator, and ``rng.shuffle`` draws depend only
+on length — so the exploration sequence matches the scalar oracle exactly).
 """
 
 from __future__ import annotations
@@ -25,7 +30,11 @@ class LocalSearch(Tuner):
         self.current_obj = math.inf
         self._pending: list[Config] = []       # unexplored neighbors
         self._best_nb: tuple[float, Config] | None = None
+        self._cur_row: int | None = None
+        self._pending_rows: list[int] = []
+        self._best_nb_row: tuple[float, int] | None = None
 
+    # -- scalar path (oracle / fallback) ---------------------------------- #
     def _restart(self) -> Config:
         self.current = None
         self.current_obj = math.inf
@@ -33,7 +42,7 @@ class LocalSearch(Tuner):
         self._best_nb = None
         return self.space.sample(self.rng)
 
-    def ask(self) -> Config:
+    def ask_scalar(self) -> Config:
         if self.current is None:
             return self._restart()
         if not self._pending:
@@ -55,7 +64,7 @@ class LocalSearch(Tuner):
         self.rng.shuffle(self._pending)
         self._best_nb = None
 
-    def tell(self, trial: Trial) -> None:
+    def tell_scalar(self, trial: Trial) -> None:
         if self.current is None:
             if trial.ok:
                 self.current, self.current_obj = trial.config, trial.objective
@@ -70,3 +79,52 @@ class LocalSearch(Tuner):
         if trial.objective < self.current_obj:    # first improvement: move
             self.current, self.current_obj = trial.config, trial.objective
             self._fill_neighbors()
+
+    # -- index-native path ------------------------------------------------ #
+    def _restart_row(self) -> int:
+        self._cur_row = None
+        self.current_obj = math.inf
+        self._pending_rows = []
+        self._best_nb_row = None
+        return self._comp.sample_row_rejection(self.rng)
+
+    def _fill_neighbor_rows(self) -> None:
+        rows = self._comp.neighbor_rows(self._cur_row)
+        self._pending_rows = [int(r) for r in rows] if rows is not None else []
+        self.rng.shuffle(self._pending_rows)
+        self._best_nb_row = None
+
+    def _ask_row(self) -> int:
+        if self._cur_row is None:
+            return self._restart_row()
+        if not self._pending_rows:
+            if self.best_improvement and self._best_nb_row is not None \
+                    and self._best_nb_row[0] < self.current_obj:
+                obj, row = self._best_nb_row
+                self._cur_row, self.current_obj = row, obj
+                self._fill_neighbor_rows()
+                if self._pending_rows:
+                    return self._pending_rows.pop()
+            return self._restart_row()
+        return self._pending_rows.pop()
+
+    def ask_rows(self, n: int) -> list[int]:
+        return [self._ask_row() for _ in range(max(1, n))]
+
+    def tell_rows(self, rows, objectives) -> None:
+        for row, obj in zip(rows, objectives):
+            row = int(row)
+            if self._cur_row is None:
+                if math.isfinite(obj):
+                    self._cur_row, self.current_obj = row, obj
+                    self._fill_neighbor_rows()
+                continue
+            if not math.isfinite(obj):
+                continue
+            if self.best_improvement:
+                if self._best_nb_row is None or obj < self._best_nb_row[0]:
+                    self._best_nb_row = (obj, row)
+                continue
+            if obj < self.current_obj:            # first improvement: move
+                self._cur_row, self.current_obj = row, obj
+                self._fill_neighbor_rows()

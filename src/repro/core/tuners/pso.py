@@ -1,9 +1,18 @@
-"""Discrete particle swarm over encoded index vectors."""
+"""Discrete particle swarm over encoded index vectors.
+
+Index-native path: particles fly through *code space* directly — velocity
+updates, rounding, and clipping happen on plain Python floats (identical
+arithmetic, draw order, and banker's rounding as the scalar oracle below),
+and the decode/satisfies round-trip per try collapses to mixed-radix row
+arithmetic plus one validity-mask lookup.  No config dicts anywhere.
+"""
 
 from __future__ import annotations
 
 import math
 from collections import deque
+
+import numpy as np
 
 from ..problem import Trial
 from ..space import Config, SearchSpace
@@ -29,13 +38,25 @@ class ParticleSwarm(Tuner):
         self._cur = 0
         self._pending: deque[int] = deque()
         self._init_left = n_particles
+        # index-native state: positions/velocities are continuous
+        # relaxations of the code vectors, kept as plain-float lists (the
+        # 30-try velocity loop is pure Python; numpy per-op overhead loses
+        # at these widths), with pbest as a struct-of-arrays pair
+        self._pos_py: list[list[float]] = []
+        self._vel_py: list[list[float]] = []
+        self._pbest_py: list[list[float]] = []
+        self._pbest_obj = np.full(n_particles, math.inf)
+        self._gbest_py: list[float] = [0.0] * dims
+        self._gbest_obj = math.inf
+        self._n_alive = 0
 
+    # -- scalar path (oracle / fallback) ---------------------------------- #
     def _decode(self, vec) -> Config:
         clipped = [max(0, min(int(round(v)), p.cardinality - 1))
                    for v, p in zip(vec, self.space.params)]
         return self.space.decode(clipped)
 
-    def ask(self) -> Config:
+    def ask_scalar(self) -> Config:
         if self._init_left > 0:
             cfg = self.space.sample(self.rng)
             enc = [float(i) for i in self.space.encode(cfg)]
@@ -64,7 +85,7 @@ class ParticleSwarm(Tuner):
             self.vel[i] = [self.rng.uniform(-2, 2) for _ in self.vel[i]]
         return self.space.sample(self.rng)
 
-    def tell(self, trial: Trial) -> None:
+    def tell_scalar(self, trial: Trial) -> None:
         obj = trial.objective if trial.ok else math.inf
         i = self._pending.popleft() if self._pending else self._cur
         enc = [float(x) for x in self.space.encode(trial.config)]
@@ -72,3 +93,77 @@ class ParticleSwarm(Tuner):
             self.pbest[i] = (obj, enc)
         if obj < self.gbest[0]:
             self.gbest = (obj, enc)
+
+    # -- index-native path ------------------------------------------------ #
+    def _ask_row(self) -> int:
+        comp = self._comp
+        rng = self.rng
+        dims = len(self.space.params)
+        if self._init_left > 0:
+            row = comp.sample_row_rejection(rng)
+            strides = comp.py_strides
+            cards = comp.py_cards
+            enc = [float((row // strides[d]) % cards[d])
+                   for d in range(dims)]
+            i = self._n_alive
+            self._pos_py.append(enc)
+            self._vel_py.append([rng.uniform(-1, 1) for _ in range(dims)])
+            self._pbest_py.append(list(enc))
+            self._pbest_obj[i] = math.inf
+            self._n_alive += 1
+            self._cur = i
+            self._init_left -= 1
+            self._pending.append(i)
+            return row
+        i = self._cur = (self._cur + 1) % self.n
+        self._pending.append(i)
+        mask = comp.mask
+        cards = comp.py_cards
+        strides = comp.py_strides
+        w, c1, c2 = self.w, self.c1, self.c2
+        random_ = rng.random
+        pos, vel = self._pos_py[i], self._vel_py[i]
+        pb, gb = self._pbest_py[i], self._gbest_py
+        for _ in range(30):
+            # per-dim: two draws (c1 term, c2 term) in the scalar order;
+            # everything in Python floats — the oracle's exact arithmetic
+            new_v = [0.0] * dims
+            new_p = [0.0] * dims
+            row = 0
+            for d in range(dims):
+                p = pos[d]
+                v = (w * vel[d]
+                     + c1 * random_() * (pb[d] - p)
+                     + c2 * random_() * (gb[d] - p))
+                new_v[d] = v
+                p = p + v
+                new_p[d] = p
+                iv = int(round(p))
+                hi = cards[d] - 1
+                if iv > hi:
+                    iv = hi
+                if iv < 0:
+                    iv = 0
+                row += iv * strides[d]
+            if mask[row]:
+                self._vel_py[i] = new_v
+                self._pos_py[i] = new_p
+                return row
+            vel = self._vel_py[i] = [rng.uniform(-2, 2) for _ in range(dims)]
+        return comp.sample_row_rejection(rng)
+
+    def ask_rows(self, n: int) -> list[int]:
+        return [self._ask_row() for _ in range(max(1, n))]
+
+    def tell_rows(self, rows, objectives) -> None:
+        from ..spacetable import CompiledSpace
+        codes = CompiledSpace.codes_for(self.space, np.asarray(rows))
+        for enc, obj in zip(codes.astype(np.float64), objectives):
+            obj = float(obj)
+            i = self._pending.popleft() if self._pending else self._cur
+            if obj < self._pbest_obj[i]:
+                self._pbest_obj[i] = obj
+                self._pbest_py[i] = enc.tolist()
+            if obj < self._gbest_obj:
+                self._gbest_obj = obj
+                self._gbest_py = enc.tolist()

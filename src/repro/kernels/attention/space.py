@@ -4,8 +4,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ...core.costmodel import KernelFeatures
+from ...core.costmodel import FeatureBatch, KernelFeatures
 from ...core.space import Config, Constraint, Param, SearchSpace
 from ..common import PORTABLE_VMEM, KernelProblem, cdiv
 from . import kernel, ref
@@ -34,12 +35,24 @@ class AttentionProblem(KernelProblem):
             Param("skip_masked", (0, 1)),
             Param("acc_dtype", ("f32", "bf16")),
         ]
+        def ws_bytes_vec(c: dict):
+            bq, bkv, bh = c["block_q"], c["block_kv"], c["block_h"]
+            acc_b = np.where(c["acc_dtype"] == "f32", 4, 2)
+            return (bh * bq * d * 2 + 2 * bkv * d * 2
+                    + bh * bq * bkv * 4 * 2
+                    + bh * bq * d * acc_b + 2 * bh * bq * 4)
+
         constraints = [
             Constraint("fits", lambda c: c["block_q"] <= self.shape["tq"]
-                       and c["block_kv"] <= self.shape["tk"]),
+                       and c["block_kv"] <= self.shape["tk"],
+                       vec=lambda c: (c["block_q"] <= self.shape["tq"])
+                       & (c["block_kv"] <= self.shape["tk"])),
             Constraint("gqa_group", lambda c: c["block_h"] <= g
-                       and g % c["block_h"] == 0),
-            Constraint("vmem", lambda c: 2 * ws_bytes(c) <= PORTABLE_VMEM),
+                       and g % c["block_h"] == 0,
+                       vec=lambda c: (c["block_h"] <= g)
+                       & (g % c["block_h"] == 0)),
+            Constraint("vmem", lambda c: 2 * ws_bytes(c) <= PORTABLE_VMEM,
+                       vec=lambda c: 2 * ws_bytes_vec(c) <= PORTABLE_VMEM),
         ]
         return SearchSpace(params, constraints, name="flash_attention")
 
@@ -67,6 +80,34 @@ class AttentionProblem(KernelProblem):
             grid_steps=float(hq / bh * gq * gkv),
             mxu_tile=(bq, bkv, d),
             dtype_bytes=2 if c["acc_dtype"] == "bf16" else 4,
+            lane_extent=bkv, sublane_extent=bq,
+        )
+
+    def feature_columns(self, c: dict, arch: str) -> FeatureBatch:
+        """Vectorized :meth:`features` over value columns (bit-identical)."""
+        hq, hkv, tq, tk, d = (self.shape[k]
+                              for k in ("hq", "hkv", "tq", "tk", "d"))
+        bq = np.minimum(c["block_q"], tq)
+        bkv = np.minimum(c["block_kv"], tk)
+        bh = c["block_h"]
+        gq, gkv = -(-tq // bq), -(-tk // bkv)
+        frac = np.where(c["skip_masked"] == 1, 0.55, 1.0)
+        mxu = 4.0 * hq * tq * tk * d * frac
+        vpu = 6.0 * hq * tq * tk * frac
+        trans = 1.0 * hq * tq * tk * frac
+        kv_reads = (hq / bh) * gq * tk * d * 2 * 2
+        hbm = hq * tq * d * 2 * 2 + kv_reads
+        acc_b = np.where(c["acc_dtype"] == "f32", 4, 2)
+        ws = (bh * bq * d * 2 + 2 * bkv * d * 2 + bh * bq * bkv * 4 * 2
+              + bh * bq * d * acc_b + 2 * bh * bq * 4)
+        return FeatureBatch.from_columns(
+            len(bq),
+            mxu_flops=mxu, vpu_flops=vpu, transcendental_ops=trans,
+            hbm_bytes=hbm, vmem_working_set=ws,
+            grid_steps=hq / bh * gq * gkv,
+            tile_m=np.maximum(1, bq), tile_n=np.maximum(1, bkv),
+            tile_k=max(1, d),
+            dtype_bytes=np.where(c["acc_dtype"] == "bf16", 2, 4),
             lane_extent=bkv, sublane_extent=bq,
         )
 

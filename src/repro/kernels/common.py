@@ -56,6 +56,9 @@ class KernelProblem(TunableProblem):
 
     #: subclasses set these
     default_shape: dict[str, int] = {}
+    #: every suite kernel derives features from (config, shape) only — the
+    #: TPU generation enters at cost-model-estimate time
+    arch_independent_features = True
 
     def __init__(self, shape: dict[str, int] | None = None):
         self.shape = dict(self.default_shape)

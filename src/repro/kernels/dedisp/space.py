@@ -4,8 +4,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ...core.costmodel import KernelFeatures
+from ...core.costmodel import FeatureBatch, KernelFeatures
 from ...core.space import Config, Constraint, Param, SearchSpace
 from ..common import PORTABLE_VMEM, KernelProblem, cdiv
 from . import kernel, ref
@@ -37,11 +38,21 @@ class DedispProblem(KernelProblem):
             Param("unroll_d", (1, 2, 4, 8)),
             Param("acc_dtype", ("f32", "bf16")),
         ]
+        def vmem_ok_vec(c: dict) -> np.ndarray:
+            tc = np.where(c["time_chunk"] == 0, self.shape["t_out"],
+                          c["time_chunk"])
+            ws = (c["block_c"] * self._t_in * 4
+                  + 2 * c["block_d"] * self.shape["t_out"] * 4
+                  + 2 * tc * 4)
+            return ws <= PORTABLE_VMEM
+
         constraints = [
-            Constraint("unroll_divides", lambda c: c["block_d"] % c["unroll_d"] == 0),
+            Constraint("unroll_divides", lambda c: c["block_d"] % c["unroll_d"] == 0,
+                       vec=lambda c: c["block_d"] % c["unroll_d"] == 0),
             Constraint("chunk_le_t", lambda c: c["time_chunk"]
-                       <= self.shape["t_out"]),
-            Constraint("vmem", vmem_ok),
+                       <= self.shape["t_out"],
+                       vec=lambda c: c["time_chunk"] <= self.shape["t_out"]),
+            Constraint("vmem", vmem_ok, vec=vmem_ok_vec),
         ]
         return SearchSpace(params, constraints, name="dedisp")
 
@@ -72,6 +83,38 @@ class DedispProblem(KernelProblem):
             grid_steps=float(gd * gc),
             dtype_bytes=acc_b,
             lane_extent=min(tc, t_out),
+            sublane_extent=bd,
+            unroll=c["unroll_d"],
+            inner_trip=bd,
+            serialization=serialization,
+        )
+
+    def feature_columns(self, c: dict, arch: str) -> FeatureBatch:
+        """Vectorized :meth:`features` over value columns (bit-identical)."""
+        cc, dd, t_out = (self.shape[k] for k in ("c", "d", "t_out"))
+        bd, bc = c["block_d"], c["block_c"]
+        gd, gc = -(-dd // bd), -(-cc // bc)
+        tc = np.where(c["time_chunk"] == 0, t_out, c["time_chunk"])
+        acc_b = np.where(c["acc_dtype"] == "f32", 4, 2)
+
+        adds = float(cc) * dd * t_out
+        vpu = np.where(c["acc_dtype"] == "bf16", adds * 0.75, adds * 1.0)
+        gather = gd.astype(np.float64) * cc * t_out * 4.0
+        hbm = gather * 0.0 + (gd * gc * bc * self._t_in * 4.0
+                              + dd * t_out * 4.0)
+        ws = (bc * self._t_in * 4.0 + 2 * bd * t_out * acc_b + 2 * tc * 4.0)
+        serialization = np.minimum(0.5, 0.15 / c["unroll_d"]
+                                   + 0.1 / np.maximum(1, bc))
+
+        return FeatureBatch.from_columns(
+            len(bd),
+            vpu_flops=vpu,
+            hbm_bytes=hbm,
+            gather_bytes=float(cc) * dd * t_out * 4.0 / np.maximum(1, bd),
+            vmem_working_set=ws,
+            grid_steps=gd * gc,
+            dtype_bytes=acc_b,
+            lane_extent=np.minimum(tc, t_out),
             sublane_extent=bd,
             unroll=c["unroll_d"],
             inner_trip=bd,

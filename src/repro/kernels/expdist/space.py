@@ -4,8 +4,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ...core.costmodel import KernelFeatures
+from ...core.costmodel import FeatureBatch, KernelFeatures
 from ...core.space import Config, Constraint, Param, SearchSpace
 from ..common import PORTABLE_VMEM, KernelProblem, cdiv
 from . import kernel, ref
@@ -33,15 +34,28 @@ class ExpdistProblem(KernelProblem):
             Param("exp_variant", ("exp", "exp2")),
             Param("compute_dtype", ("f32", "bf16")),
         ]
+        def vmem_ok_vec(c: dict) -> np.ndarray:
+            bi, bj = c["block_i"], c["block_j"]
+            cb = np.where(c["compute_dtype"] == "f32", 4, 2)
+            inter = 5 * bi * (bj // c["unroll_j"]) * cb
+            ws = 3 * bi * 4 + 3 * bj * 4 + inter + c["n_y_blocks"] * 4
+            return 2 * ws <= PORTABLE_VMEM
+
         constraints = [
             Constraint("column_implies_single",
-                       lambda c: not c["use_column"] or c["n_y_blocks"] == 1),
+                       lambda c: not c["use_column"] or c["n_y_blocks"] == 1,
+                       vec=lambda c: (c["use_column"] == 0)
+                       | (c["n_y_blocks"] == 1)),
             Constraint("unroll_chunks", lambda c: c["block_j"]
                        % c["unroll_j"] == 0
-                       and c["block_j"] // c["unroll_j"] >= 128),
+                       and c["block_j"] // c["unroll_j"] >= 128,
+                       vec=lambda c: (c["block_j"] % c["unroll_j"] == 0)
+                       & (c["block_j"] // c["unroll_j"] >= 128)),
             Constraint("njb_le_grid", lambda c: c["n_y_blocks"]
-                       <= cdiv(self.shape["kb"], c["block_j"])),
-            Constraint("vmem", vmem_ok),
+                       <= cdiv(self.shape["kb"], c["block_j"]),
+                       vec=lambda c: c["n_y_blocks"]
+                       <= -(-self.shape["kb"] // c["block_j"])),
+            Constraint("vmem", vmem_ok, vec=vmem_ok_vec),
         ]
         return SearchSpace(params, constraints, name="expdist")
 
@@ -76,6 +90,41 @@ class ExpdistProblem(KernelProblem):
             dtype_bytes=cb,
             lane_extent=bj // c["unroll_j"],
             sublane_extent=min(bi, ka),
+            unroll=c["unroll_j"],
+            inner_trip=c["unroll_j"],
+            serialization=serialization,
+        )
+
+    def feature_columns(self, c: dict, arch: str) -> FeatureBatch:
+        """Vectorized :meth:`features` over value columns (bit-identical)."""
+        ka, kb = self.shape["ka"], self.shape["kb"]
+        bi, bj = c["block_i"], c["block_j"]
+        gi, gj = -(-ka // bi), -(-kb // bj)
+        cb = np.where(c["compute_dtype"] == "f32", 4, 2)
+        pairs = float(ka) * kb
+
+        base = 10.0 * pairs
+        vpu = np.where(c["compute_dtype"] == "bf16", base * 0.75, base)
+        trans = np.where(c["exp_variant"] == "exp2",
+                         pairs * 1.0, pairs * 1.25)
+
+        hbm = (gi * gj * bj * 3 * 4
+               + gi * bi * 3 * 4
+               + gi * c["n_y_blocks"] * 4)
+        inter = 5 * bi * (bj // c["unroll_j"]) * cb
+        ws = 3 * bi * 4 + 3 * bj * 4 + inter + c["n_y_blocks"] * 4
+        serialization = np.where(c["use_column"] == 1, 0.02, 0.04)
+
+        return FeatureBatch.from_columns(
+            len(bi),
+            vpu_flops=vpu,
+            transcendental_ops=trans,
+            hbm_bytes=hbm,
+            vmem_working_set=ws,
+            grid_steps=gi * gj,
+            dtype_bytes=cb,
+            lane_extent=bj // c["unroll_j"],
+            sublane_extent=np.minimum(bi, ka),
             unroll=c["unroll_j"],
             inner_trip=c["unroll_j"],
             serialization=serialization,

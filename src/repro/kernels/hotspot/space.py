@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ...core.costmodel import KernelFeatures
+from ...core.costmodel import FeatureBatch, KernelFeatures
 from ...core.space import Config, Constraint, Param, SearchSpace
 from ..common import PORTABLE_VMEM, KernelProblem, cdiv
 from . import kernel, ref
@@ -94,6 +94,43 @@ class HotspotProblem(KernelProblem):
             dtype_bytes=4,
             lane_extent=min(bw, w),
             sublane_extent=min(bh, h),
+            unroll=c["unroll_t"],
+            inner_trip=tt,
+            serialization=serialization,
+        )
+
+    def feature_columns(self, c: dict, arch: str) -> FeatureBatch:
+        """Vectorized :meth:`features` over value columns (bit-identical)."""
+        h, w, n_total = (self.shape[k] for k in ("h", "w", "n_total"))
+        bh, bw, tt = c["block_h"], c["block_w"], c["tt"]
+        gh, gw = -(-h // bh), -(-w // bw)
+        th, tw = bh + 2 * tt, bw + 2 * tt
+        acc_b = np.where(c["acc_dtype"] == "f32", 4, 2)
+        launches = -(-n_total // tt)
+
+        vpu_launch = 12.0 * gh * gw * th * tw * tt
+        vpu_launch = np.where(c["acc_dtype"] == "bf16",
+                              vpu_launch * 0.75, vpu_launch)
+        tile_bytes = gh * gw * th * tw * 4.0
+        power_stream = np.where(c["keep_power_vmem"] == 1, tile_bytes,
+                                tile_bytes * np.maximum(1, tt // 2))
+        hbm_launch = (h * w * 8.0
+                      + 2.0 * tile_bytes
+                      + 2.0 * power_stream
+                      + gh * gw * bh * bw * 4.0)
+        ws = th * tw * (4.0 + np.where(c["keep_power_vmem"] == 1, 4.0, 0.0)
+                        + 2.0 * acc_b) + bh * bw * 4.0
+        serialization = np.where(c["grid_order"] == "cm", 0.08, 0.0)
+
+        return FeatureBatch.from_columns(
+            len(bh),
+            vpu_flops=vpu_launch * launches,
+            hbm_bytes=hbm_launch * launches,
+            vmem_working_set=ws,
+            grid_steps=gh * gw * launches,
+            dtype_bytes=4,
+            lane_extent=np.minimum(bw, w),
+            sublane_extent=np.minimum(bh, h),
             unroll=c["unroll_t"],
             inner_trip=tt,
             serialization=serialization,

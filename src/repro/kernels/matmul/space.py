@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ...core.costmodel import TPU_GENERATIONS, KernelFeatures
+from ...core.costmodel import TPU_GENERATIONS, FeatureBatch, KernelFeatures
 from ...core.space import Config, Constraint, Param, SearchSpace
 from ..common import PORTABLE_VMEM, KernelProblem, cdiv, round_up
 from . import kernel, ref
@@ -110,6 +110,57 @@ class GemmProblem(KernelProblem):
             dtype_bytes=ab,
             lane_extent=min(bn, n),
             sublane_extent=min(bm, m),
+            unroll=uk,
+            inner_trip=uk,
+        )
+
+    def feature_columns(self, c: dict, arch: str) -> FeatureBatch:
+        """Vectorized :meth:`features`: the same expressions over value
+        columns (int64 exact, float64 in the scalar operation order), so
+        the batched cost model reproduces the per-config objectives bit for
+        bit."""
+        m, n, k = self.shape["m"], self.shape["n"], self.shape["k"]
+        bm, bn, bk = c["block_m"], c["block_n"], c["block_k"]
+        sk, uk = c["split_k"], c["unroll_k"]
+        ab = 2
+        acc_b = np.where(c["acc_dtype"] == "f32", 4, 2)
+
+        mp = -(-m // bm) * bm                  # round_up, columnwise
+        np_ = -(-n // bn) * bn
+        kp = -(-k // (bk * sk)) * (bk * sk)
+        gm, gn, gk = mp // bm, np_ // bn, kp // (bk * sk)
+
+        a_traffic = mp * (kp // sk) * gn * ab
+        b_traffic = (kp // sk) * np_ * gm * ab
+        order_mn = c["grid_order"] == "mn"
+        a_traffic = np.where((gk == 1) & order_mn,
+                             mp * (kp // sk) * ab, a_traffic)
+        b_traffic = np.where((gk == 1) & ~order_mn,
+                             (kp // sk) * np_ * ab, b_traffic)
+        c_traffic = mp * np_ * ab * 2
+        partial_traffic = np.where(sk > 1, sk * mp * np_ * 4 * 2, 0)
+        hbm = a_traffic + b_traffic + c_traffic + partial_traffic
+
+        ws = (bm * bk * ab + bk * bn * ab + bm * bn * (acc_b + ab + ab))
+
+        vpu = np.full(len(bm), 2.0 * m * n)
+        vpu = vpu + np.where(c["rhs_layout"] == "nk",
+                             0.5 * b_traffic / ab, 0.0)
+        vpu = vpu + np.where(sk > 1, (sk + 1.0) * m * n, 0.0)
+
+        return FeatureBatch.from_columns(
+            len(bm),
+            mxu_flops=2.0 * m * n * k,
+            vpu_flops=vpu,
+            hbm_bytes=hbm,
+            vmem_working_set=ws,
+            grid_steps=gm * gn * gk * sk,
+            tile_m=np.maximum(1, np.minimum(bm, m)),
+            tile_n=np.maximum(1, np.minimum(bn, n)),
+            tile_k=np.maximum(1, bk // uk),
+            dtype_bytes=ab,
+            lane_extent=np.minimum(bn, n),
+            sublane_extent=np.minimum(bm, m),
             unroll=uk,
             inner_trip=uk,
         )

@@ -4,8 +4,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ...core.costmodel import KernelFeatures
+from ...core.costmodel import FeatureBatch, KernelFeatures
 from ...core.space import Config, Constraint, Param, SearchSpace
 from ..common import PORTABLE_VMEM, KernelProblem, cdiv
 from . import kernel, ref
@@ -35,13 +36,23 @@ class NbodyProblem(KernelProblem):
             Param("rsqrt_method", ("exact", "approx")),
             Param("compute_dtype", ("f32", "bf16")),
         ]
+        def vmem_ok_vec(c: dict) -> np.ndarray:
+            bi, bj = c["block_i"], c["block_j"]
+            cb = np.where(c["compute_dtype"] == "f32", 4, 2)
+            inter = 6 * bi * (bj // c["unroll_j"]) * cb
+            ws = 4 * bi * 4 + 4 * bj * 4 + bj * 4 + inter + 3 * bi * 4
+            return 2 * ws <= PORTABLE_VMEM
+
         constraints = [
             Constraint("blocks_fit_n", lambda c: c["block_i"] <= n
-                       and c["block_j"] <= n),
+                       and c["block_j"] <= n,
+                       vec=lambda c: (c["block_i"] <= n) & (c["block_j"] <= n)),
             Constraint("unroll_chunks", lambda c: c["block_j"]
                        % c["unroll_j"] == 0
-                       and c["block_j"] // c["unroll_j"] >= 128),
-            Constraint("vmem", vmem_ok),
+                       and c["block_j"] // c["unroll_j"] >= 128,
+                       vec=lambda c: (c["block_j"] % c["unroll_j"] == 0)
+                       & (c["block_j"] // c["unroll_j"] >= 128)),
+            Constraint("vmem", vmem_ok, vec=vmem_ok_vec),
         ]
         return SearchSpace(params, constraints, name="nbody")
 
@@ -81,6 +92,42 @@ class NbodyProblem(KernelProblem):
             dtype_bytes=cb,
             lane_extent=lane,
             sublane_extent=min(bi, n),
+            unroll=c["unroll_j"],
+            inner_trip=c["unroll_j"],
+        )
+
+    def feature_columns(self, c: dict, arch: str) -> FeatureBatch:
+        """Vectorized :meth:`features` over value columns (bit-identical)."""
+        n = self.shape["n"]
+        bi, bj = c["block_i"], c["block_j"]
+        gi, gj = -(-n // bi), -(-n // bj)
+        cb = np.where(c["compute_dtype"] == "f32", 4, 2)
+
+        pairs = float(n) * n
+        base = 14.0 * pairs
+        vpu = np.where(c["compute_dtype"] == "bf16", base * 0.75, base)
+        approx = c["rsqrt_method"] == "approx"
+        trans = np.where(approx, pairs * 1.0, pairs * 2.0)
+        vpu = vpu + np.where(approx, 3.0 * pairs, 0.0)
+
+        aosf = np.where(c["layout"] == "aos", 4 / 3, 1.0)
+        hbm = (gi * gj * bj * 4 * 4 * aosf
+               + gi * bi * 4 * 4 * aosf
+               + n * 3 * 4)
+        inter = 6 * bi * (bj // c["unroll_j"]) * cb
+        ws = 4 * bi * 4 + 4 * bj * 4 + bj * 4 + inter + 3 * bi * 4
+
+        lane = np.where(c["layout"] == "soa", bj // c["unroll_j"], 32)
+        return FeatureBatch.from_columns(
+            len(bi),
+            vpu_flops=vpu,
+            transcendental_ops=trans,
+            hbm_bytes=hbm,
+            vmem_working_set=ws,
+            grid_steps=gi * gj,
+            dtype_bytes=cb,
+            lane_extent=lane,
+            sublane_extent=np.minimum(bi, n),
             unroll=c["unroll_j"],
             inner_trip=c["unroll_j"],
         )

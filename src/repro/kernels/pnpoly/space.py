@@ -4,8 +4,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ...core.costmodel import KernelFeatures
+from ...core.costmodel import FeatureBatch, KernelFeatures
 from ...core.space import Config, Constraint, Param, SearchSpace
 from ..common import PORTABLE_VMEM, KernelProblem, cdiv
 from . import kernel, ref
@@ -27,10 +28,15 @@ class PnpolyProblem(KernelProblem):
             Param("coord_layout", ("soa", "aos")),
         ]
         constraints = [
-            Constraint("unroll_le_v", lambda c: c["unroll_v"] <= v),
+            Constraint("unroll_le_v", lambda c: c["unroll_v"] <= v,
+                       vec=lambda c: c["unroll_v"] <= v),
             Constraint("vmem", lambda c: 2 * (2 * c["block_points"] * 4
                                               + 5 * v * 4
                                               + 6 * c["block_points"] * 4)
+                       <= PORTABLE_VMEM,
+                       vec=lambda c: 2 * (2 * c["block_points"] * 4
+                                          + 5 * v * 4
+                                          + 6 * c["block_points"] * 4)
                        <= PORTABLE_VMEM),
         ]
         return SearchSpace(params, constraints, name="pnpoly")
@@ -61,6 +67,42 @@ class PnpolyProblem(KernelProblem):
             hbm_bytes=hbm,
             vmem_working_set=float(ws),
             grid_steps=float(grid),
+            dtype_bytes=4,
+            lane_extent=lane,
+            sublane_extent=sub,
+            unroll=c["unroll_v"],
+            inner_trip=v,
+            serialization=serialization,
+        )
+
+    def feature_columns(self, c: dict, arch: str) -> FeatureBatch:
+        """Vectorized :meth:`features` over value columns (bit-identical)."""
+        n, v = self.shape["n"], self.shape["v"]
+        bp = c["block_points"]
+        grid = -(-n // bp)
+        # per-edge op counts: the method params' values (0..k) are the
+        # lookup-table indices
+        per_edge = np.array([7.0, 8.0, 9.0, 8.0])[c["between_method"]]
+        per_edge = per_edge + np.array([1.0, 1.0, 2.0])[c["use_method"]]
+        pre_off = c["precompute_slope"] == 0
+        per_edge = per_edge + np.where(pre_off, 3.0, 0.0)
+        vpu = per_edge * n * v
+        pre = np.where(pre_off, 0.0, (5.0 * v) * grid)
+        vpu = vpu + pre
+
+        hbm = 2.0 * n * 4 + n * 4 + 4 * v * 4 * 1.0
+        ws = (2 * bp * 4 + 5 * v * 4 + 6 * bp * 4)
+        soa = c["coord_layout"] == "soa"
+        lane = np.where(soa, bp, 32)
+        sub = np.where(soa, 8, bp)
+        serialization = 0.10 / c["unroll_v"]
+
+        return FeatureBatch.from_columns(
+            len(bp),
+            vpu_flops=vpu,
+            hbm_bytes=hbm,
+            vmem_working_set=ws,
+            grid_steps=grid,
             dtype_bytes=4,
             lane_extent=lane,
             sublane_extent=sub,

@@ -95,6 +95,11 @@ def run_session(spec: SessionSpec, *, problem: TunableProblem | None = None,
 
     cache: dict[int, object] = {}
     cap = _batch_cap(tuner)
+    # index-native fast path: ask rows, dedup on the rows themselves (a row
+    # *is* the flat index), evaluate through the pool's row path.  The ask
+    # stream, batch widths, trajectories, and journal are identical to the
+    # dict path — only the per-config encode/decode/flat_index work is gone.
+    native = tuner.index_native
     asks = 0
     stopped_early = False
     try:
@@ -110,13 +115,16 @@ def run_session(spec: SessionSpec, *, problem: TunableProblem | None = None,
             # diverge from the never-interrupted one.  A real kill has the
             # same semantics — only whole journaled batches survive.
             n = min(cap, spec.budget - len(res.trials))
-            cfgs = tuner.ask_batch(n)
-            asks += len(cfgs)
+            if native:
+                keys = [int(r) for r in tuner.ask_rows(max(1, n))]
+            else:
+                cfgs = tuner.ask_batch(n)
+                keys = [int(k) for k in space.flat_index_many(cfgs)] \
+                    if len(cfgs) > 1 else [space.flat_index(cfgs[0])]
+            asks += len(keys)
 
-            keys = [int(k) for k in space.flat_index_many(cfgs)] \
-                if len(cfgs) > 1 else [space.flat_index(cfgs[0])]
-            results: list = [None] * len(cfgs)
-            consume = [False] * len(cfgs)
+            results: list = [None] * len(keys)
+            consume = [False] * len(keys)
             fresh: list[int] = []          # positions to actually evaluate
             first_seen: dict[int, int] = {}
             for j, key in enumerate(keys):
@@ -137,21 +145,30 @@ def run_session(spec: SessionSpec, *, problem: TunableProblem | None = None,
                     first_seen[key] = j
                     fresh.append(j)
 
-            evaluated = pool.evaluate([cfgs[j] for j in fresh]) if fresh else []
+            if not fresh:
+                evaluated = []
+            elif native:
+                evaluated = pool.evaluate_rows([keys[j] for j in fresh])
+            else:
+                evaluated = pool.evaluate([cfgs[j] for j in fresh])
             journal_records = []
             for j, t in zip(fresh, evaluated):
                 cache[keys[j]] = t
                 results[j] = t
                 consume[j] = True
                 journal_records.append((keys[j], t))
-            for j in range(len(cfgs)):     # resolve intra-batch duplicates
+            for j in range(len(keys)):     # resolve intra-batch duplicates
                 if results[j] is None:
                     results[j] = cache[keys[j]]
 
             if store is not None and journal_records:
                 store.append_trials(sid, space, journal_records)
-            tuner.tell_batch(results)
-            for j in range(len(cfgs)):
+            if native:
+                tuner.tell_rows(keys, [t.objective if t.ok else math.inf
+                                       for t in results])
+            else:
+                tuner.tell_batch(results)
+            for j in range(len(keys)):
                 if consume[j]:
                     res.trials.append(results[j])
 

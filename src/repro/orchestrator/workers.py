@@ -33,6 +33,11 @@ def _evaluate_chunk(problem: TunableProblem, configs: list[Config],
     return problem.evaluate_many(configs, arch)
 
 
+def _evaluate_rows_chunk(problem: TunableProblem, rows: list[int],
+                         arch: str) -> list[Trial]:
+    return problem.trials_for_rows(rows, arch)
+
+
 def _evaluate_one(problem: TunableProblem, config: Config, arch: str) -> Trial:
     return problem.evaluate(config, arch)
 
@@ -85,21 +90,53 @@ class WorkerPool:
         self.close()
 
     # -- evaluation ------------------------------------------------------- #
+    def evaluate_rows(self, rows: Sequence[int],
+                      arch: str | None = None) -> list[Trial]:
+        """Row-native :meth:`evaluate`: valid compiled-space rows in, trials
+        out — same ordering/fault-isolation guarantees, but the chunks run
+        ``TunableProblem.trials_for_rows`` (value columns straight from the
+        code matrix, no per-config dict work until the one batched decode
+        that builds the trace configs)."""
+        rows = [int(r) for r in rows]
+        if not rows:
+            return []
+        if self.mode == "process":
+            # measured problems re-derive everything from configs anyway;
+            # keep one battle-tested path through the process pool
+            comp = self.problem.space.compiled()
+            cfgs = comp.decode_many(rows) if comp is not None else \
+                [self.problem.space.from_flat_index(r) for r in rows]
+            return self.evaluate(cfgs, arch)
+        return self._evaluate_chunked(rows, arch or self.arch,
+                                      _evaluate_rows_chunk,
+                                      self._rows_to_configs)
+
+    def _rows_to_configs(self, rows: list[int]) -> list[Config]:
+        comp = self.problem.space.compiled()
+        if comp is not None:
+            return comp.decode_many(rows)
+        return [self.problem.space.from_flat_index(int(r)) for r in rows]
+
     def evaluate(self, configs: Sequence[Config],
                  arch: str | None = None) -> list[Trial]:
         """Evaluate ``configs`` in parallel; ordered, fault-isolated."""
         configs = list(configs)
         if not configs:
             return []
-        arch = arch or self.arch
+        return self._evaluate_chunked(configs, arch or self.arch,
+                                      _evaluate_chunk, None)
+
+    def _evaluate_chunked(self, items: list, arch: str, chunk_fn,
+                          to_configs) -> list[Trial]:
         ex = self._executor()
 
         # 1. chunked fast path: one evaluate_many per worker
+        configs = items
         n_chunks = min(self.workers, len(configs))
         bounds = [round(i * len(configs) / n_chunks) for i in range(n_chunks + 1)]
         spans = [(bounds[i], bounds[i + 1]) for i in range(n_chunks)
                  if bounds[i] < bounds[i + 1]]
-        futs = [ex.submit(_evaluate_chunk, self.problem,
+        futs = [ex.submit(chunk_fn, self.problem,
                           configs[lo:hi], arch) for lo, hi in spans]
         out: list[Trial | None] = [None] * len(configs)
         retry: list[int] = []
@@ -115,6 +152,11 @@ class WorkerPool:
 
         # 2. per-config retry path through the job queue
         if retry:
+            if to_configs is not None:       # rows: decode just the retries
+                decoded = to_configs([items[i] for i in retry])
+                configs = list(items)
+                for i, cfg in zip(retry, decoded):
+                    configs[i] = cfg
             if broken:
                 ex = self._rebuild()
             self._evaluate_with_retries(configs, retry, out, arch, ex)

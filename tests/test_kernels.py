@@ -141,3 +141,84 @@ def test_invalid_configs_evaluate_to_inf():
     t = prob.evaluate(cfg)          # VMEM constraint must trip
     if not prob.space.satisfies(cfg):
         assert not t.valid and math.isinf(t.objective)
+
+
+# ------------------------------------------------------------------ #
+# index-native evaluation: columnar features == scalar features
+# ------------------------------------------------------------------ #
+@pytest.fixture(scope="module")
+def _problems():
+    return {name: cls() for name, cls in PROBLEMS.items()}
+
+
+@pytest.mark.parametrize("name", sorted(PROBLEMS))
+def test_feature_columns_bitwise_equal_scalar(name, _problems):
+    """Every kernel's vectorized ``feature_columns`` must reproduce the
+    per-config ``features`` path bit for bit — columns, and therefore
+    cost-model objectives, on every architecture."""
+    from repro.core.costmodel import (ARCH_NAMES, FeatureBatch,
+                                      estimate_seconds_batch)
+    prob = _problems[name]
+    comp = prob.space.compiled()
+    assert comp is not None
+    rows = comp.sample_rows_distinct(200, __import__("random").Random(3))
+    cols = comp.value_columns(rows)
+    cfgs = comp.decode_many(rows)
+    for arch in ARCH_NAMES:
+        fb = prob.feature_columns(cols, arch)
+        assert fb is not None
+        ref = FeatureBatch.from_features(
+            [prob.features(c, arch) for c in cfgs])
+        for field in FeatureBatch.FIELDS:
+            got = np.broadcast_to(np.asarray(getattr(fb, field)), (len(rows),))
+            assert np.array_equal(got, getattr(ref, field)), (arch, field)
+        assert np.array_equal(
+            np.broadcast_to(np.asarray(estimate_seconds_batch(fb, arch)),
+                            (len(rows),)),
+            estimate_seconds_batch(ref, arch)), arch
+
+
+@pytest.mark.parametrize("name", sorted(PROBLEMS))
+def test_vec_constraints_match_predicates(name, _problems):
+    """All suite constraints carry vectorized forms that agree with their
+    Python predicates over the whole cross product (the compiled mask is
+    exactly the predicate-chain acceptance set)."""
+    from repro.core.spacetable import CompiledSpace
+    sp = _problems[name].space
+    assert all(c.vec is not None for c in sp.constraints), name
+    comp = sp.compiled()
+    codes = CompiledSpace.codes_for(sp)
+    names = sp.param_names
+    pyvals = [p.values for p in sp.params]
+    # spot-check a deterministic slice of rows (full sweep is the
+    # spacetable property tests' job on random spaces)
+    rows = np.unique(np.linspace(0, sp.cardinality - 1, 500, dtype=np.int64))
+    for r in rows:
+        cfg = {nm: pv[j] for nm, pv, j in zip(names, pyvals, codes[r])}
+        assert bool(comp.mask[r]) == all(c.fn(cfg) for c in sp.constraints)
+
+
+@pytest.mark.parametrize("name", sorted(PROBLEMS))
+def test_rows_endpoints_match_evaluate_many(name, _problems):
+    """``trials_for_rows`` / ``objectives_for_rows`` /
+    ``objectives_for_rows_archs`` agree exactly with ``evaluate_many`` —
+    including the small-batch scalar fallback (below the columnar
+    threshold) and the shared-columns multi-arch sweep."""
+    import random as _random
+
+    from repro.core.costmodel import ARCH_NAMES
+    prob = _problems[name]
+    comp = prob.space.compiled()
+    for n in (1, 3, 64):            # below and above the columnar threshold
+        rows = comp.sample_rows_distinct(n, _random.Random(n))
+        cfgs = comp.decode_many(rows)
+        for arch in ("v4", "v6e"):
+            want = [t.objective for t in prob.evaluate_many(cfgs, arch)]
+            got_t = prob.trials_for_rows(rows, arch)
+            assert [t.objective for t in got_t] == want
+            assert [t.config for t in got_t] == cfgs
+            assert prob.objectives_for_rows(rows, arch).tolist() == want
+        multi = prob.objectives_for_rows_archs(rows, ARCH_NAMES)
+        for i, arch in enumerate(ARCH_NAMES):
+            assert multi[i].tolist() == \
+                [t.objective for t in prob.evaluate_many(cfgs, arch)]

@@ -185,12 +185,16 @@ def test_resume_skips_journaled_configs(tmp_path):
     assert _traces_equal(ref, full)
 
 
-@pytest.mark.parametrize("tname", ["genetic", "diffevo", "pso", "local"])
+@pytest.mark.parametrize("tname", ["genetic", "diffevo", "pso", "local",
+                                   "annealing", "surrogate_bo"])
 def test_resume_exact_for_stateful_tuners(tmp_path, tname):
     """Resume replays the journal through the tuner, reconstructing its RNG
     state: resumed trace == never-interrupted trace, zero re-evaluations.
     stop_after=25 cuts *past* the first generation boundary of the
-    population tuners — the case that requires batch-aligned stops."""
+    population tuners — the case that requires batch-aligned stops.
+    surrogate_bo is the rng-stream-contract regression: its ask draws a
+    variable-length sequence (candidate pool sampling), which resume must
+    replay identically through the model-refit schedule."""
     evals = []
     prob = _quad_problem(record=evals)
     store = SessionStore(tmp_path / tname)
@@ -204,6 +208,22 @@ def test_resume_exact_for_stateful_tuners(tmp_path, tname):
 
     uninterrupted = run_session(spec, problem=_quad_problem())
     assert _traces_equal(uninterrupted, full)
+
+
+@pytest.mark.parametrize("stop", [10, 27, 38])
+def test_resume_exact_for_batched_surrogate_bo(tmp_path, stop):
+    """Batched qLCB asks draw per-slot kappa jitter; the final batch is
+    budget-truncated.  Resume must replay the identical draw stream at
+    every stop boundary (the rng-stream contract in tuners/base.py)."""
+    prob = _quad_problem()
+    store = SessionStore(tmp_path / f"bo{stop}")
+    spec = SessionSpec(problem="quad", tuner="surrogate_bo", budget=42,
+                       seed=3, workers=2,
+                       tuner_kwargs={"n_init": 8, "batch_width": 4})
+    run_session(spec, problem=prob, store=store, stop_after=stop)
+    resumed = run_session(spec, problem=prob, store=store)
+    uninterrupted = run_session(spec, problem=_quad_problem())
+    assert _traces_equal(uninterrupted, resumed)
 
 
 def test_resume_session_api_and_torn_journal(tmp_path):

@@ -393,3 +393,156 @@ def test_feature_batch_native_columns():
 
     with pytest.raises(ValueError, match="length"):
         FeatureBatch(**{**cols, "unroll": np.ones(n + 1)})
+
+
+# ------------------------------------------------------------------ #
+# row-native draws: identical rng sequences to the legacy dict paths
+# ------------------------------------------------------------------ #
+@sweep(30)
+def test_sample_row_rejection_matches_legacy_sample(rng):
+    s = random_subspace(rng)
+    comp = s.compiled()
+    legacy = _fresh(s)
+    seed = rng.randint(0, 10 ** 6)
+    r1, r2 = random.Random(seed), random.Random(seed)
+    try:
+        for _ in range(20):
+            row = comp.sample_row_rejection(r1)
+            assert row == legacy.flat_index(legacy.sample(r2))
+        assert r1.random() == r2.random()     # streams stay in lockstep
+    except RuntimeError:
+        return                                # over-constrained: fine
+
+
+@sweep(30)
+def test_random_neighbor_row_matches_legacy(rng):
+    s = random_subspace(rng)
+    comp = s.compiled()
+    legacy = _fresh(s)
+    seed = rng.randint(0, 10 ** 6)
+    try:
+        row = comp.sample_row_rejection(random.Random(seed))
+    except RuntimeError:
+        return
+    cfg = legacy.from_flat_index(row)
+    r1, r2 = random.Random(seed + 1), random.Random(seed + 1)
+    for _ in range(40):
+        nrow = comp.random_neighbor_row(row, r1)
+        ncfg = legacy.random_neighbor(cfg, r2)
+        assert nrow == legacy.flat_index(ncfg)
+        row, cfg = nrow, ncfg
+    assert r1.random() == r2.random()
+
+
+@sweep(25)
+def test_edge_params_identify_moved_parameter(rng):
+    s = random_subspace(rng)
+    comp = s.compiled()
+    indptr, indices = comp.csr_neighbors()
+    ep = comp.edge_params()
+    assert len(ep) == len(indices)
+    if not len(indices):
+        return
+    src_pos = np.repeat(np.arange(comp.n_valid), np.diff(indptr))
+    sc = CompiledSpace.codes_for(s, comp.valid_rows[src_pos])
+    dc = CompiledSpace.codes_for(s, comp.valid_rows[indices])
+    diff = sc != dc
+    assert np.all(diff.sum(axis=1) == 1)      # Hamming-1 by construction
+    assert np.array_equal(ep, np.argmax(diff, axis=1))
+
+
+def test_value_columns_match_decode():
+    s = SearchSpace([Param("a", (4, 8, 16)), Param("b", ("x", "y")),
+                     Param("c", (1.5, 2.5))],
+                    [Constraint("no_8y", lambda c: not (c["a"] == 8
+                                                        and c["b"] == "y"))])
+    comp = s.compiled()
+    rows = comp.valid_rows
+    cols = comp.value_columns(rows)
+    cfgs = comp.decode_many(rows)
+    for name in s.param_names:
+        assert cols[name].tolist() == [c[name] for c in cfgs]
+
+
+# ------------------------------------------------------------------ #
+# alias-sampled neighbor moves
+# ------------------------------------------------------------------ #
+def test_alias_distribution_matches_rejection():
+    """The alias sampler must draw from the same conditional distribution
+    as the legacy rejection scheme: each valid neighbor weighted by one
+    over the moved parameter's cardinality (NOT uniform over neighbors —
+    the cardinalities here differ on purpose)."""
+    s = SearchSpace([Param("a", tuple(range(6))), Param("b", (0, 1)),
+                     Param("c", tuple(range(4)))],
+                    [Constraint("skip", lambda c: (c["a"] + c["b"]
+                                                   + c["c"]) % 7 != 0)])
+    comp = s.compiled()
+    row = int(comp.valid_rows[5])
+    n = 60_000
+    rng = random.Random(0)
+    alias_counts: dict[int, int] = {}
+    for _ in range(n):
+        k = comp.sample_neighbor_alias(row, rng)
+        alias_counts[k] = alias_counts.get(k, 0) + 1
+    rng = random.Random(1)
+    rej_counts: dict[int, int] = {}
+    for _ in range(n):
+        k = comp.random_neighbor_row(row, rng)
+        rej_counts[k] = rej_counts.get(k, 0) + 1
+    assert sorted(alias_counts) == sorted(rej_counts)
+    assert len(alias_counts) > 1
+    for k in alias_counts:
+        fa, fr = alias_counts[k] / n, rej_counts[k] / n
+        assert abs(fa - fr) < 0.01, (k, fa, fr)
+    # and the exact expected weights: 1/card(moved param), normalized
+    nbrs = comp.neighbor_rows(row)
+    ep = comp.edge_params()
+    indptr, _ = comp.csr_neighbors()
+    pos = int(comp.row_pos[row])
+    w = 1.0 / comp.cards[ep[indptr[pos]:indptr[pos + 1]]]
+    w = w / w.sum()
+    for nb, expect in zip(nbrs.tolist(), w):
+        assert abs(alias_counts[nb] / n - expect) < 0.01
+
+
+def test_alias_degenerate_row_and_invalid_row():
+    """A valid row with no valid neighbors yields -1 (no draws wasted on
+    the 1000-try rejection loop); rows outside the valid set are
+    rejected."""
+    s = SearchSpace([Param("a", (0, 1, 2)), Param("b", (0, 1, 2))],
+                    [Constraint("diag", lambda c: c["a"] == c["b"])])
+    comp = s.compiled()
+    assert comp.n_valid == 3
+    indptr, indices = comp.csr_neighbors()
+    assert len(indices) == 0                  # every valid row is isolated
+    rng = random.Random(0)
+    for row in comp.valid_rows:
+        assert comp.sample_neighbor_alias(int(row), rng) == -1
+    bad = int(np.flatnonzero(~comp.mask)[0])
+    with pytest.raises(ValueError):
+        comp.sample_neighbor_alias(bad, rng)
+    # rejection path on a degenerate row: exhausts tries, stays put
+    row0 = int(comp.valid_rows[0])
+    assert comp.random_neighbor_row(row0, rng, max_tries=50) == row0
+
+
+def test_annealing_alias_mode_walks_valid_rows():
+    """Opt-in alias moves: seeded-reproducible, every proposal valid, and
+    degenerate rows propose the current config again (staying put) rather
+    than burning the rejection try budget."""
+    from repro.core.problem import FunctionProblem
+    from repro.core.tuners import SimulatedAnnealing
+    from repro.core.tuners.base import run_tuner
+
+    s = SearchSpace([Param("a", tuple(range(5))), Param("b", tuple(range(5)))],
+                    [Constraint("sum", lambda c: (c["a"] + c["b"]) % 3 != 0)])
+    prob = FunctionProblem(s, lambda c, arch: 1.0 + c["a"] * 5 + c["b"])
+    r1 = run_tuner(SimulatedAnnealing(s, seed=4, moves="alias"),
+                   prob, budget=40)
+    s2 = SearchSpace(s.params, s.constraints, name=s.name)
+    r2 = run_tuner(SimulatedAnnealing(s2, seed=4, moves="alias"),
+                   prob, budget=40)
+    assert [t.config for t in r1.trials] == [t.config for t in r2.trials]
+    assert all(s.satisfies(t.config) for t in r1.trials)
+    with pytest.raises(ValueError):
+        SimulatedAnnealing(s, seed=0, moves="nope")

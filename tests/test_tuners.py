@@ -157,3 +157,156 @@ def test_seeds_reproducible():
     r1 = run_tuner(GeneticAlgorithm(prob.space, seed=7), prob, budget=60)
     r2 = run_tuner(GeneticAlgorithm(prob.space, seed=7), prob, budget=60)
     assert [t.config for t in r1.trials] == [t.config for t in r2.trials]
+
+
+# ------------------------------------------------------------------ #
+# index-native engine: bit-identical to the scalar oracle
+# ------------------------------------------------------------------ #
+def _scalar_space(space):
+    """Fresh copy of ``space`` that refuses to compile — tuners built on it
+    run their legacy scalar paths (the bit-exactness oracle)."""
+    s = SearchSpace(space.params, space.constraints, name=space.name)
+    s.compile_eagerly = lambda *a, **k: None
+    return s
+
+
+def _constrained_problem():
+    params = [Param("a", (1, 2, 3, 4, 5)), Param("b", (1, 2, 3, 4)),
+              Param("c", (0, 1, 2))]
+    space = SearchSpace(params, [
+        Constraint("sum_odd", lambda c: (c["a"] + c["b"] + c["c"]) % 2 == 1,
+                   vec=lambda c: (c["a"] + c["b"] + c["c"]) % 2 == 1)],
+        name="constr")
+
+    def fn(cfg, arch):
+        return 1.0 + (cfg["a"] - 3) ** 2 + (cfg["b"] - 2) ** 2 + cfg["c"]
+
+    return FunctionProblem(space, fn, name="constr")
+
+
+def _traj(res):
+    return [(tuple(sorted(t.config.items())), t.objective) for t in res.trials]
+
+
+@pytest.mark.parametrize("tuner_cls", ALL_TUNERS)
+def test_index_native_trajectory_equals_scalar_oracle(tuner_cls):
+    """The tentpole property: for every tuner and seed, the index-native
+    row engine walks the identical trajectory (configs AND rng draw
+    stream) as the legacy scalar implementation."""
+    for make in (_constrained_problem, lambda: _quad_problem(3, 5)):
+        for seed in (0, 3, 11):
+            prob = make()
+            t_idx = tuner_cls(prob.space, seed=seed)
+            assert t_idx.index_native, tuner_cls
+            r_idx = run_tuner(t_idx, prob, budget=50)
+            prob2 = make()
+            prob2.space = _scalar_space(prob2.space)
+            t_sc = tuner_cls(prob2.space, seed=seed)
+            assert not t_sc.index_native
+            r_sc = run_tuner(t_sc, prob2, budget=50)
+            assert _traj(r_idx) == _traj(r_sc), (tuner_cls, seed)
+            # and the rng streams end in the same state
+            assert t_idx.rng.random() == t_sc.rng.random()
+
+
+@pytest.mark.parametrize("tuner_cls", ALL_TUNERS)
+def test_index_native_batched_equals_scalar_batched(tuner_cls):
+    """Generational (ask_batch/tell_batch) driving: row protocol and dict
+    protocol produce identical batched trajectories."""
+    import math as m
+
+    def drive(tuner, prob, budget=60):
+        space = prob.space
+        cache, traj, asks = {}, [], 0
+        width = tuner.max_parallel_asks or 16
+        while len(traj) < budget and asks < 50 * budget:
+            if tuner.finished():
+                break
+            cfgs = tuner.ask_batch(min(width, budget - len(traj)))
+            asks += len(cfgs)
+            keys = [space.flat_index(c) for c in cfgs]
+            fresh = [(k, c) for k, c in zip(keys, cfgs) if k not in cache]
+            seen = set()
+            for k, c in fresh:
+                if k in seen:
+                    continue
+                seen.add(k)
+                cache[k] = prob.evaluate(c)
+                traj.append((k, cache[k].objective))
+            tuner.tell_batch([cache[k] for k in keys])
+        return traj
+
+    prob = _constrained_problem()
+    t_idx = tuner_cls(prob.space, seed=5)
+    assert t_idx.index_native
+    a = drive(t_idx, prob)
+    prob2 = _constrained_problem()
+    prob2.space = _scalar_space(prob2.space)
+    t_sc = tuner_cls(prob2.space, seed=5)
+    b = drive(t_sc, prob2)
+    assert a == b, tuner_cls
+
+
+def test_sample_positions_draw_identical_to_random_sample():
+    """The hand-rolled ``sample_positions`` must replicate CPython's
+    ``Random.sample(range(n), k)`` draw-for-draw across both algorithm
+    branches (pool and rejection-set) — it feeds every tournament/donor
+    selection."""
+    from repro.core.tuners.base import sample_positions
+    for n in list(range(1, 30)) + [40, 64, 128, 300]:
+        for k in range(0, min(n, 8) + 1):
+            r1, r2 = random.Random(n * 31 + k), random.Random(n * 31 + k)
+            for _ in range(10):
+                assert sample_positions(r1, n, k) == r2.sample(range(n), k)
+                assert r1.random() == r2.random()
+
+
+# ------------------------------------------------------------------ #
+# surrogate-BO: batched qLCB ask + the rng-stream contract
+# ------------------------------------------------------------------ #
+def test_surrogate_bo_batch_width_distinct_and_prefix_stable():
+    prob = _quad_problem(n_params=3, k=6)
+    space = prob.space
+
+    def warm(bo):
+        rng = random.Random(99)
+        for _ in range(20):
+            cfg = space.sample(rng)
+            bo.tell(prob.evaluate(cfg))
+        assert bo.model is not None
+
+    bo = SurrogateBO(space, seed=2, batch_width=4)
+    assert bo.max_parallel_asks == 4
+    warm(bo)
+    batch = bo.ask_batch(4)
+    keys = {space.flat_index(c) for c in batch}
+    assert len(keys) == 4                  # no duplicates within a batch
+    # prefix stability (the rng-stream contract): a truncated ask consumes
+    # exactly the leading slots' draws
+    bo2 = SurrogateBO(space, seed=2, batch_width=4)
+    warm(bo2)
+    batch2 = bo2.ask_batch(2)
+    assert [space.flat_index(c) for c in batch2] \
+        == [space.flat_index(c) for c in batch[:2]]
+    # width-1 keeps the historical sequential draw sequence (no jitter)
+    bo3 = SurrogateBO(space, seed=2)
+    warm(bo3)
+    bo4 = SurrogateBO(space, seed=2, batch_width=4)
+    warm(bo4)
+    assert space.flat_index(bo3.ask()) \
+        == space.flat_index(bo4.ask_batch(1)[0])
+
+
+def test_surrogate_bo_scalar_batch_matches_native_batch():
+    prob = _constrained_problem()
+    t_idx = SurrogateBO(prob.space, seed=7, n_init=8, batch_width=3)
+    prob2 = _constrained_problem()
+    prob2.space = _scalar_space(prob2.space)
+    t_sc = SurrogateBO(prob2.space, seed=7, n_init=8, batch_width=3)
+    for _ in range(12):
+        a = t_idx.ask_batch(3)
+        b = t_sc.ask_batch(3)
+        assert [prob.space.flat_index(c) for c in a] \
+            == [prob2.space.flat_index(c) for c in b]
+        t_idx.tell_batch([prob.evaluate(c) for c in a])
+        t_sc.tell_batch([prob2.evaluate(c) for c in b])
