@@ -17,7 +17,8 @@ import traceback
 
 from . import (claims, fig1_distribution, fig2_convergence, fig3_centrality,
                fig4_speedup, fig5_portability, fig6_importance, microbench,
-               roofline_table, table8_spacestats, tuner_comparison)
+               roofline_table, table8_spacestats, table_portability,
+               tuner_comparison)
 
 MODULES = {
     "fig1": fig1_distribution,
@@ -27,6 +28,7 @@ MODULES = {
     "fig5": fig5_portability,
     "fig6": fig6_importance,
     "table8": table8_spacestats,
+    "portability": table_portability,
     "tuners": tuner_comparison,
     "micro": microbench,
     "roofline": roofline_table,

@@ -246,6 +246,88 @@ def bench_space(name: str, archs, budget_base: int,
     return out
 
 
+#: the campaign wall-clock comparison: portability-shaped grids (one
+#: problem, every architecture, repeated seeds) — the case the interleaved
+#: scheduler is built for.  Two grids: random (the paper's baseline; ask
+#: cost ~0, so the scheduler's evaluation sharing shows directly) and GA
+#: (breeding-dominated, the conservative end — most of its wall clock is
+#: tuner-side work both schedulers pay identically).
+CAMPAIGN_SPACE = "pnpoly"
+CAMPAIGN_TUNERS = ("random", "genetic")
+CAMPAIGN_SEEDS = 2
+CAMPAIGN_BUDGET = 256
+CAMPAIGN_WORKERS = 4
+
+
+def bench_campaign(archs, smoke: bool = False) -> dict:
+    """Serial campaign loop vs multi-session interleaving on a shared pool.
+
+    Same grid, same prebuilt problem instance on both sides (so the
+    comparison isolates the scheduler: shared executor vs one pool per
+    session, and arch-shared evaluation + cross-session row dedup vs every
+    session evaluating its own rows).  Traces are asserted identical before
+    timings are reported — the interleaved scheduler must be a pure
+    wall-clock optimization.
+    """
+    from repro.orchestrator import Campaign, run_campaign, run_session
+
+    factory, _ = BENCHMARKS[CAMPAIGN_SPACE]
+    prob = factory()
+    prob.space.compile_eagerly()       # both sides share the compiled table
+    budget = 96 if smoke else CAMPAIGN_BUDGET
+    out = {"space": CAMPAIGN_SPACE, "archs": list(archs),
+           "seeds": CAMPAIGN_SEEDS, "budget": budget,
+           "workers": CAMPAIGN_WORKERS, "grids": {}}
+    for tname in CAMPAIGN_TUNERS:
+        camp = Campaign.grid([CAMPAIGN_SPACE], [tname], archs=archs,
+                             seeds=range(CAMPAIGN_SEEDS), budget=budget,
+                             workers=CAMPAIGN_WORKERS)
+
+        def serial():
+            return {s.session_id: run_session(s, problem=prob,
+                                              workers=CAMPAIGN_WORKERS)
+                    for s in camp.specs}
+
+        def interleaved():
+            return run_campaign(camp.specs, problems={CAMPAIGN_SPACE: prob},
+                                workers=CAMPAIGN_WORKERS)
+
+        t_serial = t_inter = math.inf
+        res_s = res_i = None
+        for _ in range(1 if smoke else REPEATS):
+            gc.collect()
+            t0 = time.perf_counter()
+            res_s = serial()
+            t_serial = min(t_serial, time.perf_counter() - t0)
+            gc.collect()
+            t0 = time.perf_counter()
+            res_i = interleaved()
+            t_inter = min(t_inter, time.perf_counter() - t0)
+
+        assert res_s.keys() == res_i.keys()
+        for sid in res_s:
+            a, b = res_s[sid], res_i[sid]
+            assert [t.objective for t in a.trials] == \
+                   [t.objective for t in b.trials], sid
+            assert [t.config for t in a.trials] == \
+                   [t.config for t in b.trials], sid
+
+        out["grids"][tname] = {
+            "sessions": len(camp),
+            "serial_s": t_serial, "interleaved_s": t_inter,
+            "speedup": t_serial / t_inter,
+            "identical": True,
+        }
+        emit(f"tuner_bench/campaign/{CAMPAIGN_SPACE}/{tname}",
+             t_inter / len(camp) * 1e6,
+             f"speedup={t_serial / t_inter:.2f}x sessions={len(camp)}")
+    out["criterion"] = ("interleaved beats the serial campaign loop on "
+                        "every >=8-session grid")
+    out["criterion_met"] = all(g["sessions"] >= 8 and g["speedup"] > 1.0
+                               for g in out["grids"].values())
+    return out
+
+
 def run(smoke: bool = False) -> dict:
     names = SMOKE_SPACES if smoke else SPACES
     archs = ARCH_NAMES[:2] if smoke else ARCH_NAMES
@@ -257,6 +339,7 @@ def run(smoke: bool = False) -> dict:
         "seed": SEED,
         "spaces": {name: bench_space(name, archs, budget, smoke)
                    for name in names},
+        "campaign": bench_campaign(archs, smoke),
     }
     headline = HEADLINE if HEADLINE in names else names[0]
     pop = {t: out["spaces"][headline]["tuners"][t]["speedup"]

@@ -3,8 +3,10 @@
     PYTHONPATH=src python examples/orchestrate_campaign.py
 
 1. build a campaign grid (2 kernels x 2 tuners x 2 seeds on v5e),
-2. run it through the orchestrator — each session evaluates its batches on
-   a worker pool, journaling every evaluation to the session store,
+2. run it through the orchestrator with the interleaved multi-session
+   scheduler — every session's batches share ONE worker pool (and, for
+   multi-arch grids, arch-shared evaluations), journaling every evaluation
+   to the session store,
 3. kill one session mid-flight (checkpoint-and-stop) and resume it: the
    journal replays for free and only the remaining budget hits the
    evaluator,
@@ -31,7 +33,7 @@ def main() -> None:
                              tuners=["random", "genetic"],
                              seeds=range(2), budget=BUDGET, workers=WORKERS)
     print(f"campaign: {len(campaign)} sessions -> {STORE}")
-    results = campaign.run(store)
+    results = campaign.run(store, interleave=True)   # one shared pool
     for sid, res in results.items():
         print(f"  {sid:48s} best {res.best.objective * 1e3:8.3f} ms")
 

@@ -8,7 +8,8 @@ model, eight tuners, the results database, and the landscape analyses
 from .costmodel import (ARCH_NAMES, DEFAULT_ARCH, TPU_GENERATIONS,
                         FeatureBatch, KernelFeatures, estimate_seconds,
                         estimate_seconds_batch, estimate_seconds_many)
-from .problem import FunctionProblem, MeasuredProblem, Trial, TunableProblem
+from .problem import (FunctionProblem, MeasuredProblem, Trial,
+                      TunableProblem, materialize_configs)
 from .results import ResultsDB, ResultTable
 from .space import Config, Constraint, Param, SearchSpace, powers_of_two
 from .spacetable import CompiledSpace, set_cache_dir
@@ -17,6 +18,7 @@ __all__ = [
     "SearchSpace", "Param", "Constraint", "Config", "powers_of_two",
     "CompiledSpace", "set_cache_dir",
     "TunableProblem", "FunctionProblem", "MeasuredProblem", "Trial",
+    "materialize_configs",
     "ResultsDB", "ResultTable",
     "KernelFeatures", "FeatureBatch", "estimate_seconds",
     "estimate_seconds_batch", "estimate_seconds_many",

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import math
 import time
-from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
 
 from .costmodel import (ARCH_NAMES, DEFAULT_ARCH, FeatureBatch,
@@ -25,19 +24,82 @@ from .space import Config, SearchSpace
 _COLUMNAR_MIN = 8
 
 
-@dataclass
 class Trial:
-    """One evaluated configuration."""
+    """One evaluated configuration.
 
-    config: Config
-    objective: float                  # seconds; +inf => invalid on this arch
-    arch: str = DEFAULT_ARCH
-    valid: bool = True
-    info: dict = field(default_factory=dict)
+    ``config`` may be materialized lazily: row-native producers (the
+    compiled-space evaluation endpoints, the journal-v2 replay path) pass
+    ``row=``/``space=`` instead of a config dict, and the mixed-radix decode
+    runs on first :attr:`config` access.  The session harness never touches
+    ``config`` on its hot path, so trials whose configs no analysis reads
+    are never decoded at all; :func:`materialize_configs` batch-decodes a
+    trace in one numpy pass when something (trace publication, plotting)
+    does want the dicts.
+
+    Invariant: when both are given, ``row`` MUST be the flat index of
+    ``config`` (``row == space.flat_index(config)``).  Row-aware consumers
+    (``ResultTable.from_trials``) trust the row without re-encoding the
+    dict, so a mismatched pair would publish the row's config.
+    """
+
+    __slots__ = ("objective", "arch", "valid", "info",
+                 "_config", "_row", "_space")
+
+    def __init__(self, config: Config | None, objective: float,
+                 arch: str = DEFAULT_ARCH, valid: bool = True,
+                 info: dict | None = None, *,
+                 row: int | None = None, space: SearchSpace | None = None):
+        if config is None and (row is None or space is None):
+            raise ValueError("lazy Trial needs both row= and space=")
+        self._config = config
+        self._row = None if row is None else int(row)
+        self._space = space
+        self.objective = objective    # seconds; +inf => invalid on this arch
+        self.arch = arch
+        self.valid = valid
+        self.info: dict = {} if info is None else info
+
+    @property
+    def config(self) -> Config:
+        if self._config is None:
+            self._config = self._space.from_flat_index(self._row)
+        return self._config
+
+    @property
+    def row(self) -> int | None:
+        """The compiled-space flat index, when this trial was produced (or
+        journaled) row-natively — ``None`` for config-born trials."""
+        return self._row
 
     @property
     def ok(self) -> bool:
         return self.valid and math.isfinite(self.objective)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        cfg = self._config if self._config is not None else f"<row {self._row}>"
+        return (f"Trial(config={cfg!r}, objective={self.objective!r}, "
+                f"arch={self.arch!r}, valid={self.valid!r}, info={self.info!r})")
+
+
+def materialize_configs(trials: Sequence[Trial]) -> None:
+    """Decode every lazy trial's config in one batched pass per space.
+
+    Equivalent to touching ``t.config`` on each trial, but through
+    ``CompiledSpace.decode_many`` (one numpy pass per parameter column)
+    instead of a scalar mixed-radix decode per trial."""
+    pending: dict[int, tuple[SearchSpace, list[Trial]]] = {}
+    for t in trials:
+        if t._config is None:
+            sp = t._space
+            pending.setdefault(id(sp), (sp, []))[1].append(t)
+    for sp, lazy in pending.values():
+        comp = sp.compiled()
+        if comp is None:
+            for t in lazy:
+                t._config = sp.from_flat_index(t._row)
+        else:
+            for t, cfg in zip(lazy, comp.decode_many([t._row for t in lazy])):
+                t._config = cfg
 
 
 class TunableProblem:
@@ -179,6 +241,21 @@ class TunableProblem:
             out[i] = self.objectives_for_rows(rows, arch)
         return out
 
+    def trials_for_rows_archs(self, rows: Sequence[int],
+                              archs: Sequence[str]) -> list[list["Trial"]]:
+        """Per-arch lazy trials for *valid* compiled-space rows, one list per
+        arch (aligned with ``archs``) — the arch-shared recording endpoint:
+        one :meth:`objectives_for_rows_archs` sweep (decode + value columns
+        built once, shared by every architecture), row-backed
+        :class:`Trial` objects out, no config dicts anywhere."""
+        rows = [int(r) for r in rows]
+        objs = self.objectives_for_rows_archs(rows, archs)
+        sp = self.space
+        return [[Trial(None, float(o), a, valid=math.isfinite(float(o)),
+                       row=r, space=sp)
+                 for r, o in zip(rows, objs[i])]
+                for i, a in enumerate(archs)]
+
     def trials_for_rows(self, rows: Sequence[int],
                         arch: str = DEFAULT_ARCH) -> list[Trial]:
         """Array-in/array-out evaluation of *valid* compiled-space rows —
@@ -205,11 +282,12 @@ class TunableProblem:
                 # small batch: rows are pre-validated, so skip ``satisfies``
                 # and run the scalar feature math straight
                 out = []
-                for c in comp.decode_many(rows):
+                for r, c in zip(rows, comp.decode_many(rows)):
                     feats = self.features(c, arch)
                     t = estimate_seconds(feats, arch)
                     out.append(Trial(c, t, arch, valid=math.isfinite(t),
-                                     info={"features": feats}))
+                                     info={"features": feats},
+                                     row=r, space=self.space))
                 return out
             if comp is not None:
                 cfgs = comp.decode_many(rows)
@@ -220,11 +298,14 @@ class TunableProblem:
         times = np.broadcast_to(
             np.asarray(estimate_seconds_batch(fb, arch), dtype=np.float64),
             (len(rows),))
-        cfgs = comp.decode_many(rows)
+        # lazy trials: the trace keeps only (row, objective); the config
+        # dict materializes on first access (or via materialize_configs)
+        sp = self.space
         out = []
-        for c, t in zip(cfgs, times):
+        for r, t in zip(rows, times):
             t = float(t)
-            out.append(Trial(c, t, arch, valid=math.isfinite(t)))
+            out.append(Trial(None, t, arch, valid=math.isfinite(t),
+                             row=r, space=sp))
         return out
 
     # -- convenience ------------------------------------------------------ #
@@ -267,9 +348,17 @@ class TunableProblem:
     def exhaustive(self, arch: str = DEFAULT_ARCH,
                    limit: int | None = None) -> list[Trial]:
         """Evaluate the whole constrained space (vectorized: compiled
-        enumeration feeding the batched cost-model path)."""
+        enumeration feeding the batched cost-model path).
+
+        ``limit`` slices the compiled valid-row enumeration directly when a
+        table exists (``valid_rows`` order == ``enumerate`` order, so the
+        configs are identical to the Python iterator's first ``limit``);
+        the iterator runs only for uncompiled spaces."""
+        comp = self.space.compiled()
         if limit is None:
             cfgs = self.space.valid_configs()
+        elif comp is not None:
+            cfgs = comp.decode_many(comp.valid_rows[:limit])
         else:
             import itertools
             cfgs = list(itertools.islice(

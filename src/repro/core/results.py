@@ -91,9 +91,20 @@ class ResultTable:
     def from_trials(problem: TunableProblem, arch: str,
                     trials: Sequence[Trial], protocol: str) -> "ResultTable":
         sp = problem.space
+        rows = [getattr(t, "row", None) for t in trials]
+        if trials and all(r is not None for r in rows):
+            # row-born trials (row-native sessions, journal-v2 replays):
+            # the encoded tuples ARE the mixed-radix codes of the rows, so
+            # build them in one vectorized pass — no config dict is ever
+            # decoded just to be re-encoded here
+            from .spacetable import CompiledSpace
+            codes = CompiledSpace.codes_for(sp, rows)
+            configs = [tuple(c) for c in codes.tolist()]
+        else:
+            configs = [sp.encode(t.config) for t in trials]
         return ResultTable(
             problem=problem.name, arch=arch, param_names=sp.param_names,
-            configs=[sp.encode(t.config) for t in trials],
+            configs=configs,
             objectives=[t.objective if t.valid else math.inf for t in trials],
             protocol=protocol)
 

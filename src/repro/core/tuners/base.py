@@ -194,7 +194,11 @@ class Tuner:
     def ask_rows(self, n: int) -> list[int]:
         """Propose up to ``n`` flat row indices (valid rows only).  Only
         called when :attr:`index_native`; must consume the same rng draws as
-        ``n`` scalar asks (see the rng-stream contract above)."""
+        ``n`` scalar asks (see the rng-stream contract above).
+
+        A tuner whose exhaustion flips mid-batch may legally return fewer
+        rows than asked — including none at all.  Callers must treat an
+        empty batch exactly like :meth:`finished` and stop asking."""
         raise NotImplementedError
 
     def tell_rows(self, rows: Sequence[int],
@@ -227,7 +231,9 @@ class Tuner:
     def ask_batch(self, n: int) -> list[Config]:
         """Propose up to ``n`` configs at once.  Callers must clamp ``n`` to
         :attr:`max_parallel_asks` and tell every asked config exactly once,
-        in ask order, before the next batch."""
+        in ask order, before the next batch.  An empty batch is an
+        exhaustion signal equivalent to :meth:`finished` — callers must
+        stop asking rather than index into it."""
         if self.index_native:
             return self._comp.decode_many(self.ask_rows(max(1, n)))
         return [self.ask_scalar() for _ in range(max(1, n))]

@@ -7,16 +7,17 @@ compose into campaigns — the paper's full study grid as one restartable
 unit.  See the README's orchestrator section for the architecture.
 """
 
-from .campaign import Campaign
+from .campaign import Campaign, run_campaign
 from .queue import Job, JobQueue
 from .registry import make_problem, problem_names
-from .runner import resume_session, run_session
+from .runner import (EvalRequest, resume_session, run_session,
+                     session_stepper)
 from .session import SessionSpec
 from .store import SessionStore
 from .workers import WorkerPool
 
 __all__ = [
-    "Campaign", "Job", "JobQueue", "SessionSpec", "SessionStore",
-    "WorkerPool", "make_problem", "problem_names", "resume_session",
-    "run_session",
+    "Campaign", "EvalRequest", "Job", "JobQueue", "SessionSpec",
+    "SessionStore", "WorkerPool", "make_problem", "problem_names",
+    "resume_session", "run_campaign", "run_session", "session_stepper",
 ]

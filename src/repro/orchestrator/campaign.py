@@ -2,11 +2,28 @@
 
 The paper's study shape — every tuner × every benchmark × repeated seeds ×
 multiple architectures — is a Cartesian product of sessions.  A
-:class:`Campaign` materializes that product as specs, runs them through the
-session runner (each session internally parallel over the worker pool), and
-aggregates.  With a store, a killed campaign resumes where it stopped:
-finished sessions are skipped via their published traces, the interrupted
-one continues from its journal.
+:class:`Campaign` materializes that product as specs and runs them through
+the session runner; with a store, a killed campaign resumes where it
+stopped: finished sessions are skipped via their published traces, the
+interrupted one continues from its journal.
+
+Two schedulers:
+
+* **serial** (`Campaign.run`, the original): sessions run one at a time,
+  each against its own worker pool.
+* **interleaved** (:func:`run_campaign`, ``Campaign.run(interleave=True)``):
+  every session becomes a :func:`~repro.orchestrator.runner.session_stepper`
+  coroutine and ONE shared :class:`WorkerPool` answers their evaluation
+  requests round-robin.  Sessions over the same problem share a compiled
+  space, one warm executor, and an evaluation cache; for portability grids
+  (same problem, several architectures) the cache is *arch-shared*: each
+  deduped row is evaluated once via
+  ``WorkerPool.evaluate_rows(rows, archs=...)`` — one decode + one set of
+  value columns feeding every architecture — and all sibling sessions read
+  their column.  Trajectories and journals are identical to the serial
+  scheduler by construction: a stepper only ever sees the objectives of the
+  rows it asked for, and those are bit-identical however they were batched
+  (the compiled-path equivalence property).
 """
 
 from __future__ import annotations
@@ -14,10 +31,199 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, Sequence
 
+from ..core.problem import TunableProblem
 from ..core.tuners.base import TuneResult
+from .registry import make_problem
 from .session import DONE, SessionSpec
 from .store import SessionStore
-from .runner import run_session
+from .runner import (EvalRequest, resolve_session, run_session,
+                     session_stepper)
+from .workers import WorkerPool
+
+
+def run_campaign(specs: Sequence[SessionSpec],
+                 store: SessionStore | None = None, *,
+                 pool: WorkerPool | None = None,
+                 workers: int = 4, mode: str = "auto", max_retries: int = 2,
+                 share_archs: bool = True,
+                 problems: dict | None = None,
+                 on_session: Callable[[SessionSpec, TuneResult], None] | None
+                 = None) -> dict[str, TuneResult]:
+    """Interleave every session of ``specs`` on one shared worker pool.
+
+    Returns ``{session_id: trace}`` (specs order).  ``problems`` optionally
+    maps ``spec.share_key`` (or problem name) to a live
+    :class:`TunableProblem` instance — one instance is shared by every
+    session of that problem either way, so the compiled table, the CSR
+    neighbor structure, and the evaluation cache are built once per problem
+    for the whole grid.
+
+    ``share_archs=True`` turns same-problem multi-arch grids into
+    portability campaigns: a row proposed by ANY sibling session is
+    evaluated on all of the group's architectures in one shared-columns
+    sweep, cached, and never evaluated again by anyone.  Per-session
+    journals, budget accounting, and trajectories are exactly those of
+    serial ``run_session`` runs.
+
+    ``workers`` sizes the one shared pool (spec-level worker counts are a
+    per-session setting and do not apply here; trajectories never depend
+    on parallelism either way).  ``mode="auto"`` resolves from the first
+    problem — a grid mixing analytical and measured problems should pass
+    ``mode`` explicitly or run serially.
+    """
+    specs = list(specs)
+    if not specs:
+        return {}
+    problems = dict(problems or {})
+
+    # one live problem per share-group (shared compiled space + cache)
+    live_problems: dict[tuple, TunableProblem] = {}
+    for spec in specs:
+        key = spec.share_key
+        if key in live_problems:
+            continue
+        preset = problems.get(key, problems.get(spec.problem))
+        live_problems[key] = preset if preset is not None else \
+            make_problem(spec.problem, **spec.problem_kwargs)
+
+    groups: dict[tuple, dict] = {}
+    for spec in specs:
+        g = groups.setdefault(spec.share_key,
+                              {"archs": [], "cache": {}})
+        if spec.arch not in g["archs"]:
+            g["archs"].append(spec.arch)
+
+    own_pool = pool is None
+    if pool is None:
+        first = live_problems[specs[0].share_key]
+        pool = WorkerPool(first, specs[0].arch, workers=workers, mode=mode,
+                          max_retries=max_retries)
+
+    sessions: list[dict] = []
+    out: dict[str, TuneResult] = {}
+    try:
+        for spec in specs:
+            problem = live_problems[spec.share_key]
+            _, tuner = resolve_session(spec, problem, None)
+            gen = session_stepper(spec, problem=problem, tuner=tuner,
+                                  store=store)
+            sessions.append({"spec": spec, "gen": gen, "req": None,
+                             "done": False})
+
+        # prime: advance every stepper to its first evaluation request
+        for s in sessions:
+            _advance(s, None, out, on_session)
+
+        # rounds: gather every live session's pending request, evaluate each
+        # group's union of missing rows in ONE arch-shared pool call, then
+        # answer all requests from the cache.  Merging across sessions makes
+        # the evaluation batches bigger (deeper into the columnar regime)
+        # and dedups rows proposed by several sibling sessions in the same
+        # round; per-session results are bit-identical either way.
+        while any(not s["done"] for s in sessions):
+            pending = [s for s in sessions
+                       if not s["done"] and s["req"] is not None]
+            for key, need in _round_missing(pending, groups).items():
+                anchor = next(s for s in pending
+                              if s["spec"].share_key == key)
+                try:
+                    _fill_cache(need, groups[key], anchor["req"].problem,
+                                pool, share_archs)
+                except BaseException as e:
+                    anchor["gen"].throw(e)
+                    raise              # pragma: no cover — throw re-raises
+            for s in pending:
+                req: EvalRequest = s["req"]
+                if req.configs is not None:   # dict path: no row cache
+                    try:
+                        trials = pool.evaluate(req.configs, arch=req.arch,
+                                               problem=req.problem)
+                    except BaseException as e:
+                        s["gen"].throw(e)
+                        raise          # pragma: no cover — throw re-raises
+                else:
+                    cache = groups[s["spec"].share_key]["cache"]
+                    trials = [cache[r][req.arch] for r in req.rows]
+                _advance(s, trials, out, on_session)
+    finally:
+        for s in sessions:
+            if not s["done"]:
+                s["gen"].close()       # marks the session FAILED, journal kept
+        if own_pool:
+            pool.close()
+
+    return {s["spec"].session_id: out[s["spec"].session_id]
+            for s in sessions}
+
+
+def _advance(s: dict, trials, out: dict, on_session) -> None:
+    """Send ``trials`` into a session stepper (or prime it) and record
+    either its next request or its finished trace."""
+    try:
+        s["req"] = next(s["gen"]) if trials is None else s["gen"].send(trials)
+    except StopIteration as e:
+        s["done"], s["req"] = True, None
+        out[s["spec"].session_id] = e.value
+        if on_session is not None:
+            on_session(s["spec"], e.value)
+
+
+def _round_missing(pending: list[dict], groups: dict) -> dict:
+    """Per share-group ``{(row, arch)`` set as ordered row/arch needs}`` for
+    one scheduling round: every (row, arch) some pending row-request wants
+    that the group cache cannot answer yet, rows in first-proposal order."""
+    need: dict[tuple, dict[int, set]] = {}
+    for s in pending:
+        req: EvalRequest = s["req"]
+        if req.configs is not None:
+            continue
+        key = s["spec"].share_key
+        cache = groups[key]["cache"]
+        rows = need.setdefault(key, {})
+        for r in req.rows:
+            if req.arch not in cache.get(r, ()):
+                rows.setdefault(r, set()).add(req.arch)
+    return {k: v for k, v in need.items() if v}
+
+
+def _fill_cache(need: dict[int, set], group: dict, problem, pool: WorkerPool,
+                share_archs: bool) -> None:
+    """Evaluate one group's missing (row, arch) pairs and populate its
+    cache.
+
+    Arch-shared mode sweeps each row once for every architecture that
+    still needs it (the common portability-grid case: all sibling sessions
+    propose a row in the same round, so the whole group reads one
+    shared-columns sweep).  Only *missing* archs are swept — a resumed
+    campaign whose journals already cover (row, arch) pairs never
+    re-evaluates them — so no (row, arch) is ever evaluated twice
+    campaign-wide.
+    """
+    cache: dict[int, dict] = group["cache"]
+    if share_archs and len(group["archs"]) > 1:
+        by_archset: dict[tuple, list[int]] = {}
+        for r, want in need.items():
+            key = tuple(a for a in group["archs"] if a in want)
+            by_archset.setdefault(key, []).append(r)
+        for archset, rows in by_archset.items():
+            if len(archset) > 1:
+                per_arch = pool.evaluate_rows(rows, archs=archset,
+                                              problem=problem)
+            else:
+                per_arch = {archset[0]: pool.evaluate_rows(
+                    rows, arch=archset[0], problem=problem)}
+            for j, r in enumerate(rows):
+                cache.setdefault(r, {}).update(
+                    {a: per_arch[a][j] for a in archset})
+    else:
+        by_arch: dict[str, list[int]] = {}
+        for r, archs in need.items():
+            for a in archs:
+                by_arch.setdefault(a, []).append(r)
+        for a, rows in by_arch.items():
+            for r, t in zip(rows, pool.evaluate_rows(rows, arch=a,
+                                                     problem=problem)):
+                cache.setdefault(r, {})[a] = t
 
 
 @dataclass
@@ -45,15 +251,25 @@ class Campaign:
     # -- execution --------------------------------------------------------- #
     def run(self, store: SessionStore | None = None, *,
             workers: int | None = None, mode: str = "auto",
-            max_retries: int = 2,
+            max_retries: int = 2, interleave: bool = False,
+            share_archs: bool = True, problems: dict | None = None,
             on_session: Callable[[SessionSpec, TuneResult], None] | None = None
             ) -> dict[str, TuneResult]:
         """Run every session; returns {session_id: trace}.
 
+        ``interleave=True`` multiplexes all sessions over one shared worker
+        pool (see :func:`run_campaign`) — same trajectories and journals,
+        one warm executor, arch-shared evaluation for portability grids.
         Sessions already marked done in the store are re-run as pure journal
         replays (no hardware evaluations), which is cheap and keeps the
         return value complete.
         """
+        if interleave:
+            return run_campaign(self.specs, store,
+                                workers=4 if workers is None else workers,
+                                mode=mode, max_retries=max_retries,
+                                share_archs=share_archs, problems=problems,
+                                on_session=on_session)
         out: dict[str, TuneResult] = {}
         for spec in self.specs:
             res = run_session(spec, store=store, workers=workers, mode=mode,

@@ -2,9 +2,11 @@
 
 Subcommands::
 
-    submit  — register a session in a store and run it
-    status  — show every session in a store (or one, with its curve tail)
-    resume  — continue an interrupted session from its journal
+    submit   — register a session in a store and run it
+    status   — show every session in a store (or one, with its curve tail)
+    resume   — continue an interrupted session from its journal
+    campaign — run a whole grid (problems × tuners × archs × seeds),
+               interleaved on one shared worker pool
 
 Example::
 
@@ -12,6 +14,12 @@ Example::
         --arch v5e --budget 200 --seed 0 --workers 8 --store experiments/sessions
     python -m repro.orchestrator status --store experiments/sessions
     python -m repro.orchestrator resume <session-id> --store experiments/sessions
+
+    # portability campaign: one problem, all four generations, arch-shared
+    # evaluation (each deduped row measured once for all archs)
+    python -m repro.orchestrator campaign --problems gemm --tuners genetic \\
+        --archs v4,v5e,v5p,v6e --seeds 0,1,2 --budget 200 --workers 8 \\
+        --store experiments/sessions
 """
 
 from __future__ import annotations
@@ -87,6 +95,33 @@ def main(argv: list[str] | None = None) -> int:
                       help="override evaluation parallelism (trajectory is "
                            "unchanged; batches are set by the tuner)")
 
+    p_ca = sub.add_parser(
+        "campaign",
+        help="run a session grid interleaved on one shared pool")
+    p_ca.add_argument("--problems", required=True,
+                      help="comma-separated problem names")
+    p_ca.add_argument("--tuners", required=True,
+                      help="comma-separated tuner names")
+    p_ca.add_argument("--archs", default="v5e",
+                      help="comma-separated architectures (several archs on "
+                           "one problem => arch-shared evaluation)")
+    p_ca.add_argument("--seeds", default="0",
+                      help="comma-separated seeds")
+    p_ca.add_argument("--budget", type=int, default=100)
+    p_ca.add_argument("--workers", type=int, default=4)
+    p_ca.add_argument("--mode", default="auto",
+                      choices=("auto", "thread", "process"))
+    p_ca.add_argument("--max-retries", type=int, default=2)
+    p_ca.add_argument("--store", required=True, help="session store dir")
+    p_ca.add_argument("--tuner-kwargs", default="{}",
+                      help="JSON dict of tuner constructor kwargs")
+    p_ca.add_argument("--serial", action="store_true",
+                      help="run sessions one at a time (own pool each) "
+                           "instead of interleaving on a shared pool")
+    p_ca.add_argument("--no-share-archs", action="store_true",
+                      help="disable arch-shared evaluation even for "
+                           "multi-arch grids")
+
     args = ap.parse_args(argv)
     store = SessionStore(args.store)
 
@@ -121,6 +156,40 @@ def main(argv: list[str] | None = None) -> int:
         print(f"{len(res.trials)} trials; best {_fmt_best(b.objective)} "
               f"config={b.config if b.ok else None}")
         return 0
+
+    if args.cmd == "campaign":
+        from ..core.tuners import TUNERS
+        from .campaign import Campaign
+        problems = [p for p in args.problems.split(",") if p]
+        tuners = [t for t in args.tuners.split(",") if t]
+        archs = [a for a in args.archs.split(",") if a]
+        bad = [p for p in problems if p not in problem_names()]
+        if bad:
+            print(f"error: unknown problem(s) {', '.join(bad)}; "
+                  f"registered: {', '.join(problem_names())}", file=sys.stderr)
+            return 2
+        bad = [t for t in tuners if t not in TUNERS]
+        if bad:
+            print(f"error: unknown tuner(s) {', '.join(bad)}; "
+                  f"registered: {', '.join(sorted(TUNERS))}", file=sys.stderr)
+            return 2
+        try:
+            seeds = [int(s) for s in args.seeds.split(",") if s]
+            tuner_kwargs = json.loads(args.tuner_kwargs)
+        except (ValueError, json.JSONDecodeError) as e:
+            print(f"error: bad --seeds/--tuner-kwargs: {e}", file=sys.stderr)
+            return 2
+        camp = Campaign.grid(problems=problems, tuners=tuners, archs=archs,
+                             seeds=seeds, budget=args.budget,
+                             workers=args.workers, tuner_kwargs=tuner_kwargs)
+        print(f"campaign: {len(camp)} sessions "
+              f"({len(problems)} problems x {len(tuners)} tuners x "
+              f"{len(archs)} archs x {len(seeds)} seeds)")
+        camp.run(store, workers=args.workers, mode=args.mode,
+                 max_retries=args.max_retries,
+                 interleave=not args.serial,
+                 share_archs=not args.no_share_archs)
+        return _print_status(store, None)
 
     if args.cmd == "resume":
         if not store.exists(args.session):

@@ -19,14 +19,31 @@ which reconstructs the tuner's RNG state and then continues with fresh
 evaluations.  For ask-independent tuners (random, grid) the parallel trace
 is bit-for-bit identical to serial ``run_tuner``; sequential tuners
 (``max_parallel_asks == 1``) degrade to the serial protocol exactly.
+
+Stepper architecture
+--------------------
+The loop itself lives in :func:`session_stepper`, a generator that *yields*
+an :class:`EvalRequest` whenever it has genuinely-new work and receives the
+evaluated trials back via ``send``.  Everything session-local — ask stream,
+dedup cache, journal replay, journaling, tells, budget accounting, status
+transitions — happens inside the generator, so any driver that answers its
+requests faithfully produces the identical trajectory and journal:
+
+* :func:`run_session` drives one stepper against its own pool (the classic
+  serial entry point, API-unchanged);
+* :func:`~repro.orchestrator.campaign.run_campaign` drives N steppers
+  round-robin against one shared pool, answering row requests of
+  portability grids from arch-shared evaluations (each deduped row
+  evaluated once, all architectures read from shared value columns).
 """
 
 from __future__ import annotations
 
 import math
-from typing import Callable
+from dataclasses import dataclass
+from typing import Callable, Generator
 
-from ..core.problem import TunableProblem
+from ..core.problem import Trial, TunableProblem
 from ..core.tuners import TUNERS
 from ..core.tuners.base import Tuner, TuneResult
 from .registry import make_problem
@@ -48,22 +65,29 @@ def _batch_cap(tuner: Tuner) -> int:
     return max(1, tuner.max_parallel_asks)
 
 
-def run_session(spec: SessionSpec, *, problem: TunableProblem | None = None,
-                tuner: Tuner | None = None, store: SessionStore | None = None,
-                pool: WorkerPool | None = None, workers: int | None = None,
-                mode: str = "auto", max_retries: int = 2,
-                stop_after: int | None = None,
-                on_batch: Callable[[TuneResult], None] | None = None
-                ) -> TuneResult:
-    """Run (or resume) one tuning session; returns the full trace.
+@dataclass
+class EvalRequest:
+    """One batch of genuinely-new evaluations a session stepper needs.
 
-    ``problem``/``tuner`` default to registry/``TUNERS`` lookups from the
-    spec.  With a ``store``, every completed batch is journaled so the
-    session survives a kill; an existing journal is replayed first.
-    ``stop_after`` ends the run at the first batch boundary with at least
-    that many trials recorded (checkpoint-and-stop — also how tests
-    simulate a crash).
+    Exactly one of ``rows`` (index-native sessions) and ``configs``
+    (dict-path sessions over uncompiled spaces) is set; the driver answers
+    with ``list[Trial]`` aligned with it.  ``problem``/``arch`` ride along
+    so a shared multi-session pool can dispatch without consulting the
+    spec.
     """
+
+    problem: TunableProblem
+    arch: str
+    rows: list[int] | None = None
+    configs: list | None = None
+
+
+def resolve_session(spec: SessionSpec,
+                    problem: TunableProblem | None = None,
+                    tuner: Tuner | None = None
+                    ) -> tuple[TunableProblem, Tuner]:
+    """Materialize the live problem/tuner a spec names (registry lookups
+    unless explicit instances are provided)."""
     if problem is None:
         problem = make_problem(spec.problem, **spec.problem_kwargs)
     if tuner is None:
@@ -72,7 +96,21 @@ def run_session(spec: SessionSpec, *, problem: TunableProblem | None = None,
                            f"registered: {', '.join(sorted(TUNERS))}")
         tuner = TUNERS[spec.tuner](problem.space, seed=spec.seed,
                                    **spec.tuner_kwargs)
-    workers = spec.workers if workers is None else workers
+    return problem, tuner
+
+
+def session_stepper(spec: SessionSpec, *, problem: TunableProblem,
+                    tuner: Tuner, store: SessionStore | None = None,
+                    stop_after: int | None = None,
+                    on_batch: Callable[[TuneResult], None] | None = None
+                    ) -> Generator[EvalRequest, list, TuneResult]:
+    """The session loop as a coroutine: yields :class:`EvalRequest` for
+    fresh work, receives the evaluated trials, returns the full trace.
+
+    Drivers must answer every yielded request (trials in request order)
+    and may throw an exception into the generator to abort — the session
+    is then marked FAILED with its journal intact, like any crash.
+    """
     space = problem.space
     space.compile_eagerly()   # one-time table build: mask-backed fast paths
     res = TuneResult(tuner.name, problem.name, spec.arch, spec.seed)
@@ -87,11 +125,6 @@ def run_session(spec: SessionSpec, *, problem: TunableProblem | None = None,
             else:
                 replay[key] = [t, 1]
         store.update_meta(sid, status=RUNNING)
-
-    own_pool = pool is None
-    if pool is None:
-        pool = WorkerPool(problem, spec.arch, workers=workers, mode=mode,
-                          max_retries=max_retries)
 
     cache: dict[int, object] = {}
     cap = _batch_cap(tuner)
@@ -117,10 +150,17 @@ def run_session(spec: SessionSpec, *, problem: TunableProblem | None = None,
             n = min(cap, spec.budget - len(res.trials))
             if native:
                 keys = [int(r) for r in tuner.ask_rows(max(1, n))]
+                cfgs: list = []
             else:
                 cfgs = tuner.ask_batch(n)
                 keys = [int(k) for k in space.flat_index_many(cfgs)] \
-                    if len(cfgs) > 1 else [space.flat_index(cfgs[0])]
+                    if len(cfgs) > 1 else \
+                    [space.flat_index(cfgs[0])] if cfgs else []
+            if not keys:
+                # an empty ask is a finished() signal: a tuner whose
+                # exhaustion flips mid-batch may legally return fewer
+                # configs than asked — including none at all
+                break
             asks += len(keys)
 
             results: list = [None] * len(keys)
@@ -146,11 +186,13 @@ def run_session(spec: SessionSpec, *, problem: TunableProblem | None = None,
                     fresh.append(j)
 
             if not fresh:
-                evaluated = []
+                evaluated: list[Trial] = []
             elif native:
-                evaluated = pool.evaluate_rows([keys[j] for j in fresh])
+                evaluated = yield EvalRequest(problem, spec.arch,
+                                              rows=[keys[j] for j in fresh])
             else:
-                evaluated = pool.evaluate([cfgs[j] for j in fresh])
+                evaluated = yield EvalRequest(problem, spec.arch,
+                                              configs=[cfgs[j] for j in fresh])
             journal_records = []
             for j, t in zip(fresh, evaluated):
                 cache[keys[j]] = t
@@ -179,23 +221,81 @@ def run_session(spec: SessionSpec, *, problem: TunableProblem | None = None,
                     best=None if not math.isfinite(b.objective) else b.objective)
             if on_batch is not None:
                 on_batch(res)
+
+        if store is not None:
+            if stopped_early:
+                store.update_meta(sid, status=INTERRUPTED)
+            else:
+                # publish BEFORE flipping to DONE: a crash between the two
+                # leaves a FAILED session (resumable — the full replay
+                # republishes idempotently) rather than a DONE session
+                # with no table
+                store.publish_trace(sid, problem, res)
+                store.update_meta(sid, status=DONE,
+                                  evaluated=len(res.trials))
     except BaseException:
         # never leave a dead session looking alive; the journal keeps every
         # completed batch, so a failed session resumes like any other
         if store is not None:
             store.update_meta(sid, status=FAILED)
         raise
+    return res
+
+
+def drive(gen: Generator[EvalRequest, list, TuneResult],
+          pool: WorkerPool) -> TuneResult:
+    """Run one stepper to completion against ``pool``.
+
+    Evaluation errors are thrown *into* the generator so the session is
+    marked FAILED (journal intact) exactly as under the monolithic loop.
+    """
+    try:
+        req = next(gen)
+        while True:
+            try:
+                if req.rows is not None:
+                    trials = pool.evaluate_rows(req.rows, arch=req.arch,
+                                                problem=req.problem)
+                else:
+                    trials = pool.evaluate(req.configs, arch=req.arch,
+                                           problem=req.problem)
+            except BaseException as e:
+                gen.throw(e)
+                raise                  # pragma: no cover — throw re-raises
+            req = gen.send(trials)
+    except StopIteration as e:
+        return e.value
+
+
+def run_session(spec: SessionSpec, *, problem: TunableProblem | None = None,
+                tuner: Tuner | None = None, store: SessionStore | None = None,
+                pool: WorkerPool | None = None, workers: int | None = None,
+                mode: str = "auto", max_retries: int = 2,
+                stop_after: int | None = None,
+                on_batch: Callable[[TuneResult], None] | None = None
+                ) -> TuneResult:
+    """Run (or resume) one tuning session; returns the full trace.
+
+    ``problem``/``tuner`` default to registry/``TUNERS`` lookups from the
+    spec.  With a ``store``, every completed batch is journaled so the
+    session survives a kill; an existing journal is replayed first.
+    ``stop_after`` ends the run at the first batch boundary with at least
+    that many trials recorded (checkpoint-and-stop — also how tests
+    simulate a crash).
+    """
+    problem, tuner = resolve_session(spec, problem, tuner)
+    workers = spec.workers if workers is None else workers
+    own_pool = pool is None
+    if pool is None:
+        pool = WorkerPool(problem, spec.arch, workers=workers, mode=mode,
+                          max_retries=max_retries)
+    gen = session_stepper(spec, problem=problem, tuner=tuner, store=store,
+                          stop_after=stop_after, on_batch=on_batch)
+    try:
+        return drive(gen, pool)
     finally:
         if own_pool:
             pool.close()
-
-    if store is not None:
-        if stopped_early:
-            store.update_meta(sid, status=INTERRUPTED)
-        else:
-            store.update_meta(sid, status=DONE, evaluated=len(res.trials))
-            store.publish_trace(sid, problem, res)
-    return res
 
 
 def resume_session(sid: str, store: SessionStore, *,
@@ -206,7 +306,9 @@ def resume_session(sid: str, store: SessionStore, *,
 
     The spec (including worker count, hence the batch schedule) comes from
     the store, so the replayed prefix matches the original run exactly and
-    no journaled config is ever re-evaluated.
+    no journaled config is ever re-evaluated.  Also repairs a session that
+    crashed between trace publication and its DONE mark: the full replay
+    re-publishes idempotently.
     """
     spec = store.load_spec(sid)
     return run_session(spec, store=store, workers=workers, mode=mode,

@@ -50,6 +50,17 @@ class SessionSpec:
         }
 
     @property
+    def share_key(self) -> tuple:
+        """The problem identity (name + kwargs).  An objective is a pure
+        function of (problem, row, arch), so sessions agreeing on this key
+        — any mix of tuners, seeds, budgets and architectures — may be
+        served from one arch-shared evaluation cache: each deduped row is
+        evaluated once and every architecture reads the shared value
+        columns."""
+        c = self.canonical()
+        return (c["problem"], json.dumps(c["problem_kwargs"], sort_keys=True))
+
+    @property
     def session_id(self) -> str:
         """Content-addressed id: stable across processes, unique per spec."""
         blob = json.dumps(self.canonical(), sort_keys=True).encode()

@@ -35,6 +35,47 @@ from ..core.tuners.base import TuneResult
 from .session import CREATED, SessionSpec
 
 
+#: info value types the journal persists as-is
+_JSON_SCALARS = (str, bool, int, float, type(None))
+
+
+def _json_safe_value(v):
+    """``v`` if it round-trips through JSON unchanged, else ``None`` marker.
+
+    Returns ``(ok, value)`` so legitimate ``None`` values survive."""
+    if isinstance(v, bool) or v is None or isinstance(v, str):
+        return True, v
+    if isinstance(v, int):
+        return True, int(v)
+    if isinstance(v, float):
+        return math.isfinite(v), v     # inf/nan are not JSON
+    if isinstance(v, (list, tuple)):
+        parts = [_json_safe_value(x) for x in v]
+        return all(ok for ok, _ in parts), [x for _, x in parts]
+    if isinstance(v, dict):
+        if not all(isinstance(k, str) for k in v):
+            return False, None
+        parts = {k: _json_safe_value(x) for k, x in v.items()}
+        return (all(ok for ok, _ in parts.values()),
+                {k: x for k, (_, x) in parts.items()})
+    return False, None
+
+
+def _json_safe_info(info: dict) -> dict:
+    """The JSON-round-trippable subset of a trial's ``info``.
+
+    Fault markers (``error``/``poison``/``attempts``), constraint-violation
+    lists and any other plain-data entries persist; derived object payloads
+    (``features``: a :class:`KernelFeatures`) are recomputable from the row
+    and are dropped rather than serialized lossily."""
+    out = {}
+    for k, v in info.items():
+        ok, safe = _json_safe_value(v)
+        if ok:
+            out[k] = safe
+    return out
+
+
 class SessionStore:
     """Directory-backed session state with atomic metadata updates."""
 
@@ -94,14 +135,26 @@ class SessionStore:
     # -- journal ---------------------------------------------------------- #
     def append_trials(self, sid: str, space: SearchSpace,
                       trials: Iterable[tuple[int, Trial]]) -> None:
-        """Append (key, trial) records and fsync — the crash-safety point."""
+        """Append (key, trial) records and fsync — the crash-safety point.
+
+        Journal v2: the key *is* the row (``key == space.flat_index(config)``
+        by the runner's dedup contract), so records are row-native —
+        ``{"k": row, "o": seconds|null, "v": valid, "i": info}`` — with no
+        redundant encoded-config column.  ``"i"`` persists the JSON-safe
+        subset of ``Trial.info`` (fault markers like ``poison``/``attempts``/
+        ``error`` included; derived payloads like ``KernelFeatures`` are
+        recomputable and excluded), so a resumed trace replays
+        ``info``-identical to the uninterrupted run.  v1 records (with the
+        ``"c"`` column) are still read by :meth:`load_journal`.
+        """
         lines = []
         for key, t in trials:
-            rec = {"k": key, "c": list(space.encode(t.config)),
+            rec = {"k": int(key),
                    "o": None if not math.isfinite(t.objective) else t.objective,
                    "v": bool(t.valid)}
-            if "error" in t.info:
-                rec["e"] = str(t.info["error"])
+            info = _json_safe_info(t.info)
+            if info:
+                rec["i"] = info
             lines.append(json.dumps(rec, separators=(",", ":")))
         if not lines:
             return
@@ -135,13 +188,18 @@ class SessionStore:
                 rec = json.loads(line)
             except json.JSONDecodeError:
                 continue               # torn line from a crash mid-append
-            cfg = space.decode(rec["c"])
             obj = math.inf if rec["o"] is None else float(rec["o"])
-            info = {"journaled": True}
-            if "e" in rec:
-                info["error"] = rec["e"]
-            out.append((int(rec["k"]),
-                        Trial(cfg, obj, arch, valid=bool(rec["v"]), info=info)))
+            key = int(rec["k"])
+            if "c" in rec:             # v1 record: explicit encoded config
+                cfg = space.decode(rec["c"])
+                info = dict(rec.get("i", {}))
+                if "e" in rec:
+                    info["error"] = rec["e"]
+                t = Trial(cfg, obj, arch, valid=bool(rec["v"]), info=info)
+            else:                      # v2: row-only — decode lazily, if ever
+                t = Trial(None, obj, arch, valid=bool(rec["v"]),
+                          info=dict(rec.get("i", {})), row=key, space=space)
+            out.append((key, t))
         return out
 
     # -- finished traces --------------------------------------------------- #

@@ -13,6 +13,15 @@ Fault handling: a chunk that raises is retried config-by-config through a
 :class:`JobQueue`; a config that keeps raising past the retry cap is
 *poisoned* — returned as an invalid :class:`Trial` carrying the error, so
 one bad config can never wedge a session.
+
+Shared pools: every evaluation entry point takes per-call ``problem=`` and
+``arch=`` overrides, so one pool (one executor, one set of warm workers)
+can serve every session of a campaign grid regardless of which problem or
+architecture each session tunes.  The arch-shared form
+``evaluate_rows(rows, archs=[...])`` evaluates each row ONCE via
+``TunableProblem.trials_for_rows_archs`` (one decode + one set of value
+columns shared by all architectures) and returns per-arch trial lists —
+the portability-campaign fast path.
 """
 
 from __future__ import annotations
@@ -27,6 +36,14 @@ from ..core.space import Config
 from .queue import DONE, JobQueue
 
 
+#: thread-mode minimum chunk size: splitting a small analytical batch
+#: across every worker forfeits the columnar evaluation path (below
+#: ``problem._COLUMNAR_MIN`` rows per chunk) for pure scheduler overhead.
+#: Results are chunking-independent (the compiled-path equivalence
+#: property), so this is a wall-clock knob only.
+_THREAD_CHUNK_FLOOR = 32
+
+
 def _evaluate_chunk(problem: TunableProblem, configs: list[Config],
                     arch: str) -> list[Trial]:
     # module-level so the process pool can pickle it
@@ -38,12 +55,18 @@ def _evaluate_rows_chunk(problem: TunableProblem, rows: list[int],
     return problem.trials_for_rows(rows, arch)
 
 
+def _evaluate_rows_archs_chunk(problem: TunableProblem, rows: list[int],
+                               archs: tuple[str, ...]) -> list[list[Trial]]:
+    return problem.trials_for_rows_archs(rows, archs)
+
+
 def _evaluate_one(problem: TunableProblem, config: Config, arch: str) -> Trial:
     return problem.evaluate(config, arch)
 
 
 class WorkerPool:
-    """Evaluates batches of configs for one problem on one arch.
+    """Evaluates batches of configs for one problem on one arch (both
+    overridable per call for shared campaign pools).
 
     Results always come back in input order regardless of completion order —
     the property the session runner relies on for determinism.
@@ -90,80 +113,151 @@ class WorkerPool:
         self.close()
 
     # -- evaluation ------------------------------------------------------- #
-    def evaluate_rows(self, rows: Sequence[int],
-                      arch: str | None = None) -> list[Trial]:
+    def evaluate_rows(self, rows: Sequence[int], arch: str | None = None,
+                      *, archs: Sequence[str] | None = None,
+                      problem: TunableProblem | None = None):
         """Row-native :meth:`evaluate`: valid compiled-space rows in, trials
         out — same ordering/fault-isolation guarantees, but the chunks run
         ``TunableProblem.trials_for_rows`` (value columns straight from the
-        code matrix, no per-config dict work until the one batched decode
-        that builds the trace configs)."""
+        code matrix, no per-config dict work; configs stay lazy).
+
+        With ``archs=`` the call becomes arch-shared: each row is evaluated
+        exactly once — one decode, one set of value columns, one feature
+        build when ``arch_independent_features`` — and the return value is
+        ``{arch: list[Trial]}`` with every list aligned with ``rows``.
+        Bit-identical to one single-arch call per architecture (the
+        compiled-path equivalence property), at ~1/len(archs) the work.
+        """
+        problem = problem or self.problem
+        if archs is not None:
+            return self._evaluate_rows_archs(rows, tuple(archs), problem)
         rows = [int(r) for r in rows]
         if not rows:
             return []
         if self.mode == "process":
             # measured problems re-derive everything from configs anyway;
             # keep one battle-tested path through the process pool
-            comp = self.problem.space.compiled()
-            cfgs = comp.decode_many(rows) if comp is not None else \
-                [self.problem.space.from_flat_index(r) for r in rows]
-            return self.evaluate(cfgs, arch)
+            cfgs = self._rows_to_configs(rows, problem)
+            return self.evaluate(cfgs, arch, problem=problem)
         return self._evaluate_chunked(rows, arch or self.arch,
                                       _evaluate_rows_chunk,
-                                      self._rows_to_configs)
+                                      self._rows_to_configs, problem)
 
-    def _rows_to_configs(self, rows: list[int]) -> list[Config]:
-        comp = self.problem.space.compiled()
+    def _rows_to_configs(self, rows: list[int],
+                         problem: TunableProblem | None = None) -> list[Config]:
+        problem = problem or self.problem
+        comp = problem.space.compiled()
         if comp is not None:
             return comp.decode_many(rows)
-        return [self.problem.space.from_flat_index(int(r)) for r in rows]
+        return [problem.space.from_flat_index(int(r)) for r in rows]
 
-    def evaluate(self, configs: Sequence[Config],
-                 arch: str | None = None) -> list[Trial]:
+    def evaluate(self, configs: Sequence[Config], arch: str | None = None,
+                 *, problem: TunableProblem | None = None) -> list[Trial]:
         """Evaluate ``configs`` in parallel; ordered, fault-isolated."""
         configs = list(configs)
         if not configs:
             return []
         return self._evaluate_chunked(configs, arch or self.arch,
-                                      _evaluate_chunk, None)
+                                      _evaluate_chunk, None,
+                                      problem or self.problem)
 
-    def _evaluate_chunked(self, items: list, arch: str, chunk_fn,
-                          to_configs) -> list[Trial]:
+    # -- arch-shared evaluation ------------------------------------------- #
+    def _evaluate_rows_archs(self, rows: Sequence[int], archs: tuple[str, ...],
+                             problem: TunableProblem
+                             ) -> dict[str, list[Trial]]:
+        rows = [int(r) for r in rows]
+        if not rows:
+            return {a: [] for a in archs}
+        if self.mode == "process":
+            # measured problems measure per architecture by definition —
+            # there is nothing to share beyond the one decode
+            cfgs = self._rows_to_configs(rows, problem)
+            return {a: self.evaluate(cfgs, a, problem=problem) for a in archs}
+
         ex = self._executor()
+        done, retry, broken = self._run_chunks(
+            rows, lambda chunk: ex.submit(_evaluate_rows_archs_chunk,
+                                          problem, chunk, archs))
+        out: dict[str, list] = {a: [None] * len(rows) for a in archs}
+        for lo, hi, per_arch in done:
+            for a, trials in zip(archs, per_arch):
+                out[a][lo:hi] = trials
 
-        # 1. chunked fast path: one evaluate_many per worker
-        configs = items
-        n_chunks = min(self.workers, len(configs))
-        bounds = [round(i * len(configs) / n_chunks) for i in range(n_chunks + 1)]
+        if retry:
+            # per-row isolation: decode just the failing rows once, then run
+            # the per-config retry/poison machinery independently per arch
+            # (a row can be poisoned on one architecture and fine on another)
+            decoded = self._rows_to_configs([rows[i] for i in retry], problem)
+            configs: list = list(rows)
+            for i, cfg in zip(retry, decoded):
+                configs[i] = cfg
+            if broken:
+                ex = self._rebuild()
+            for a in archs:
+                self._evaluate_with_retries(configs, retry, out[a], a, ex,
+                                            problem)
+        return out
+
+    def _n_chunks(self, n_items: int) -> int:
+        if self.mode == "thread":
+            return max(1, min(self.workers, n_items // _THREAD_CHUNK_FLOOR))
+        return min(self.workers, n_items)
+
+    def _run_chunks(self, items: list, submit) -> tuple[list, list[int], bool]:
+        """Fan ``items`` out as worker chunks (``submit(chunk) -> Future``).
+
+        Returns ``(done, retry, broken)``: ``done`` as ``(lo, hi, result)``
+        per successful chunk, ``retry`` the item indices of chunks that
+        raised (poison isolation runs them one by one), and ``broken`` True
+        when a failure was a BrokenExecutor — the caller must rebuild the
+        executor before retrying."""
+        n_chunks = self._n_chunks(len(items))
+        bounds = [round(i * len(items) / n_chunks)
+                  for i in range(n_chunks + 1)]
         spans = [(bounds[i], bounds[i + 1]) for i in range(n_chunks)
                  if bounds[i] < bounds[i + 1]]
-        futs = [ex.submit(chunk_fn, self.problem,
-                          configs[lo:hi], arch) for lo, hi in spans]
-        out: list[Trial | None] = [None] * len(configs)
+        futs = [submit(items[lo:hi]) for lo, hi in spans]
+        done: list = []
         retry: list[int] = []
         broken = False
         for (lo, hi), fut in zip(spans, futs):
             try:
-                out[lo:hi] = fut.result()
+                done.append((lo, hi, fut.result()))
             except BrokenExecutor:
                 retry.extend(range(lo, hi))
                 broken = True
             except Exception:
-                retry.extend(range(lo, hi))   # isolate the poison config(s)
+                retry.extend(range(lo, hi))   # isolate the poison item(s)
+        return done, retry, broken
+
+    def _evaluate_chunked(self, items: list, arch: str, chunk_fn,
+                          to_configs, problem: TunableProblem) -> list[Trial]:
+        ex = self._executor()
+
+        # 1. chunked fast path: one evaluate_many per worker
+        done, retry, broken = self._run_chunks(
+            items, lambda chunk: ex.submit(chunk_fn, problem, chunk, arch))
+        out: list[Trial | None] = [None] * len(items)
+        for lo, hi, trials in done:
+            out[lo:hi] = trials
 
         # 2. per-config retry path through the job queue
         if retry:
+            configs = items
             if to_configs is not None:       # rows: decode just the retries
-                decoded = to_configs([items[i] for i in retry])
+                decoded = to_configs([items[i] for i in retry], problem)
                 configs = list(items)
                 for i, cfg in zip(retry, decoded):
                     configs[i] = cfg
             if broken:
                 ex = self._rebuild()
-            self._evaluate_with_retries(configs, retry, out, arch, ex)
+            self._evaluate_with_retries(configs, retry, out, arch, ex, problem)
         return out  # type: ignore[return-value]
 
     def _evaluate_with_retries(self, configs: list[Config], indices: list[int],
-                               out: list, arch: str, ex: Executor) -> None:
+                               out: list, arch: str, ex: Executor,
+                               problem: TunableProblem | None = None) -> None:
+        problem = problem or self.problem
         queue = JobQueue(self.max_retries)
         for i in indices:
             queue.submit(i, configs[i])       # key == batch index: unique
@@ -177,11 +271,11 @@ class WorkerPool:
                 if job is None:
                     return
                 try:
-                    fut = ex.submit(_evaluate_one, self.problem, job.config,
+                    fut = ex.submit(_evaluate_one, problem, job.config,
                                     arch)
                 except BrokenExecutor:
                     ex = self._rebuild()
-                    fut = ex.submit(_evaluate_one, self.problem, job.config,
+                    fut = ex.submit(_evaluate_one, problem, job.config,
                                     arch)
                 running[fut] = job
 

@@ -569,6 +569,255 @@ def test_campaign_grid_runs_and_resumes(tmp_path):
         assert _traces_equal(results[sid], again[sid])
 
 
+# --------------------------------------------------------------------- #
+# journal v2: row-native records, info round-trip, v1 compat
+# --------------------------------------------------------------------- #
+def test_journal_v2_records_are_row_native(tmp_path):
+    store = SessionStore(tmp_path)
+    prob = _quad_problem()
+    spec = SessionSpec(problem="quad", tuner="random", budget=12, seed=7,
+                       workers=2)
+    run_session(spec, problem=prob, store=store)
+    lines = store._journal_path(spec.session_id).read_text().splitlines()
+    recs = [json.loads(l) for l in lines]
+    assert recs
+    for rec in recs:
+        assert set(rec) <= {"k", "o", "v", "i"}     # no "c" column
+        assert rec["k"] == prob.space.flat_index(
+            prob.space.from_flat_index(rec["k"]))
+
+
+def test_journal_v2_resume_replays_fault_info(tmp_path):
+    """The satellite bug: poison markers (poison/attempts/error) must
+    survive the journal round-trip, so a resumed trace is info-identical
+    to the never-interrupted run."""
+    params = [Param("a", tuple(range(24)))]
+    space = SearchSpace(params, name="poisonj")
+
+    def fn(cfg, arch):
+        if cfg["a"] % 5 == 2:                     # several poison configs
+            raise RuntimeError(f"kaboom {cfg['a']}")
+        return float(cfg["a"] + 1)
+
+    def mk():
+        return FunctionProblem(SearchSpace([Param("a", tuple(range(24)))],
+                                           name="poisonj"), fn,
+                               name="poisonj")
+
+    store = SessionStore(tmp_path)
+    spec = SessionSpec(problem="poisonj", tuner="grid", budget=24, seed=0,
+                       workers=2)
+    run_session(spec, problem=mk(), store=store, stop_after=10,
+                max_retries=1)
+    resumed = run_session(spec, problem=mk(), store=store, max_retries=1)
+    uninterrupted = run_session(spec, problem=mk(), max_retries=1)
+
+    assert _traces_equal(uninterrupted, resumed)
+    assert [t.info for t in resumed.trials] == \
+           [t.info for t in uninterrupted.trials]
+    poisoned = [t for t in resumed.trials if t.info.get("poison")]
+    assert len(poisoned) == 5                      # a in {2,7,12,17,22}
+    for t in poisoned:
+        assert t.info["attempts"] == 2
+        assert "kaboom" in t.info["error"]
+
+
+def test_journal_v1_records_still_load(tmp_path):
+    """A v1 journal (explicit encoded-config column) written by an older
+    build must resume exactly."""
+    evals = []
+    prob = _quad_problem(record=evals)
+    store = SessionStore(tmp_path)
+    spec = SessionSpec(problem="quad", tuner="random", budget=30, seed=5,
+                       workers=4)
+    run_session(spec, problem=prob, store=store, stop_after=12)
+    jp = store._journal_path(spec.session_id)
+
+    # rewrite the journal in the v1 format
+    v1_lines = []
+    for line in jp.read_text().splitlines():
+        rec = json.loads(line)
+        cfg = prob.space.from_flat_index(rec["k"])
+        v1 = {"k": rec["k"], "c": list(prob.space.encode(cfg)),
+              "o": rec["o"], "v": rec["v"]}
+        v1_lines.append(json.dumps(v1, separators=(",", ":")))
+    jp.write_text("\n".join(v1_lines) + "\n")
+
+    n1 = len(evals)
+    full = run_session(spec, problem=prob, store=store)
+    assert len(full.trials) == 30
+    assert not set(evals[:n1]) & set(evals[n1:])   # nothing re-evaluated
+    ref = run_tuner(RandomSearch(prob.space, seed=5), _quad_problem(),
+                    budget=30)
+    assert _traces_equal(ref, full)
+
+
+def test_json_safe_info_filter():
+    from repro.orchestrator.store import _json_safe_info
+
+    class Blob:                                    # not JSON-serializable
+        pass
+
+    info = {"error": "boom", "poison": True, "attempts": 3,
+            "violated": ["c1", "c2"], "nested": {"a": 1.5, "b": [1, "x"]},
+            "features": Blob(), "inf": math.inf, "none": None}
+    safe = _json_safe_info(info)
+    assert safe == {"error": "boom", "poison": True, "attempts": 3,
+                    "violated": ["c1", "c2"],
+                    "nested": {"a": 1.5, "b": [1, "x"]}, "none": None}
+    assert json.loads(json.dumps(safe)) == safe
+
+
+def test_trial_lazy_config_and_materialize():
+    from repro.core.problem import materialize_configs
+    prob = _quad_problem(n_params=2, k=4)
+    space = prob.space
+    space.compile_eagerly()
+    lazy = [Trial(None, 1.0, "v5e", row=r, space=space) for r in (3, 7, 11)]
+    assert all(t._config is None for t in lazy)
+    assert [t.row for t in lazy] == [3, 7, 11]
+    materialize_configs(lazy)
+    for t, r in zip(lazy, (3, 7, 11)):
+        assert t._config is not None
+        assert t.config == space.from_flat_index(r)
+    with pytest.raises(ValueError):
+        Trial(None, 1.0, "v5e")                    # lazy needs row+space
+    # eager trials may carry their row too (journal/publish fast path)
+    t = Trial({"a": 1}, 2.0, "v5e", row=9, space=space)
+    assert t.config == {"a": 1} and t.row == 9
+
+
+# --------------------------------------------------------------------- #
+# empty ask == finished (the cfgs[0] crash)
+# --------------------------------------------------------------------- #
+def _stub_tuner_class(rows_mode: bool):
+    from repro.core.tuners.base import Tuner
+
+    class Stub(Tuner):
+        """Returns one short batch, then empty asks (exhaustion flipping
+        mid-batch) — the dict path used to crash on ``cfgs[0]``."""
+        name = "stub"
+        max_parallel_asks = None
+
+        def __init__(self, space, seed=0):
+            super().__init__(space, seed)
+            self._served = False
+            if not rows_mode:
+                self._comp = None      # force the dict path
+
+        def ask_scalar(self):
+            return self.space.from_flat_index(0)
+
+        def ask_batch(self, n):
+            if self._served:
+                return []
+            self._served = True
+            return [self.space.from_flat_index(i) for i in range(3)]
+
+        def ask_rows(self, n):
+            if self._served:
+                return []
+            self._served = True
+            return [0, 1, 2]
+
+    return Stub
+
+
+@pytest.mark.parametrize("rows_mode", [False, True])
+def test_empty_ask_batch_treated_as_finished(tmp_path, rows_mode):
+    prob = _quad_problem(n_params=2, k=4)
+    store = SessionStore(tmp_path)
+    spec = SessionSpec(problem="quad", tuner="stub", budget=20, seed=0,
+                       workers=2)
+    tuner = _stub_tuner_class(rows_mode)(prob.space, seed=0)
+    assert tuner.index_native == rows_mode
+    res = run_session(spec, problem=prob, tuner=tuner, store=store)
+    # the short batch landed, the empty ask ended the session cleanly
+    assert len(res.trials) == 3
+    assert store.meta(spec.session_id)["status"] == "done"
+
+
+def test_immediately_empty_ask_is_clean_noop():
+    prob = _quad_problem(n_params=2, k=4)
+    Stub = _stub_tuner_class(False)
+    tuner = Stub(prob.space, seed=0)
+    tuner._served = True                           # empty from the first ask
+    spec = SessionSpec(problem="quad", tuner="stub", budget=20, seed=0,
+                       workers=2)
+    res = run_session(spec, problem=prob, tuner=tuner)
+    assert res.trials == []
+
+
+# --------------------------------------------------------------------- #
+# publish-before-DONE (the lost-table crash window)
+# --------------------------------------------------------------------- #
+def test_trace_published_before_done_mark(tmp_path):
+    calls = []
+    store = SessionStore(tmp_path)
+    orig_publish, orig_update = store.publish_trace, store.update_meta
+    store.publish_trace = lambda *a, **k: (calls.append("publish"),
+                                           orig_publish(*a, **k))[1]
+    store.update_meta = lambda sid, **f: (
+        calls.append(f"meta:{f.get('status')}") or orig_update(sid, **f))
+    prob = _quad_problem()
+    spec = SessionSpec(problem="quad", tuner="random", budget=10, seed=1,
+                       workers=2)
+    run_session(spec, problem=prob, store=store)
+    assert "publish" in calls
+    assert calls.index("publish") < calls.index("meta:done")
+
+
+def test_crash_between_publish_and_done_is_resumable(tmp_path):
+    """A crash in the publish→DONE window must leave a resumable session
+    whose table already exists; resume republishes idempotently and
+    finishes DONE."""
+    store = SessionStore(tmp_path)
+    prob = _quad_problem()
+    spec = SessionSpec(problem="quad", tuner="random", budget=10, seed=1,
+                       workers=2)
+    orig = store.update_meta
+
+    def boom_on_done(sid, **fields):
+        if fields.get("status") == "done":
+            raise OSError("crash before the DONE mark")
+        return orig(sid, **fields)
+
+    store.update_meta = boom_on_done
+    with pytest.raises(OSError):
+        run_session(spec, problem=prob, store=store)
+    # the table survived the crash; the session is not a lost DONE husk
+    table = store.tables.get("quad", "v5e", f"session_{spec.session_id}")
+    assert len(table) == 10
+    assert store.meta(spec.session_id)["status"] == "failed"
+
+    store.update_meta = orig
+    res = run_session(spec, problem=prob, store=store)  # == resume_session
+    assert len(res.trials) == 10
+    assert store.meta(spec.session_id)["status"] == "done"
+    table = store.tables.get("quad", "v5e", f"session_{spec.session_id}")
+    assert table.best()[1] == res.best.objective
+
+
+def test_cli_campaign_runs_grid(tmp_path, capsys):
+    store_dir = str(tmp_path / "camp_store")
+    rc = cli_main(["campaign", "--problems", "toy_quad",
+                   "--tuners", "random,genetic", "--archs", "v5e,v4",
+                   "--seeds", "0,1", "--budget", "20", "--workers", "2",
+                   "--store", store_dir])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "8 sessions" in out
+    assert out.count("done") == 8
+    rc = cli_main(["campaign", "--problems", "nope", "--tuners", "random",
+                   "--store", store_dir])
+    assert rc == 2
+    capsys.readouterr()
+    rc = cli_main(["campaign", "--problems", "toy_quad", "--tuners", "zzz",
+                   "--store", store_dir])
+    assert rc == 2
+    capsys.readouterr()
+
+
 def test_cli_submit_status_resume(tmp_path, capsys):
     store_dir = str(tmp_path / "cli_store")
     rc = cli_main(["submit", "--problem", "toy_quad", "--tuner", "random",

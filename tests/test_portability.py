@@ -1,0 +1,274 @@
+"""Portability campaign engine: arch-shared evaluation correctness, the
+transfer-matrix table vs brute force, and the interleaved multi-session
+scheduler's equivalence with the serial campaign loop."""
+
+import math
+
+import pytest
+
+from repro.core import spacetable
+
+_prev_cache = spacetable.get_cache_dir()
+from benchmarks.table_portability import transfer_matrix  # noqa: E402
+
+spacetable.set_cache_dir(_prev_cache)   # undo benchmarks.common's global
+
+from repro.core.costmodel import ARCH_NAMES  # noqa: E402
+from repro.core.problem import FunctionProblem  # noqa: E402
+from repro.core.space import Param, SearchSpace  # noqa: E402
+from repro.orchestrator import (Campaign, SessionStore, WorkerPool,  # noqa: E402
+                                run_campaign, run_session)
+
+
+def _small_problem(name):
+    from repro.kernels.nbody.space import NbodyProblem
+    from repro.kernels.pnpoly.space import PnpolyProblem
+    return {"nbody": NbodyProblem, "pnpoly": PnpolyProblem}[name]()
+
+
+# --------------------------------------------------------------------- #
+# transfer matrix == brute force
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", ["nbody", "pnpoly"])
+def test_transfer_matrix_matches_bruteforce(name):
+    """The arch-shared table must agree with the definition computed the
+    slow way: per-arch exhaustive minima via scalar ``evaluate`` calls."""
+    prob = _small_problem(name)
+    m = transfer_matrix(prob, ARCH_NAMES)
+
+    cfgs = prob.space.valid_configs()
+    objs = {a: [prob.evaluate(c, a).objective for c in cfgs]
+            for a in ARCH_NAMES}
+    best_i = {a: min(range(len(cfgs)),
+                     key=lambda j: objs[a][j] if math.isfinite(objs[a][j])
+                     else math.inf)
+              for a in ARCH_NAMES}
+    for i, src in enumerate(ARCH_NAMES):
+        for j, dst in enumerate(ARCH_NAMES):
+            t = objs[dst][best_i[src]]
+            want = (100.0 * objs[dst][best_i[dst]] / t
+                    if math.isfinite(t) else 0.0)
+            assert m["matrix_pct"][i][j] == pytest.approx(want, rel=1e-12), \
+                (src, dst)
+    # the source optima the matrix used are the true per-arch optima
+    for a in ARCH_NAMES:
+        assert m["best_seconds"][a] == objs[a][best_i[a]]
+
+
+def test_transfer_matrix_diagonal_and_bounds():
+    prob = _small_problem("nbody")
+    m = transfer_matrix(prob, ARCH_NAMES)
+    for i in range(len(ARCH_NAMES)):
+        assert m["matrix_pct"][i][i] == pytest.approx(100.0)
+        for j in range(len(ARCH_NAMES)):
+            assert 0.0 <= m["matrix_pct"][i][j] <= 100.0 + 1e-9
+
+
+# --------------------------------------------------------------------- #
+# arch-shared pool evaluation
+# --------------------------------------------------------------------- #
+def test_evaluate_rows_archs_bitidentical_to_single_arch_pools():
+    """One archs= call must equal four independent single-arch pools,
+    objective for objective and validity for validity."""
+    prob = _small_problem("pnpoly")
+    comp = prob.space.compile_eagerly()
+    rows = [int(r) for r in comp.valid_rows[:300]]
+    with WorkerPool(prob, ARCH_NAMES[0], workers=3) as pool:
+        shared = pool.evaluate_rows(rows, archs=ARCH_NAMES)
+    for a in ARCH_NAMES:
+        with WorkerPool(prob, a, workers=2) as solo:
+            single = solo.evaluate_rows(rows)
+        assert [t.objective for t in shared[a]] == \
+               [t.objective for t in single]
+        assert [t.valid for t in shared[a]] == [t.valid for t in single]
+    # arch-shared trials are row-backed and lazy: no config was decoded
+    t = shared[ARCH_NAMES[0]][0]
+    assert t.row == rows[0]
+    assert t._config is None
+    assert t.config == comp.decode_row(rows[0])
+
+
+def test_evaluate_rows_archs_counts_one_feature_pass():
+    """The sharing criterion: rows through the feature computation <= the
+    unique row count — NOT archs x rows."""
+    from repro.kernels.pnpoly.space import PnpolyProblem
+    counts = {"rows": 0}
+
+    class Counting(PnpolyProblem):
+        def feature_columns(self, cols, arch):
+            counts["rows"] += len(next(iter(cols.values()))) if cols else 0
+            return super().feature_columns(cols, arch)
+
+        def features(self, config, arch):
+            counts["rows"] += 1
+            return super().features(config, arch)
+
+    prob = Counting()
+    comp = prob.space.compile_eagerly()
+    rows = [int(r) for r in comp.valid_rows[:200]]
+    prob.trials_for_rows_archs(rows, ARCH_NAMES)
+    assert counts["rows"] <= len(rows)
+
+
+def test_evaluate_rows_archs_poison_isolated_per_arch():
+    """A row whose evaluation raises must come back poisoned on every arch
+    without wedging the batch."""
+    space = SearchSpace([Param("a", tuple(range(8)))], name="pp")
+
+    def fn(cfg, arch):
+        if cfg["a"] == 3:
+            raise RuntimeError("kaboom")
+        return float(cfg["a"] + 1)
+
+    prob = FunctionProblem(space, fn, name="pp")
+    prob.space.compile_eagerly()
+    with WorkerPool(prob, "v5e", workers=2, max_retries=1) as pool:
+        shared = pool.evaluate_rows(list(range(8)), archs=("v5e", "v4"))
+    for a in ("v5e", "v4"):
+        bad = [t for t in shared[a] if not t.valid]
+        assert len(bad) == 1
+        assert bad[0].config["a"] == 3
+        assert bad[0].info.get("poison") is True
+        ok = [t.objective for t in shared[a] if t.valid]
+        assert ok == [1.0, 2.0, 3.0, 5.0, 6.0, 7.0, 8.0]
+
+
+# --------------------------------------------------------------------- #
+# interleaved campaign scheduler
+# --------------------------------------------------------------------- #
+def _record_problem(record):
+    space = SearchSpace([Param(f"p{i}", tuple(range(6))) for i in range(3)],
+                        name="camp_quad")
+
+    offs = {"v5e": 0.0, "v4": 0.1, "v5p": 0.2}
+
+    def fn(cfg, arch):
+        record.append((tuple(cfg[f"p{i}"] for i in range(3)), arch))
+        return 1.0 + sum((cfg[f"p{i}"] - 2) ** 2 for i in range(3)) \
+            + offs.get(arch, 0.3)
+
+    return FunctionProblem(space, fn, name="camp_quad")
+
+
+def _traces_equal(a, b):
+    return ([t.config for t in a.trials] == [t.config for t in b.trials]
+            and [t.objective for t in a.trials]
+            == [t.objective for t in b.trials])
+
+
+def test_empty_campaign_is_clean_noop():
+    assert run_campaign([]) == {}
+    assert Campaign([]).run(interleave=True) == {}
+
+
+@pytest.mark.parametrize("tuners", [["random"], ["genetic", "annealing"]])
+def test_interleaved_campaign_equals_serial(tuners):
+    camp = Campaign.grid(problems=["toy_quad"], tuners=tuners,
+                         archs=("v5e", "v4"), seeds=range(2), budget=30,
+                         workers=2)
+    serial = camp.run()
+    inter = camp.run(interleave=True)
+    assert serial.keys() == inter.keys()
+    for sid in serial:
+        assert _traces_equal(serial[sid], inter[sid]), sid
+
+
+def test_interleaved_campaign_share_archs_no_duplicate_evaluations():
+    """A portability grid (same problem + seed across archs) must evaluate
+    every (config, arch) pair at most once campaign-wide — sibling sessions
+    read the shared columns instead of re-evaluating."""
+    record = []
+    prob = _record_problem(record)
+    specs = Campaign.grid(problems=["camp_quad"], tuners=["random"],
+                          archs=("v5e", "v4", "v5p"), seeds=(0, 1),
+                          budget=25, workers=2).specs
+    results = run_campaign(specs, problems={"camp_quad": prob}, workers=2)
+    assert len(results) == 6
+    assert len(record) == len(set(record)), "an evaluation ran twice"
+    # same-seed random sessions ask identical rows on every arch: the
+    # arch-shared sweep answers all three sessions from 25 unique configs
+    per_arch = {}
+    for cfg, arch in record:
+        per_arch.setdefault(arch, set()).add(cfg)
+    n_unique = len({cfg for cfg, _ in record})
+    for arch, cfgs in per_arch.items():
+        assert len(cfgs) <= n_unique
+
+    # serial reference: identical traces, strictly more evaluations
+    record2 = []
+    prob2 = _record_problem(record2)
+    for spec, (sid, res) in zip(specs, results.items()):
+        ref = run_session(spec, problem=prob2)
+        assert _traces_equal(ref, res)
+    assert len(record2) > len(record)
+
+
+def test_interleaved_campaign_resumes_partial_sessions(tmp_path):
+    """Journaled prefixes from interrupted serial runs are replayed by the
+    interleaved scheduler: nothing re-evaluated, traces unchanged."""
+    record = []
+    prob = _record_problem(record)
+    store = SessionStore(tmp_path)
+    specs = Campaign.grid(problems=["camp_quad"], tuners=["random"],
+                          archs=("v5e", "v4"), seeds=(0,), budget=40,
+                          workers=2).specs
+    # interrupt the first session mid-way, serially
+    run_session(specs[0], problem=prob, store=store, stop_after=10)
+    n_before = len(record)
+    results = run_campaign(specs, store, problems={"camp_quad": prob},
+                           workers=2)
+    # the journaled prefix was not re-evaluated
+    phase2 = record[n_before:]
+    assert not set(record[:n_before]) & set(phase2)
+    uninterrupted = {s.session_id: run_session(s, problem=_record_problem([]))
+                     for s in specs}
+    for sid in results:
+        assert _traces_equal(uninterrupted[sid], results[sid])
+    for s in specs:
+        assert store.meta(s.session_id)["status"] == "done"
+
+
+def test_campaign_grid_interleave_with_store_is_replayable(tmp_path):
+    store = SessionStore(tmp_path)
+    camp = Campaign.grid(problems=["toy_rastrigin"], tuners=["random", "pso"],
+                         archs=("v5e", "v4"), seeds=(3,), budget=24,
+                         workers=2)
+    first = camp.run(store, interleave=True)
+    assert camp.done(store)
+    again = camp.run(store, interleave=True)   # pure journal replay
+    for sid in first:
+        assert _traces_equal(first[sid], again[sid])
+
+
+# --------------------------------------------------------------------- #
+# exhaustive(limit=) compiled slice
+# --------------------------------------------------------------------- #
+def test_exhaustive_limit_matches_iterator():
+    import itertools
+    from repro.core.space import Constraint
+    space = SearchSpace(
+        [Param("a", tuple(range(6))), Param("b", tuple(range(5)))],
+        [Constraint("sum", lambda c: (c["a"] + c["b"]) % 3 != 0)],
+        name="lim")
+
+    def fn(cfg, arch):
+        return float(cfg["a"] * 5 + cfg["b"] + 1)
+
+    prob = FunctionProblem(space, fn, name="lim")
+    assert prob.space.compiled() is not None
+    ref = list(itertools.islice(space.enumerate(constrained=True), 7))
+    got = prob.exhaustive(limit=7)
+    assert [t.config for t in got] == ref
+    # and the sliced prefix agrees with the unlimited enumeration
+    full = prob.exhaustive()
+    assert [t.config for t in got] == [t.config for t in full[:7]]
+    assert [t.objective for t in got] == [t.objective for t in full[:7]]
+    # uncompiled fallback stays identical
+    space2 = SearchSpace(
+        [Param("a", tuple(range(6))), Param("b", tuple(range(5)))],
+        [Constraint("sum", lambda c: (c["a"] + c["b"]) % 3 != 0)],
+        name="lim2")
+    space2.compiled = lambda *a, **k: None        # force the iterator path
+    prob2 = FunctionProblem(space2, fn, name="lim2")
+    got2 = prob2.exhaustive(limit=7)
+    assert [t.config for t in got2] == ref
