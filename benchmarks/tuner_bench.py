@@ -42,10 +42,22 @@ Results land in ``BENCH_tuners.json``; the headline is the population-
 tuner (GA/DE/PSO/annealing) speedup on the largest space (gemm), with the
 acceptance bar ">= 5x configs/sec on at least two of them".
 
-Usage:  python -m benchmarks.tuner_bench [--smoke]
+The ``"broker"`` section measures the multi-host backend: the same
+campaign grid driven through the SQLite job broker with detached worker
+processes vs the in-process interleaved scheduler, plus the
+fault-tolerance scenario — one worker SIGKILLed mid-campaign, its leased
+jobs requeued onto the survivors after lease expiry.  Published traces
+are asserted bit-identical to the in-process run in every scenario
+before timings are reported; the broker is a *scale-out* path, not a
+speedup, on analytical problems (the JSON records its overhead
+honestly — worker process startup and queue polling included).
+
+Usage:  python -m benchmarks.tuner_bench [--smoke | --broker-smoke]
 ``--smoke`` restricts to the smallest space / two archs / reduced budget
 (CI guard: asserts trajectory equality and that the engine has not
-regressed below the scalar path).
+regressed below the scalar path).  ``--broker-smoke`` runs ONLY the
+broker scenario at smoke scale (2 detached workers, kill one,
+trace-equality assertions) — the CI broker guard.
 """
 
 from __future__ import annotations
@@ -53,8 +65,13 @@ from __future__ import annotations
 import gc
 import json
 import math
+import os
+import subprocess
 import sys
+import tempfile
+import threading
 import time
+from pathlib import Path
 
 from repro.core.costmodel import ARCH_NAMES
 from repro.core.problem import TunableProblem
@@ -328,6 +345,140 @@ def bench_campaign(archs, smoke: bool = False) -> dict:
     return out
 
 
+#: the multi-host scenario: same grid through the SQLite broker on
+#: detached worker processes.  pnpoly full / toy_rastrigin smoke (the
+#: smoke problem must stay import-light: every worker process pays the
+#: problem's import on its first job).
+BROKER_SPACE = "pnpoly"
+BROKER_SMOKE_SPACE = "toy_rastrigin"
+BROKER_TUNERS = ("random", "genetic")
+BROKER_BUDGET = 256
+BROKER_WORKERS = 4                 # detached worker processes (full)
+BROKER_LEASE_S = 2.0
+
+
+def _spawn_worker(db: str, tmp: Path, tag: str, *, lease: float,
+                  max_idle: float) -> subprocess.Popen:
+    import repro
+    env = dict(os.environ)
+    src = str(Path(list(repro.__path__)[0]).resolve().parent)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    log = open(tmp / f"worker-{tag}.log", "w")
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.orchestrator", "worker",
+         "--broker", db, "--workers", "2", "--lease", str(lease),
+         "--poll", "0.02", "--max-idle", str(max_idle)],
+        env=env, stdout=log, stderr=log, cwd=str(tmp))
+
+
+def _assert_broker_equal(store_ref, store_brk, ref, res, problem_name):
+    assert res.keys() == ref.keys()
+    for sid in ref:
+        a, b = ref[sid], res[sid]
+        assert [t.objective for t in a.trials] == \
+               [t.objective for t in b.trials], sid
+        assert [t.config for t in a.trials] == \
+               [t.config for t in b.trials], sid
+        ta = store_ref.tables.get(problem_name, a.arch, f"session_{sid}")
+        tb = store_brk.tables.get(problem_name, b.arch, f"session_{sid}")
+        assert ta.configs == tb.configs and ta.objectives == tb.objectives, \
+            sid
+
+
+def bench_broker(archs, smoke: bool = False) -> dict:
+    """SQLite-broker campaign on detached worker processes vs the
+    in-process interleaved scheduler, plus the kill-one-worker scenario.
+
+    Published traces (the stores' ResultTables) are asserted
+    bit-identical before any timing is reported — including after one
+    worker process is SIGKILLed mid-campaign and its leased jobs are
+    requeued onto the survivors.
+    """
+    from repro.orchestrator import Campaign, SQLiteBroker, run_campaign
+    from repro.orchestrator.queue import LEASED
+    from repro.orchestrator.store import SessionStore
+
+    problem_name = BROKER_SMOKE_SPACE if smoke else BROKER_SPACE
+    budget = 96 if smoke else BROKER_BUDGET
+    seeds = 1 if smoke else 2
+    n_procs = 2 if smoke else BROKER_WORKERS
+    tuners = ("genetic",) if smoke else BROKER_TUNERS
+    camp = Campaign.grid([problem_name], tuners, archs=archs,
+                         seeds=range(seeds), budget=budget)
+    out = {"space": problem_name, "archs": list(archs),
+           "tuners": list(tuners), "seeds": seeds, "budget": budget,
+           "sessions": len(camp), "worker_processes": n_procs,
+           "lease_s": BROKER_LEASE_S}
+
+    with tempfile.TemporaryDirectory(prefix="broker_bench_") as tmp_s:
+        tmp = Path(tmp_s)
+        store_ref = SessionStore(tmp / "store_ref")
+        t0 = time.perf_counter()
+        ref = run_campaign(camp.specs, store_ref, workers=4)
+        out["inprocess_s"] = time.perf_counter() - t0
+
+        def drive(tag: str, kill_one: bool) -> tuple[dict, float, float]:
+            db = str(tmp / f"queue_{tag}.db")
+            store = SessionStore(tmp / f"store_{tag}")
+            broker = SQLiteBroker(db)
+            procs = [_spawn_worker(db, tmp, f"{tag}{i}",
+                                   lease=BROKER_LEASE_S, max_idle=120)
+                     for i in range(n_procs)]
+            killed_after = [float("nan")]
+            watcher = None
+            if kill_one:
+                t_start = time.perf_counter()
+
+                def _kill_when_leased() -> None:
+                    # SIGKILL one worker as soon as the fleet holds a
+                    # lease — guaranteed mid-campaign, never vacuous
+                    mine = SQLiteBroker(db)
+                    while procs[0].poll() is None:
+                        if mine.counts()[LEASED] > 0:
+                            time.sleep(0.3)
+                            procs[0].kill()
+                            killed_after[0] = time.perf_counter() - t_start
+                            return
+                        time.sleep(0.05)
+
+                watcher = threading.Thread(target=_kill_when_leased,
+                                           daemon=True)
+                watcher.start()
+            t0 = time.perf_counter()
+            try:
+                res = run_campaign(camp.specs, store, broker=broker)
+            finally:
+                for p in procs:
+                    p.kill()
+                    p.wait(timeout=60)
+                if watcher is not None:
+                    watcher.join(timeout=60)
+            elapsed = time.perf_counter() - t0
+            _assert_broker_equal(store_ref, store, ref, res, problem_name)
+            return res, elapsed, killed_after[0]
+
+        _, broker_s, _ = drive("plain", kill_one=False)
+        out["broker_s"] = broker_s
+        out["overhead_vs_inprocess"] = broker_s / out["inprocess_s"]
+        out["identical"] = True
+
+        _, kill_s, killed_after = drive("kill", kill_one=True)
+        out["kill_one_worker"] = {
+            "workers_before_kill": n_procs,
+            "killed_after_s": killed_after,
+            "broker_s": kill_s,
+            "identical": True,
+        }
+    emit(f"tuner_bench/broker/{problem_name}",
+         out["broker_s"] / max(1, len(camp)) * 1e6,
+         f"overhead={out['overhead_vs_inprocess']:.2f}x "
+         f"sessions={len(camp)} kill_one=identical")
+    out["criterion"] = ("published traces bit-identical to in-process, "
+                        "including after killing one worker mid-campaign")
+    out["criterion_met"] = True        # assertions above would have raised
+    return out
+
+
 def run(smoke: bool = False) -> dict:
     names = SMOKE_SPACES if smoke else SPACES
     archs = ARCH_NAMES[:2] if smoke else ARCH_NAMES
@@ -341,6 +492,10 @@ def run(smoke: bool = False) -> dict:
                    for name in names},
         "campaign": bench_campaign(archs, smoke),
     }
+    if not smoke:
+        # the multi-host scenario (detached processes) is its own CI step
+        # (--broker-smoke); only the full run folds it into the JSON
+        out["broker"] = bench_broker(archs)
     headline = HEADLINE if HEADLINE in names else names[0]
     pop = {t: out["spaces"][headline]["tuners"][t]["speedup"]
            for t in POPULATION}
@@ -363,4 +518,8 @@ def run(smoke: bool = False) -> dict:
 
 
 if __name__ == "__main__":
-    run(smoke="--smoke" in sys.argv[1:])
+    if "--broker-smoke" in sys.argv[1:]:
+        from repro.core.costmodel import ARCH_NAMES as _ARCHS
+        print(json.dumps(bench_broker(_ARCHS[:2], smoke=True), indent=2))
+    else:
+        run(smoke="--smoke" in sys.argv[1:])

@@ -4,9 +4,13 @@ The scale-out layer over the shared problem/tuner interface: sessions
 (problem × tuner × arch × budget × seed) run batched ask/tell over a
 fault-tolerant worker pool, journal every evaluation for exact resume, and
 compose into campaigns — the paper's full study grid as one restartable
-unit.  See the README's orchestrator section for the architecture.
+unit, in-process or on a multi-host broker-served worker fleet.  See
+``docs/architecture.md`` for the layer map and the stable contracts
+(stepper/EvalRequest protocol, rng-stream contract, journal formats,
+broker lease protocol).
 """
 
+from .broker import Broker, MemoryBroker, SQLiteBroker
 from .campaign import Campaign, run_campaign
 from .queue import Job, JobQueue
 from .registry import make_problem, problem_names
@@ -14,10 +18,11 @@ from .runner import (EvalRequest, resume_session, run_session,
                      session_stepper)
 from .session import SessionSpec
 from .store import SessionStore
-from .workers import WorkerPool
+from .workers import BrokerWorker, WorkerPool
 
 __all__ = [
-    "Campaign", "EvalRequest", "Job", "JobQueue", "SessionSpec",
-    "SessionStore", "WorkerPool", "make_problem", "problem_names",
-    "resume_session", "run_campaign", "run_session", "session_stepper",
+    "Broker", "BrokerWorker", "Campaign", "EvalRequest", "Job", "JobQueue",
+    "MemoryBroker", "SQLiteBroker", "SessionSpec", "SessionStore",
+    "WorkerPool", "make_problem", "problem_names", "resume_session",
+    "run_campaign", "run_session", "session_stepper",
 ]

@@ -1,0 +1,530 @@
+"""Durable job-queue backends: the multi-host seam behind the campaign.
+
+The in-process :class:`~repro.orchestrator.queue.JobQueue` is the seam the
+ROADMAP names: the campaign scheduler only ever needs something that
+accepts :class:`~repro.orchestrator.runner.EvalRequest` batches and hands
+back results.  This module provides that something as a *durable* queue —
+MITuna-style detached workers leasing jobs out of shared storage — so the
+same campaign spec that runs in-process for tests runs on a worker fleet
+for real sweeps, with one code path for journaling and resume.
+
+Two interchangeable backends (the conformance suite in
+``tests/test_broker.py`` runs every property against both):
+
+* :class:`MemoryBroker` — dict + lock; workers are threads in this
+  process.  The test/reference implementation of the protocol.
+* :class:`SQLiteBroker` — a WAL-mode SQLite file (stdlib ``sqlite3``).
+  N detached ``python -m repro.orchestrator worker --broker <db>``
+  processes on any hosts sharing a filesystem serve one campaign.
+  (WAL requires a filesystem with working POSIX locks + shared mmap —
+  local disks and modern cluster filesystems are fine; classic NFS is
+  not a safe home for the queue file.  The ``Broker`` protocol is the
+  seam for a networked backend if that matters to you.)
+
+The lease protocol (identical for both)::
+
+    driver                               worker
+    ------                               ------
+    submit(payload) -> job id
+                                         lease(worker, lease_s)
+                                           -> (job id, payload) | None
+                                         heartbeat(job, worker, lease_s)
+                                           ... while evaluating ...
+                                         complete(job, worker, result)
+                                           (or fail(job, worker, error))
+    collect() -> {job id: result}, [failures]
+
+* **Leases expire.**  A worker that stops heartbeating (killed, hung,
+  unplugged) loses its lease; :meth:`Broker.reap` — run inside every
+  ``lease`` and ``collect`` — requeues the job for the next worker.
+* **Attempts are counted at lease time** and capped (``max_attempts``):
+  a job that keeps killing its workers terminates as *failed* rather than
+  cycling forever — the queue-level analogue of the per-config poison cap
+  in :class:`~repro.orchestrator.queue.JobQueue`.
+* **Completion requires the lease.**  ``complete``/``fail`` from a worker
+  whose lease was reaped (it was presumed dead, the job re-leased) are
+  rejected, so two workers racing on a requeued job can never both
+  publish a result — concurrent-worker dedup.
+
+Payloads and results are JSON.  A job payload is one merged evaluation
+batch::
+
+    {"problem": <registry name>, "pk": {problem kwargs},
+     "archs": [arch, ...],
+     "rows": [flat row, ...]  |  "configs": [[mixed-radix codes], ...],
+     "sessions": [session id, ...]}        # requesters, for `status`
+
+and its result maps each architecture to one ``[objective|null, valid,
+info]`` triple per row/config (the journal-v2 convention: ``null``
+objective means +inf, ``info`` is the JSON-safe subset — which is exactly
+what the driver-side journal would have persisted anyway, so broker-served
+trials journal and publish bit-identically to in-process ones).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sqlite3
+import threading
+import time
+import uuid
+from pathlib import Path
+
+from .queue import DONE, FAILED, LEASED, PENDING
+
+__all__ = ["Broker", "MemoryBroker", "SQLiteBroker",
+           "encode_trial", "decode_trials"]
+
+
+def _now() -> float:
+    return time.time()
+
+
+# --------------------------------------------------------------------- #
+# trial (de)serialization — the journal-v2 convention
+# --------------------------------------------------------------------- #
+def encode_trial(trial) -> list:
+    """``Trial`` -> ``[objective|null, valid, info]`` (JSON-safe).
+
+    Same lossiness as the resume journal: non-finite objectives become
+    ``null``, ``info`` keeps only its JSON-round-trippable subset (fault
+    markers included, derived payloads dropped) — so a trial that crossed
+    the broker equals one replayed from the journal, and both journal and
+    publish identically to the in-process original.
+    """
+    import math
+
+    from .store import _json_safe_info
+    o = None if not math.isfinite(trial.objective) else trial.objective
+    return [o, bool(trial.valid), _json_safe_info(trial.info)]
+
+
+def decode_trials(records, arch: str, space=None, rows=None, configs=None):
+    """Rebuild driver-side ``Trial`` lists from a job result.
+
+    Row jobs come back as lazy row-backed trials (config decoded on first
+    access, exactly like a journal-v2 replay); config jobs reattach the
+    driver's original config dicts.
+    """
+    import math
+
+    from ..core.problem import Trial
+    out = []
+    for i, (o, valid, info) in enumerate(records):
+        obj = math.inf if o is None else float(o)
+        if rows is not None:
+            out.append(Trial(None, obj, arch, valid=bool(valid),
+                             info=dict(info), row=int(rows[i]), space=space))
+        else:
+            out.append(Trial(configs[i], obj, arch, valid=bool(valid),
+                             info=dict(info)))
+    return out
+
+
+class Broker:
+    """Abstract durable job queue; see the module docstring for the
+    protocol.  Subclasses implement the storage primitives."""
+
+    max_attempts: int = 3
+
+    # -- driver side ------------------------------------------------------ #
+    def submit(self, payload: dict) -> int:
+        raise NotImplementedError
+
+    def collect(self) -> tuple[dict[int, dict], list[dict]]:
+        """Harvest finished work: ``({job id: result}, [failed job dicts])``.
+
+        Pops every DONE job's result and every FAILED job (attempts
+        exhausted) exactly once; also reaps expired leases so a fleet
+        that died entirely still makes progress once any worker returns.
+        """
+        raise NotImplementedError
+
+    # -- worker side ------------------------------------------------------ #
+    def lease(self, worker: str, lease_s: float) -> tuple[int, dict] | None:
+        raise NotImplementedError
+
+    def heartbeat(self, job_id: int, worker: str, lease_s: float) -> bool:
+        raise NotImplementedError
+
+    def complete(self, job_id: int, worker: str, result: dict) -> bool:
+        raise NotImplementedError
+
+    def fail(self, job_id: int, worker: str, error: str) -> bool:
+        raise NotImplementedError
+
+    def attach_sessions(self, job_id: int, sids) -> bool:
+        """Add requester session ids to an already-submitted job's
+        payload (driver-side metadata only — workers never read it).
+
+        Keeps ``status --broker`` attribution honest when a session
+        starts waiting on a pair another session's job already carries.
+        Returns False when the job is gone (completed and collected);
+        that is not an error.
+        """
+        raise NotImplementedError
+
+    # -- introspection ----------------------------------------------------- #
+    def counts(self) -> dict[str, int]:
+        raise NotImplementedError
+
+    def in_flight(self) -> list[dict]:
+        """Currently-leased jobs: ``{job, worker, heartbeat_age, sessions,
+        attempts}`` — what ``status --broker`` reports."""
+        raise NotImplementedError
+
+    def reap(self) -> int:
+        """Requeue (or fail, past the attempts cap) expired leases;
+        returns how many jobs changed state."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+# --------------------------------------------------------------------- #
+# in-memory backend (threads in one process)
+# --------------------------------------------------------------------- #
+class MemoryBroker(Broker):
+    """Reference implementation: a dict under a lock.
+
+    Workers must live in this process (threads); everything else —
+    leases, heartbeats, attempts cap, completion-requires-lease — behaves
+    exactly like :class:`SQLiteBroker`, which is what makes the
+    conformance suite meaningful.
+    """
+
+    def __init__(self, max_attempts: int = 3):
+        self.max_attempts = max_attempts
+        self._lock = threading.Lock()
+        self._jobs: dict[int, dict] = {}
+        self._next = 1
+
+    def submit(self, payload: dict) -> int:
+        with self._lock:
+            jid = self._next
+            self._next += 1
+            self._jobs[jid] = {
+                "id": jid, "payload": payload, "state": PENDING,
+                "attempts": 0, "worker": None, "lease_expires": None,
+                "heartbeat": None, "result": None, "error": None,
+                "created": _now()}
+            return jid
+
+    def _reap_locked(self) -> int:
+        now, n = _now(), 0
+        for j in self._jobs.values():
+            if j["state"] == LEASED and j["lease_expires"] < now:
+                n += 1
+                if j["attempts"] >= self.max_attempts:
+                    j["state"] = FAILED
+                    j["error"] = (f"lease expired after attempt "
+                                  f"{j['attempts']} (worker {j['worker']!r} "
+                                  f"presumed dead)")
+                else:
+                    j["state"] = PENDING
+                j["worker"] = None
+        return n
+
+    def reap(self) -> int:
+        with self._lock:
+            return self._reap_locked()
+
+    def lease(self, worker: str, lease_s: float) -> tuple[int, dict] | None:
+        with self._lock:
+            self._reap_locked()
+            for j in sorted(self._jobs.values(), key=lambda j: j["id"]):
+                if j["state"] == PENDING:
+                    j["state"] = LEASED
+                    j["worker"] = worker
+                    j["attempts"] += 1
+                    j["lease_expires"] = _now() + lease_s
+                    j["heartbeat"] = _now()
+                    return j["id"], j["payload"]
+            return None
+
+    def _owned(self, job_id: int, worker: str):
+        j = self._jobs.get(job_id)
+        if j is None or j["state"] != LEASED or j["worker"] != worker:
+            return None
+        return j
+
+    def heartbeat(self, job_id: int, worker: str, lease_s: float) -> bool:
+        with self._lock:
+            j = self._owned(job_id, worker)
+            if j is None:
+                return False
+            j["lease_expires"] = _now() + lease_s
+            j["heartbeat"] = _now()
+            return True
+
+    def complete(self, job_id: int, worker: str, result: dict) -> bool:
+        with self._lock:
+            j = self._owned(job_id, worker)
+            if j is None:
+                return False
+            j["state"], j["result"], j["worker"] = DONE, result, None
+            return True
+
+    def fail(self, job_id: int, worker: str, error: str) -> bool:
+        with self._lock:
+            j = self._owned(job_id, worker)
+            if j is None:
+                return False
+            j["error"], j["worker"] = error, None
+            j["state"] = FAILED if j["attempts"] >= self.max_attempts \
+                else PENDING
+            return True
+
+    def attach_sessions(self, job_id: int, sids) -> bool:
+        with self._lock:
+            j = self._jobs.get(job_id)
+            if j is None:
+                return False
+            j["payload"]["sessions"] = sorted(
+                {*j["payload"].get("sessions", []), *sids})
+            return True
+
+    def collect(self) -> tuple[dict[int, dict], list[dict]]:
+        with self._lock:
+            self._reap_locked()
+            done: dict[int, dict] = {}
+            failed: list[dict] = []
+            for jid in [j["id"] for j in self._jobs.values()
+                        if j["state"] in (DONE, FAILED)]:
+                j = self._jobs.pop(jid)
+                if j["state"] == DONE:
+                    done[jid] = j["result"]
+                else:
+                    failed.append({"id": jid, "payload": j["payload"],
+                                   "error": j["error"],
+                                   "attempts": j["attempts"]})
+            return done, failed
+
+    def counts(self) -> dict[str, int]:
+        with self._lock:
+            out = {PENDING: 0, LEASED: 0, DONE: 0, FAILED: 0}
+            for j in self._jobs.values():
+                out[j["state"]] += 1
+            return out
+
+    def in_flight(self) -> list[dict]:
+        with self._lock:
+            now = _now()
+            return [{"job": j["id"], "worker": j["worker"],
+                     "heartbeat_age": now - j["heartbeat"],
+                     "attempts": j["attempts"],
+                     "sessions": list(j["payload"].get("sessions", []))}
+                    for j in self._jobs.values() if j["state"] == LEASED]
+
+
+# --------------------------------------------------------------------- #
+# SQLite backend (detached worker processes, shared filesystem)
+# --------------------------------------------------------------------- #
+class _Tx:
+    """One IMMEDIATE transaction: commit on clean exit, rollback on error."""
+
+    def __init__(self, conn: sqlite3.Connection):
+        self.conn = conn
+
+    def __enter__(self) -> sqlite3.Cursor:
+        self.conn.execute("BEGIN IMMEDIATE")
+        return self.conn.cursor()
+
+    def __exit__(self, exc_type, *exc) -> None:
+        if exc_type is None:
+            self.conn.execute("COMMIT")
+        else:
+            self.conn.execute("ROLLBACK")
+
+
+_SCHEMA = """
+CREATE TABLE IF NOT EXISTS jobs (
+    id            INTEGER PRIMARY KEY AUTOINCREMENT,
+    payload       TEXT    NOT NULL,
+    state         TEXT    NOT NULL DEFAULT 'pending',
+    attempts      INTEGER NOT NULL DEFAULT 0,
+    worker        TEXT,
+    lease_expires REAL,
+    heartbeat     REAL,
+    result        TEXT,
+    error         TEXT,
+    created       REAL    NOT NULL
+);
+CREATE INDEX IF NOT EXISTS jobs_state ON jobs (state, id);
+"""
+
+
+class SQLiteBroker(Broker):
+    """WAL-mode SQLite job queue for detached multi-process worker fleets.
+
+    Every mutation is a single short IMMEDIATE transaction, so N workers
+    and one driver can share the file without an external lock service;
+    WAL keeps readers (``status --broker``) off the writers' path.
+    Connections are per-thread (``sqlite3`` objects must not cross
+    threads), created lazily — a :class:`SQLiteBroker` instance may be
+    shared freely.
+    """
+
+    def __init__(self, path: str | Path, max_attempts: int = 3,
+                 timeout_s: float = 30.0):
+        self.path = Path(path)
+        self.max_attempts = max_attempts
+        self.timeout_s = timeout_s
+        self._local = threading.local()
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._conn().executescript(_SCHEMA)        # idempotent
+
+    # -- connection management -------------------------------------------- #
+    def _conn(self) -> sqlite3.Connection:
+        conn = getattr(self._local, "conn", None)
+        if conn is None:
+            conn = sqlite3.connect(self.path, timeout=self.timeout_s,
+                                   isolation_level=None)  # autocommit; we BEGIN
+            conn.row_factory = sqlite3.Row
+            conn.execute("PRAGMA journal_mode=WAL")
+            conn.execute("PRAGMA synchronous=NORMAL")
+            conn.execute(f"PRAGMA busy_timeout={int(self.timeout_s * 1000)}")
+            self._local.conn = conn
+        return conn
+
+    def _tx(self) -> "_Tx":
+        """``with broker._tx() as cur:`` — one IMMEDIATE transaction."""
+        return _Tx(self._conn())
+
+    def close(self) -> None:
+        conn = getattr(self._local, "conn", None)
+        if conn is not None:
+            conn.close()
+            self._local.conn = None
+
+    # -- protocol ---------------------------------------------------------- #
+    def submit(self, payload: dict) -> int:
+        with self._tx() as cur:
+            cur.execute(
+                "INSERT INTO jobs (payload, state, created) VALUES (?,?,?)",
+                (json.dumps(payload, separators=(",", ":")), PENDING, _now()))
+            return cur.lastrowid
+
+    def _reap_cur(self, cur: sqlite3.Cursor) -> int:
+        now = _now()
+        cur.execute(
+            "UPDATE jobs SET "
+            " state=CASE WHEN attempts >= ? THEN ? ELSE ? END,"
+            " error=CASE WHEN attempts >= ? THEN"
+            "  'lease expired after attempt ' || attempts ||"
+            "  ' (worker ' || COALESCE(worker,'?') || ' presumed dead)'"
+            "  ELSE error END,"
+            " worker=NULL "
+            "WHERE state = ? AND lease_expires < ?",
+            (self.max_attempts, FAILED, PENDING, self.max_attempts,
+             LEASED, now))
+        return cur.rowcount
+
+    def reap(self) -> int:
+        with self._tx() as cur:
+            return self._reap_cur(cur)
+
+    def lease(self, worker: str, lease_s: float) -> tuple[int, dict] | None:
+        with self._tx() as cur:
+            self._reap_cur(cur)
+            row = cur.execute(
+                "SELECT id, payload FROM jobs WHERE state = ? "
+                "ORDER BY id LIMIT 1", (PENDING,)).fetchone()
+            if row is None:
+                return None
+            now = _now()
+            cur.execute(
+                "UPDATE jobs SET state=?, worker=?, attempts=attempts+1,"
+                " lease_expires=?, heartbeat=? WHERE id=?",
+                (LEASED, worker, now + lease_s, now, row["id"]))
+            return row["id"], json.loads(row["payload"])
+
+    def heartbeat(self, job_id: int, worker: str, lease_s: float) -> bool:
+        with self._tx() as cur:
+            now = _now()
+            cur.execute(
+                "UPDATE jobs SET lease_expires=?, heartbeat=? "
+                "WHERE id=? AND state=? AND worker=?",
+                (now + lease_s, now, job_id, LEASED, worker))
+            return cur.rowcount == 1
+
+    def complete(self, job_id: int, worker: str, result: dict) -> bool:
+        with self._tx() as cur:
+            cur.execute(
+                "UPDATE jobs SET state=?, result=?, worker=NULL "
+                "WHERE id=? AND state=? AND worker=?",
+                (DONE, json.dumps(result, separators=(",", ":")),
+                 job_id, LEASED, worker))
+            return cur.rowcount == 1
+
+    def fail(self, job_id: int, worker: str, error: str) -> bool:
+        with self._tx() as cur:
+            cur.execute(
+                "UPDATE jobs SET "
+                " state=CASE WHEN attempts >= ? THEN ? ELSE ? END,"
+                " error=?, worker=NULL "
+                "WHERE id=? AND state=? AND worker=?",
+                (self.max_attempts, FAILED, PENDING, str(error)[:2000],
+                 job_id, LEASED, worker))
+            return cur.rowcount == 1
+
+    def attach_sessions(self, job_id: int, sids) -> bool:
+        with self._tx() as cur:
+            row = cur.execute("SELECT payload FROM jobs WHERE id=?",
+                              (job_id,)).fetchone()
+            if row is None:
+                return False
+            payload = json.loads(row["payload"])
+            payload["sessions"] = sorted(
+                {*payload.get("sessions", []), *sids})
+            cur.execute("UPDATE jobs SET payload=? WHERE id=?",
+                        (json.dumps(payload, separators=(",", ":")),
+                         job_id))
+            return True
+
+    def collect(self) -> tuple[dict[int, dict], list[dict]]:
+        with self._tx() as cur:
+            self._reap_cur(cur)
+            done: dict[int, dict] = {}
+            failed: list[dict] = []
+            for row in cur.execute(
+                    "SELECT id, payload, state, result, error, attempts "
+                    "FROM jobs WHERE state IN (?, ?)", (DONE, FAILED)):
+                if row["state"] == DONE:
+                    done[row["id"]] = json.loads(row["result"])
+                else:
+                    failed.append({"id": row["id"],
+                                   "payload": json.loads(row["payload"]),
+                                   "error": row["error"],
+                                   "attempts": row["attempts"]})
+            if done or failed:
+                ids = [*done, *(f["id"] for f in failed)]
+                cur.execute("DELETE FROM jobs WHERE id IN (%s)" %
+                            ",".join("?" * len(ids)), ids)
+            return done, failed
+
+    def counts(self) -> dict[str, int]:
+        out = {PENDING: 0, LEASED: 0, DONE: 0, FAILED: 0}
+        for row in self._conn().execute(
+                "SELECT state, COUNT(*) AS n FROM jobs GROUP BY state"):
+            out[row["state"]] = row["n"]
+        return out
+
+    def in_flight(self) -> list[dict]:
+        now = _now()
+        return [{"job": row["id"], "worker": row["worker"],
+                 "heartbeat_age": now - row["heartbeat"],
+                 "attempts": row["attempts"],
+                 "sessions": list(json.loads(row["payload"])
+                                  .get("sessions", []))}
+                for row in self._conn().execute(
+                    "SELECT id, worker, heartbeat, attempts, payload "
+                    "FROM jobs WHERE state = ?", (LEASED,))]
+
+
+def default_worker_id() -> str:
+    """``host:pid:suffix`` — unique per worker loop, readable in `status`."""
+    host = os.uname().nodename if hasattr(os, "uname") else "host"
+    return f"{host}:{os.getpid()}:{uuid.uuid4().hex[:6]}"

@@ -7,7 +7,7 @@ the session runner; with a store, a killed campaign resumes where it
 stopped: finished sessions are skipped via their published traces, the
 interrupted one continues from its journal.
 
-Two schedulers:
+Three schedulers:
 
 * **serial** (`Campaign.run`, the original): sessions run one at a time,
   each against its own worker pool.
@@ -24,17 +24,31 @@ Two schedulers:
   scheduler by construction: a stepper only ever sees the objectives of the
   rows it asked for, and those are bit-identical however they were batched
   (the compiled-path equivalence property).
+* **broker / async tell** (``run_campaign(..., broker=...)``): evaluation
+  leaves the process entirely.  The scheduler publishes each round's
+  merged missing (row, arch) needs as jobs on a durable
+  :class:`~repro.orchestrator.broker.Broker` and keeps stepping *other*
+  sessions while a detached worker fleet (``python -m repro.orchestrator
+  worker``) serves them; each stepper is told only when its own batch is
+  complete.  Because a stepper's request/tell order is sequential by
+  construction and objectives are bit-identical however they are batched
+  or routed, trajectories, journals, and published traces equal the
+  serial loop's — worker count, arrival order, and kill/requeue events
+  never leak into rng streams (property-tested in
+  ``tests/test_broker.py``).
 """
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, Sequence
 
 from ..core.problem import TunableProblem
 from ..core.tuners.base import TuneResult
-from .registry import make_problem
-from .session import DONE, SessionSpec
+from .broker import Broker, decode_trials
+from .registry import make_problem, problem_names
+from .session import CAMPAIGN_TUNER_DEFAULTS, DONE, SessionSpec
 from .store import SessionStore
 from .runner import (EvalRequest, resolve_session, run_session,
                      session_stepper)
@@ -47,6 +61,7 @@ def run_campaign(specs: Sequence[SessionSpec],
                  workers: int = 4, mode: str = "auto", max_retries: int = 2,
                  share_archs: bool = True,
                  problems: dict | None = None,
+                 broker: Broker | None = None, poll_s: float = 0.02,
                  on_session: Callable[[SessionSpec, TuneResult], None] | None
                  = None) -> dict[str, TuneResult]:
     """Interleave every session of ``specs`` on one shared worker pool.
@@ -70,10 +85,27 @@ def run_campaign(specs: Sequence[SessionSpec],
     on parallelism either way).  ``mode="auto"`` resolves from the first
     problem — a grid mixing analytical and measured problems should pass
     ``mode`` explicitly or run serially.
+
+    With ``broker=``, evaluation is dispatched to a durable job queue
+    served by detached worker processes instead of an in-process pool, and
+    tells become *asynchronous*: sessions whose batches are still in
+    flight wait while every other session keeps stepping.  Trajectories,
+    journals, and published traces are bit-identical to the in-process
+    schedulers.  ``workers``/``mode``/``max_retries`` configure the worker
+    fleet, not the driver, and are ignored here; every ``spec.problem``
+    must be a registry name (and ``problems=`` presets are rejected) so
+    driver and workers provably evaluate the same problem.
     """
     specs = list(specs)
     if not specs:
         return {}
+    if broker is not None:
+        if pool is not None:
+            raise ValueError("pass either pool= or broker=, not both")
+        return _run_campaign_broker(specs, store, broker,
+                                    share_archs=share_archs,
+                                    problems=problems, poll_s=poll_s,
+                                    on_session=on_session)
     problems = dict(problems or {})
 
     # one live problem per share-group (shared compiled space + cache)
@@ -186,6 +218,30 @@ def _round_missing(pending: list[dict], groups: dict) -> dict:
     return {k: v for k, v in need.items() if v}
 
 
+def _partition_archsets(need: dict[int, set], group_archs: list[str],
+                        share_archs: bool) -> dict[tuple, list[int]]:
+    """Partition one group's missing ``{row: wanted archs}`` into
+    evaluation batches: ``{archset: rows}``, rows in first-proposal order,
+    archsets in the group's canonical arch order.
+
+    The one batching policy both schedulers share (in-process
+    :func:`_fill_cache` sweeps each batch directly; the broker driver
+    submits each as a job), so the arch-shared grouping can never drift
+    between them.  With ``share_archs`` off — or a single-arch group —
+    every batch is single-arch.
+    """
+    by_archset: dict[tuple, list[int]] = {}
+    if share_archs and len(group_archs) > 1:
+        for r, want in need.items():
+            aset = tuple(a for a in group_archs if a in want)
+            by_archset.setdefault(aset, []).append(r)
+    else:
+        for r, want in need.items():
+            for a in want:
+                by_archset.setdefault((a,), []).append(r)
+    return by_archset
+
+
 def _fill_cache(need: dict[int, set], group: dict, problem, pool: WorkerPool,
                 share_archs: bool) -> None:
     """Evaluate one group's missing (row, arch) pairs and populate its
@@ -200,30 +256,260 @@ def _fill_cache(need: dict[int, set], group: dict, problem, pool: WorkerPool,
     campaign-wide.
     """
     cache: dict[int, dict] = group["cache"]
-    if share_archs and len(group["archs"]) > 1:
-        by_archset: dict[tuple, list[int]] = {}
-        for r, want in need.items():
-            key = tuple(a for a in group["archs"] if a in want)
-            by_archset.setdefault(key, []).append(r)
-        for archset, rows in by_archset.items():
-            if len(archset) > 1:
-                per_arch = pool.evaluate_rows(rows, archs=archset,
-                                              problem=problem)
-            else:
-                per_arch = {archset[0]: pool.evaluate_rows(
-                    rows, arch=archset[0], problem=problem)}
-            for j, r in enumerate(rows):
-                cache.setdefault(r, {}).update(
-                    {a: per_arch[a][j] for a in archset})
-    else:
-        by_arch: dict[str, list[int]] = {}
-        for r, archs in need.items():
-            for a in archs:
-                by_arch.setdefault(a, []).append(r)
-        for a, rows in by_arch.items():
-            for r, t in zip(rows, pool.evaluate_rows(rows, arch=a,
-                                                     problem=problem)):
+    for archset, rows in _partition_archsets(need, group["archs"],
+                                             share_archs).items():
+        if len(archset) > 1:
+            per_arch = pool.evaluate_rows(rows, archs=archset,
+                                          problem=problem)
+        else:
+            per_arch = {archset[0]: pool.evaluate_rows(
+                rows, arch=archset[0], problem=problem)}
+        for j, r in enumerate(rows):
+            cache.setdefault(r, {}).update(
+                {a: per_arch[a][j] for a in archset})
+
+
+# --------------------------------------------------------------------- #
+# broker scheduler: async tell over a durable job queue
+# --------------------------------------------------------------------- #
+def _check_broker_specs(specs: list[SessionSpec],
+                        store: SessionStore | None,
+                        problems: dict | None) -> None:
+    """Fail fast on grids a worker fleet cannot serve faithfully."""
+    if problems:
+        # workers ALWAYS rematerialize problems from the registry by
+        # name; honoring a driver-side instance here would let a custom
+        # instance silently disagree with what the fleet evaluates
+        raise ValueError(
+            "broker campaigns take no problems= presets — workers "
+            "rematerialize every problem from the registry by name, so a "
+            "live driver-side instance could silently diverge from what "
+            "the fleet evaluates")
+    names = set(problem_names())
+    bad = sorted({s.problem for s in specs} - names)
+    if bad:
+        raise ValueError(
+            f"broker campaigns need registry problems (workers materialize "
+            f"them by name); unknown: {', '.join(bad)}")
+    if store is None:
+        return
+    for spec in specs:
+        sid = spec.session_id
+        if store.exists(sid) and store.journal_version(sid) == 1:
+            raise RuntimeError(
+                f"session {sid} in store {store.root} has a v1 "
+                f"(config-column) journal — this store was last written by "
+                f"an older orchestrator.  Broker campaigns require "
+                f"row-native (v2) journals; finish the session in-process "
+                f"first (`python -m repro.orchestrator resume {sid} "
+                f"--store {store.root}`) or start a fresh store.")
+
+
+def _run_campaign_broker(specs: list[SessionSpec],
+                         store: SessionStore | None, broker: Broker, *,
+                         share_archs: bool, problems: dict | None,
+                         poll_s: float,
+                         on_session) -> dict[str, TuneResult]:
+    """Drive every stepper against a durable job queue, telling each one
+    as soon as (and only when) its own batch completes — async tell.
+
+    The scheduling invariants that keep trajectories bit-identical to the
+    serial loop:
+
+    * a stepper's requests are answered in its own request order (it is a
+      coroutine — there is no other order);
+    * every (row, arch) is evaluated at most once campaign-wide: results
+      land in the group cache, in-flight pairs are never resubmitted, and
+      sibling sessions read the cached trial no matter which job carried
+      it;
+    * nothing about job routing, worker count, arrival order, or
+      lease-requeue events reaches the tuners — they see only the
+      objectives of the rows they asked for.
+    """
+    _check_broker_specs(specs, store, problems)
+    live_problems: dict[tuple, TunableProblem] = {}
+    for spec in specs:
+        key = spec.share_key
+        if key not in live_problems:
+            # always the registry instance — exactly what workers build
+            live_problems[key] = make_problem(spec.problem,
+                                              **spec.problem_kwargs)
+
+    groups: dict[tuple, dict] = {}
+    for spec in specs:
+        g = groups.setdefault(spec.share_key,
+                              {"archs": [], "cache": {}, "spec": spec})
+        if spec.arch not in g["archs"]:
+            g["archs"].append(spec.arch)
+
+    sessions: list[dict] = []
+    out: dict[str, TuneResult] = {}
+    in_flight: dict[tuple, int] = {}      # (share_key, row, arch) -> job id
+    row_jobs: dict[int, dict] = {}        # job id -> {key, rows, archs, sids}
+    cfg_jobs: dict[int, dict] = {}        # job id -> session state
+
+    def _payload(spec: SessionSpec, archs, rows=None, configs=None,
+                 sids=()) -> dict:
+        p = {"problem": spec.problem, "pk": dict(spec.problem_kwargs),
+             "archs": list(archs), "sessions": sorted(sids)}
+        if rows is not None:
+            p["rows"] = [int(r) for r in rows]
+        else:
+            space = live_problems[spec.share_key].space
+            p["configs"] = [list(space.encode(c)) for c in configs]
+        return p
+
+    def _try_answer(s: dict) -> bool:
+        """Advance ``s`` if its pending row request is fully cached."""
+        req: EvalRequest = s["req"]
+        if s["done"] or req is None or req.configs is not None:
+            return False
+        cache = groups[s["spec"].share_key]["cache"]
+        if all(req.arch in cache.get(r, ()) for r in req.rows):
+            _advance(s, [cache[r][req.arch] for r in req.rows],
+                     out, on_session)
+            return True
+        return False
+
+    def _pump_and_submit() -> None:
+        """Step every session that can move, then publish the merged
+        still-missing needs as broker jobs (the async-tell round)."""
+        progressed = True
+        while progressed:
+            progressed = False
+            for s in sessions:
+                if _try_answer(s):
+                    progressed = True
+        # config-path sessions: one job per pending request
+        for s in sessions:
+            req: EvalRequest = s["req"]
+            if (not s["done"] and req is not None
+                    and req.configs is not None and s.get("job") is None):
+                jid = broker.submit(_payload(s["spec"], [req.arch],
+                                             configs=req.configs,
+                                             sids=[s["spec"].session_id]))
+                s["job"] = jid
+                cfg_jobs[jid] = s
+        # row-path sessions: merge missing (row, arch) pairs per group
+        # (the same dedup-against-cache walk as the in-process
+        # _round_missing, plus in-flight exclusion and per-pair
+        # requester attribution for `status --broker`)
+        need: dict[tuple, dict[int, set]] = {}
+        requesters: dict[tuple, set] = {}       # (key, row, arch) -> sids
+        late: dict[int, set] = {}               # in-flight job id -> new sids
+        for s in sessions:
+            req = s["req"]
+            if s["done"] or req is None or req.configs is not None:
+                continue
+            sid = s["spec"].session_id
+            key = s["spec"].share_key
+            cache = groups[key]["cache"]
+            for r in req.rows:
+                if req.arch in cache.get(r, ()):
+                    continue
+                jid = in_flight.get((key, r, req.arch))
+                if jid is None:
+                    need.setdefault(key, {}).setdefault(r, set()) \
+                        .add(req.arch)
+                    requesters.setdefault((key, r, req.arch), set()).add(sid)
+                elif sid not in row_jobs[jid]["sids"]:
+                    # the pair is already riding another session's job:
+                    # attach this sid so `status --broker` attributes the
+                    # lease to it too
+                    late.setdefault(jid, set()).add(sid)
+        for key, rows_archs in need.items():
+            g = groups[key]
+            for aset, rows in _partition_archsets(rows_archs, g["archs"],
+                                                  share_archs).items():
+                sids = set().union(*(requesters.get((key, r, a), set())
+                                     for r in rows for a in aset))
+                jid = broker.submit(_payload(g["spec"], aset, rows=rows,
+                                             sids=sids))
+                row_jobs[jid] = {"key": key, "rows": rows, "archs": aset,
+                                 "sids": sids}
+                in_flight.update({(key, r, a): jid
+                                  for r in rows for a in aset})
+        for jid, sids in late.items():
+            row_jobs[jid]["sids"] |= sids
+            broker.attach_sessions(jid, sorted(sids))
+
+    def _ingest(jid: int, result: dict) -> None:
+        """Land one finished job in the cache (row jobs) or its waiting
+        session (config jobs)."""
+        if jid in cfg_jobs:
+            s = cfg_jobs.pop(jid)
+            req: EvalRequest = s["req"]
+            trials = decode_trials(result["arch_trials"][req.arch],
+                                   req.arch, configs=req.configs)
+            s["job"] = None
+            _advance(s, trials, out, on_session)
+            return
+        if jid not in row_jobs:
+            # a stale job from a previous driver run against this queue
+            # (killed mid-campaign, its workers finished later): drop it —
+            # this run resubmitted whatever it still needs
+            return
+        info = row_jobs.pop(jid)
+        key = info["key"]
+        space = live_problems[key].space
+        cache = groups[key]["cache"]
+        for a in info["archs"]:
+            trials = decode_trials(result["arch_trials"][a], a,
+                                   space=space, rows=info["rows"])
+            for r, t in zip(info["rows"], trials):
                 cache.setdefault(r, {})[a] = t
+                in_flight.pop((key, r, a), None)
+
+    def _fail(failures: list[dict]) -> None:
+        """A job exhausted its attempts: every waiting session dies the
+        way an in-process evaluation error would kill it — exception
+        thrown into the generator (status FAILED, journal intact)."""
+        msgs = [f"job {f['id']} failed after {f['attempts']} attempts: "
+                f"{f['error']}" for f in failures]
+        err = RuntimeError("broker campaign failed: " + "; ".join(msgs))
+        for s in sessions:
+            if not s["done"] and s["req"] is not None:
+                try:
+                    s["gen"].throw(err)
+                except (RuntimeError, StopIteration):
+                    s["done"] = True
+        raise err
+
+    try:
+        for spec in specs:
+            problem = live_problems[spec.share_key]
+            _, tuner = resolve_session(spec, problem, None)
+            gen = session_stepper(spec, problem=problem, tuner=tuner,
+                                  store=store)
+            sessions.append({"spec": spec, "gen": gen, "req": None,
+                             "done": False, "job": None})
+        for s in sessions:
+            _advance(s, None, out, on_session)
+
+        _pump_and_submit()
+        while any(not s["done"] for s in sessions):
+            done_jobs, failures = broker.collect()
+            # failures of *our* jobs abort the campaign; stale failures
+            # from a previous driver run are dropped like stale results
+            failures = [f for f in failures
+                        if f["id"] in row_jobs or f["id"] in cfg_jobs]
+            if failures:
+                _fail(failures)
+            if not done_jobs:
+                # nothing landed, so no session can have moved — idle
+                # poll without re-walking every session's request
+                time.sleep(poll_s)
+                continue
+            for jid in sorted(done_jobs):
+                _ingest(jid, done_jobs[jid])
+            _pump_and_submit()
+    finally:
+        for s in sessions:
+            if not s["done"]:
+                s["gen"].close()       # marks the session FAILED, journal kept
+
+    return {s["spec"].session_id: out[s["spec"].session_id]
+            for s in sessions}
 
 
 @dataclass
@@ -237,10 +523,19 @@ class Campaign:
              archs: Sequence[str] = ("v5e",), seeds: Iterable[int] = (0,),
              budget: int = 100, workers: int = 4,
              tuner_kwargs: dict | None = None) -> "Campaign":
-        """The full cross product, in deterministic order."""
+        """The full cross product, in deterministic order.
+
+        Per-tuner campaign defaults from
+        :data:`~repro.orchestrator.session.CAMPAIGN_TUNER_DEFAULTS` (e.g.
+        SurrogateBO's ``batch_width=8``) are applied beneath explicit
+        ``tuner_kwargs``, per session — they are part of the spec (and its
+        ``session_id``), so a grid's trajectories are fixed at build time.
+        """
         specs = [
             SessionSpec(problem=p, tuner=t, arch=a, budget=budget, seed=s,
-                        workers=workers, tuner_kwargs=dict(tuner_kwargs or {}))
+                        workers=workers,
+                        tuner_kwargs={**CAMPAIGN_TUNER_DEFAULTS.get(t, {}),
+                                      **(tuner_kwargs or {})})
             for p in problems for t in tuners for a in archs for s in seeds
         ]
         return Campaign(specs)
@@ -253,6 +548,7 @@ class Campaign:
             workers: int | None = None, mode: str = "auto",
             max_retries: int = 2, interleave: bool = False,
             share_archs: bool = True, problems: dict | None = None,
+            broker: Broker | None = None,
             on_session: Callable[[SessionSpec, TuneResult], None] | None = None
             ) -> dict[str, TuneResult]:
         """Run every session; returns {session_id: trace}.
@@ -260,16 +556,18 @@ class Campaign:
         ``interleave=True`` multiplexes all sessions over one shared worker
         pool (see :func:`run_campaign`) — same trajectories and journals,
         one warm executor, arch-shared evaluation for portability grids.
+        ``broker=`` hands evaluation to a durable job queue served by
+        detached worker processes (implies interleaving, with async tell).
         Sessions already marked done in the store are re-run as pure journal
         replays (no hardware evaluations), which is cheap and keeps the
         return value complete.
         """
-        if interleave:
+        if interleave or broker is not None:
             return run_campaign(self.specs, store,
                                 workers=4 if workers is None else workers,
                                 mode=mode, max_retries=max_retries,
                                 share_archs=share_archs, problems=problems,
-                                on_session=on_session)
+                                broker=broker, on_session=on_session)
         out: dict[str, TuneResult] = {}
         for spec in self.specs:
             res = run_session(spec, store=store, workers=workers, mode=mode,

@@ -6,7 +6,8 @@ Subcommands::
     status   — show every session in a store (or one, with its curve tail)
     resume   — continue an interrupted session from its journal
     campaign — run a whole grid (problems × tuners × archs × seeds),
-               interleaved on one shared worker pool
+               interleaved on one shared worker pool or a broker fleet
+    worker   — serve a broker job queue as one detached worker process
 
 Example::
 
@@ -19,6 +20,35 @@ Example::
     # evaluation (each deduped row measured once for all archs)
     python -m repro.orchestrator campaign --problems gemm --tuners genetic \\
         --archs v4,v5e,v5p,v6e --seeds 0,1,2 --budget 200 --workers 8 \\
+        --store experiments/sessions
+
+Multi-host campaigns run the same grid against a durable SQLite job queue
+(any filesystem the hosts share) served by detached workers — start any
+number of workers, on any machine, before or after the driver; kill and
+restart them freely.  Trajectories, journals, and published traces are
+bit-identical to the in-process run::
+
+    # each worker host (N processes, any time):
+    python -m repro.orchestrator worker --broker experiments/queue.db \\
+        --workers 4 --max-idle 60
+
+    # the driver (async tell: sessions keep stepping while their sibling
+    # sessions' batches are in flight on the fleet):
+    python -m repro.orchestrator campaign --problems gemm --tuners genetic \\
+        --archs v4,v5e,v5p,v6e --seeds 0,1,2 --budget 200 \\
+        --store experiments/sessions --broker experiments/queue.db
+
+    # who is working on what (lease holder + heartbeat age per session):
+    python -m repro.orchestrator status --store experiments/sessions \\
+        --broker experiments/queue.db
+
+Per-tuner settings ride the spec: ``--tuner-arg k=v`` (repeatable, JSON
+values) merges into every session's ``tuner_kwargs`` — e.g. ``--tuner-arg
+batch_width=16`` widens SurrogateBO's batched qLCB acquisition; campaign
+grids already default it to 8 (``CAMPAIGN_TUNER_DEFAULTS``)::
+
+    python -m repro.orchestrator campaign --problems gemm \\
+        --tuners surrogate_bo --tuner-arg batch_width=16 --budget 100 \\
         --store experiments/sessions
 """
 
@@ -41,7 +71,19 @@ def _fmt_best(best) -> str:
     return f"{best * 1e3:.4f}ms" if best < 1.0 else f"{best:.4f}s"
 
 
-def _print_status(store: SessionStore, sid: str | None) -> int:
+def _leases_by_session(broker) -> dict[str, tuple[str, float]]:
+    """``{session id: (worker, heartbeat age)}`` from in-flight broker
+    jobs — freshest heartbeat wins when several jobs carry one session."""
+    out: dict[str, tuple[str, float]] = {}
+    for j in broker.in_flight():
+        for sid in j["sessions"]:
+            if sid not in out or j["heartbeat_age"] < out[sid][1]:
+                out[sid] = (j["worker"], j["heartbeat_age"])
+    return out
+
+
+def _print_status(store: SessionStore, sid: str | None,
+                  broker=None) -> int:
     sids = [sid] if sid else store.list_sessions()
     if sid and not store.exists(sid):
         print(f"error: no session {sid!r} in {store.root}", file=sys.stderr)
@@ -49,15 +91,42 @@ def _print_status(store: SessionStore, sid: str | None) -> int:
     if not sids:
         print(f"(no sessions under {store.root})")
         return 0
+    leases = _leases_by_session(broker) if broker is not None else {}
     hdr = f"{'session':58s} {'status':12s} {'progress':>12s} {'best':>12s}"
+    if broker is not None:
+        hdr += f" {'leased by (heartbeat)':30s}"
     print(hdr)
     print("-" * len(hdr))
     for s in sids:
         m = store.meta(s)
         prog = f"{m.get('evaluated', 0)}/{m['spec']['budget']}"
-        print(f"{s:58s} {m['status']:12s} {prog:>12s} "
-              f"{_fmt_best(m.get('best')):>12s}")
+        line = (f"{s:58s} {m['status']:12s} {prog:>12s} "
+                f"{_fmt_best(m.get('best')):>12s}")
+        if broker is not None:
+            if s in leases:
+                worker, age = leases[s]
+                line += f" {worker} ({age:.1f}s ago)"
+            elif m["status"] == "running":
+                # running in the store but no live lease: the batch is
+                # queued (or its worker just died and the job is requeued)
+                line += " (queued)"
+        print(line)
     return 0
+
+
+def _parse_tuner_args(pairs: list[str], base: dict) -> dict:
+    """Merge repeatable ``--tuner-arg k=v`` pairs (JSON values, bare
+    strings accepted) over ``base``."""
+    out = dict(base)
+    for pair in pairs:
+        if "=" not in pair:
+            raise ValueError(f"--tuner-arg needs k=v, got {pair!r}")
+        k, _, v = pair.partition("=")
+        try:
+            out[k] = json.loads(v)
+        except json.JSONDecodeError:
+            out[k] = v                 # bare string value
+    return out
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -87,6 +156,9 @@ def main(argv: list[str] | None = None) -> int:
     p_st = sub.add_parser("status", help="show sessions in a store")
     p_st.add_argument("session", nargs="?", default=None)
     p_st.add_argument("--store", required=True)
+    p_st.add_argument("--broker", default=None,
+                      help="broker db: also show lease holder + heartbeat "
+                           "age for sessions being served by the fleet")
 
     p_re = sub.add_parser("resume", help="continue an interrupted session")
     p_re.add_argument("session")
@@ -115,18 +187,79 @@ def main(argv: list[str] | None = None) -> int:
     p_ca.add_argument("--store", required=True, help="session store dir")
     p_ca.add_argument("--tuner-kwargs", default="{}",
                       help="JSON dict of tuner constructor kwargs")
+    p_ca.add_argument("--tuner-arg", action="append", default=[],
+                      metavar="K=V",
+                      help="per-tuner kwarg (repeatable, JSON values); "
+                           "merged over --tuner-kwargs into every spec")
     p_ca.add_argument("--serial", action="store_true",
                       help="run sessions one at a time (own pool each) "
                            "instead of interleaving on a shared pool")
     p_ca.add_argument("--no-share-archs", action="store_true",
                       help="disable arch-shared evaluation even for "
                            "multi-arch grids")
+    p_ca.add_argument("--broker", default=None,
+                      help="SQLite job-queue db: dispatch evaluation to "
+                           "detached `worker` processes (async tell) "
+                           "instead of an in-process pool")
+
+    p_wo = sub.add_parser(
+        "worker",
+        help="serve a broker job queue as one detached worker process")
+    p_wo.add_argument("--broker", required=True,
+                      help="SQLite job-queue db (shared filesystem path)")
+    p_wo.add_argument("--workers", type=int, default=2,
+                      help="evaluation threads/processes inside this worker")
+    p_wo.add_argument("--mode", default="auto",
+                      choices=("auto", "thread", "process"))
+    p_wo.add_argument("--max-retries", type=int, default=2,
+                      help="per-config poison cap inside a batch")
+    p_wo.add_argument("--lease", type=float, default=30.0,
+                      help="job lease seconds (heartbeats renew at 1/3)")
+    p_wo.add_argument("--poll", type=float, default=0.05,
+                      help="idle queue poll interval, seconds")
+    p_wo.add_argument("--max-idle", type=float, default=None,
+                      help="exit after this many idle seconds (default: "
+                           "serve forever)")
+    p_wo.add_argument("--max-jobs", type=int, default=None,
+                      help="exit after serving N jobs")
+    p_wo.add_argument("--id", default=None,
+                      help="worker id shown in status (default host:pid)")
 
     args = ap.parse_args(argv)
+
+    if args.cmd == "worker":
+        from .broker import SQLiteBroker
+        from .workers import BrokerWorker
+        worker = BrokerWorker(
+            SQLiteBroker(args.broker), worker_id=args.id,
+            workers=args.workers, mode=args.mode,
+            max_retries=args.max_retries, lease_s=args.lease,
+            poll_s=args.poll,
+            log=lambda msg: print(msg, file=sys.stderr, flush=True))
+        print(f"worker {worker.worker_id} serving {args.broker}",
+              file=sys.stderr, flush=True)
+        served = worker.run(max_jobs=args.max_jobs,
+                            max_idle_s=args.max_idle)
+        print(f"worker {worker.worker_id} exiting after {served} job(s)",
+              file=sys.stderr, flush=True)
+        return 0
+
     store = SessionStore(args.store)
 
     if args.cmd == "status":
-        return _print_status(store, args.session)
+        broker = None
+        if args.broker is not None:
+            from pathlib import Path
+
+            from .broker import SQLiteBroker
+            if not Path(args.broker).exists():
+                # status is read-only: never conjure an empty queue db at
+                # a typo'd path and report "no leases" against it
+                print(f"error: no broker db at {args.broker!r}",
+                      file=sys.stderr)
+                return 2
+            broker = SQLiteBroker(args.broker)
+        return _print_status(store, args.session, broker)
 
     if args.cmd == "submit":
         if args.problem not in problem_names():
@@ -175,21 +308,32 @@ def main(argv: list[str] | None = None) -> int:
             return 2
         try:
             seeds = [int(s) for s in args.seeds.split(",") if s]
-            tuner_kwargs = json.loads(args.tuner_kwargs)
+            tuner_kwargs = _parse_tuner_args(args.tuner_arg,
+                                             json.loads(args.tuner_kwargs))
         except (ValueError, json.JSONDecodeError) as e:
-            print(f"error: bad --seeds/--tuner-kwargs: {e}", file=sys.stderr)
+            print(f"error: bad --seeds/--tuner-kwargs/--tuner-arg: {e}",
+                  file=sys.stderr)
             return 2
+        broker = None
+        if args.broker is not None:
+            if args.serial:
+                print("error: --broker implies interleaving "
+                      "(drop --serial)", file=sys.stderr)
+                return 2
+            from .broker import SQLiteBroker
+            broker = SQLiteBroker(args.broker)
         camp = Campaign.grid(problems=problems, tuners=tuners, archs=archs,
                              seeds=seeds, budget=args.budget,
                              workers=args.workers, tuner_kwargs=tuner_kwargs)
         print(f"campaign: {len(camp)} sessions "
               f"({len(problems)} problems x {len(tuners)} tuners x "
-              f"{len(archs)} archs x {len(seeds)} seeds)")
+              f"{len(archs)} archs x {len(seeds)} seeds)"
+              + (f" via broker {args.broker}" if broker else ""))
         camp.run(store, workers=args.workers, mode=args.mode,
                  max_retries=args.max_retries,
                  interleave=not args.serial,
-                 share_archs=not args.no_share_archs)
-        return _print_status(store, None)
+                 share_archs=not args.no_share_archs, broker=broker)
+        return _print_status(store, None, broker)
 
     if args.cmd == "resume":
         if not store.exists(args.session):

@@ -5,6 +5,15 @@ The worker pool pulls :class:`Job` items, evaluates them, and reports
 exhausted, at which point it is *poisoned*: the config is marked invalid and
 never evaluated again (MITuna's "errored job" state — one bad config must
 not wedge a campaign).
+
+This in-process queue is the *seam* for scale-out: the durable
+multi-process backends in :mod:`~repro.orchestrator.broker` implement the
+same lifecycle (pending → leased → done, with bounded retries terminating
+in a dead state) over shared storage, using the state vocabulary defined
+here.  ``LEASED``/``FAILED`` are the distributed counterparts of
+``RUNNING``/``POISONED``: a lease can expire (the worker is presumed dead
+and the job requeued), and a job whose attempts cap is exhausted is
+*failed* — the queue-level poison.
 """
 
 from __future__ import annotations
@@ -15,7 +24,11 @@ from typing import Any, Optional
 
 from ..core.space import Config
 
+#: in-process job lifecycle
 PENDING, RUNNING, DONE, POISONED = "pending", "running", "done", "poisoned"
+#: broker additions: a durable claim with an expiry, and the terminal
+#: state of a job whose attempts cap ran out (see broker.py)
+LEASED, FAILED = "leased", "failed"
 
 
 @dataclass

@@ -34,7 +34,15 @@ requests faithfully produces the identical trajectory and journal:
 * :func:`~repro.orchestrator.campaign.run_campaign` drives N steppers
   round-robin against one shared pool, answering row requests of
   portability grids from arch-shared evaluations (each deduped row
-  evaluated once, all architectures read from shared value columns).
+  evaluated once, all architectures read from shared value columns);
+* ``run_campaign(..., broker=...)`` publishes requests as jobs on a
+  durable :class:`~repro.orchestrator.broker.Broker` and tells each
+  stepper asynchronously when its batch completes — the multi-host
+  backend, served by detached ``python -m repro.orchestrator worker``
+  processes (``run_session(broker=...)`` is the single-session form).
+
+The stepper/EvalRequest protocol and its determinism guarantees are
+documented as a stable contract in ``docs/architecture.md``.
 """
 
 from __future__ import annotations
@@ -271,7 +279,7 @@ def run_session(spec: SessionSpec, *, problem: TunableProblem | None = None,
                 tuner: Tuner | None = None, store: SessionStore | None = None,
                 pool: WorkerPool | None = None, workers: int | None = None,
                 mode: str = "auto", max_retries: int = 2,
-                stop_after: int | None = None,
+                stop_after: int | None = None, broker=None,
                 on_batch: Callable[[TuneResult], None] | None = None
                 ) -> TuneResult:
     """Run (or resume) one tuning session; returns the full trace.
@@ -281,8 +289,26 @@ def run_session(spec: SessionSpec, *, problem: TunableProblem | None = None,
     session survives a kill; an existing journal is replayed first.
     ``stop_after`` ends the run at the first batch boundary with at least
     that many trials recorded (checkpoint-and-stop — also how tests
-    simulate a crash).
+    simulate a crash).  With ``broker=``, evaluation goes to a durable job
+    queue served by detached worker processes instead of a local pool
+    (trajectory unchanged).  Because workers rematerialize the problem
+    from the registry by name, live ``problem``/``tuner`` instances are
+    rejected in broker mode — a driver-side instance that disagreed with
+    the registry would silently break the bit-identity guarantee —
+    as are ``pool``/``stop_after``/``on_batch`` (monitor via the store's
+    ``status`` instead).
     """
+    if broker is not None:
+        if (pool is not None or stop_after is not None or tuner is not None
+                or problem is not None or on_batch is not None):
+            raise ValueError(
+                "broker sessions take none of pool=/stop_after=/tuner=/"
+                "problem=/on_batch= — workers rematerialize the problem "
+                "from the registry, and tells batch at session "
+                "granularity (watch progress via `status --store`)")
+        from .campaign import run_campaign
+        return run_campaign([spec], store,
+                            broker=broker)[spec.session_id]
     problem, tuner = resolve_session(spec, problem, tuner)
     workers = spec.workers if workers is None else workers
     own_pool = pool is None

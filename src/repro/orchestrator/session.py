@@ -18,6 +18,18 @@ from typing import Any
 CREATED, RUNNING, INTERRUPTED, DONE, FAILED = (
     "created", "running", "interrupted", "done", "failed")
 
+#: per-tuner kwargs a campaign grid applies beneath explicit settings.
+#: SurrogateBO defaults to batched qLCB acquisition in campaigns: width-8
+#: batches keep the evaluation sweeps in the columnar regime (and a fleet
+#: of broker workers busy) where the study default of width 1 would
+#: serialize every evaluation behind a GBDT refit.  A batch width is a
+#: *tuner* setting — it changes the trajectory by design and is part of
+#: the spec identity — which is why the default lives here, applied when
+#: specs are built, never silently at run time.
+CAMPAIGN_TUNER_DEFAULTS: dict[str, dict[str, Any]] = {
+    "surrogate_bo": {"batch_width": 8},
+}
+
 
 @dataclass
 class SessionSpec:

@@ -169,6 +169,25 @@ class SessionStore:
             f.flush()
             os.fsync(f.fileno())
 
+    def journal_version(self, sid: str) -> int | None:
+        """Sniff a session's journal format: ``2`` (row-native), ``1``
+        (config-column records, written by pre-v2 orchestrators), or
+        ``None`` when no journal records exist yet.  Broker campaigns use
+        this to refuse v1 stores loudly instead of failing downstream."""
+        p = self._journal_path(sid)
+        if not p.exists():
+            return None
+        with open(p) as f:             # first parseable line decides —
+            for line in f:             # never slurp a multi-MB journal
+                if not line.strip():
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue           # torn line from a crash mid-append
+                return 1 if "c" in rec else 2
+        return None
+
     def load_journal(self, sid: str, space: SearchSpace,
                      arch: str = "v5e") -> list[tuple[int, Trial]]:
         """Journaled evaluations in original ask order.

@@ -26,7 +26,10 @@ the portability-campaign fast path.
 
 from __future__ import annotations
 
+import json
 import math
+import threading
+import time
 from concurrent.futures import (FIRST_COMPLETED, BrokenExecutor, Executor,
                                 ProcessPoolExecutor, ThreadPoolExecutor, wait)
 from typing import Sequence
@@ -304,3 +307,141 @@ class WorkerPool:
                                info={"error": job.error if job else "lost",
                                      "poison": True,
                                      "attempts": job.attempts if job else 0})
+
+
+# --------------------------------------------------------------------- #
+# broker workers: the detached fleet behind a durable job queue
+# --------------------------------------------------------------------- #
+class BrokerWorker:
+    """One worker loop serving a :class:`~repro.orchestrator.broker.Broker`.
+
+    The fleet member behind ``python -m repro.orchestrator worker``:
+    leases one job at a time, keeps the lease alive from a heartbeat
+    thread while the evaluation runs, and publishes the result —
+    ``complete`` on success, ``fail`` (requeue, attempts-capped) on an
+    infrastructure error.  *Evaluation* faults never fail the job: the
+    batch runs through this worker's own :class:`WorkerPool`, whose
+    per-config retry/poison machinery turns a raising config into an
+    invalid trial exactly as in-process evaluation would — so broker
+    results are bit-identical to pool results, poison markers included.
+
+    Problems are materialized from the registry by name (the job payload
+    carries ``problem``/``pk``) and cached, one live problem + one warm
+    pool per problem for the life of the worker: a campaign's stream of
+    jobs pays the space compile once, like the in-process scheduler.
+    """
+
+    def __init__(self, broker, *, worker_id: str | None = None,
+                 workers: int = 2, mode: str = "auto", max_retries: int = 2,
+                 lease_s: float = 30.0, poll_s: float = 0.05,
+                 log=None):
+        from .broker import default_worker_id
+        self.broker = broker
+        self.worker_id = worker_id or default_worker_id()
+        self.workers = workers
+        self.mode = mode
+        self.max_retries = max_retries
+        self.lease_s = lease_s
+        self.poll_s = poll_s
+        self.log = log or (lambda msg: None)
+        self._problems: dict[str, TunableProblem] = {}
+        self._pools: dict[str, WorkerPool] = {}
+
+    # -- problem/pool cache ------------------------------------------------ #
+    def _problem(self, payload: dict) -> tuple[TunableProblem, WorkerPool]:
+        from .registry import make_problem
+        key = json.dumps([payload["problem"], payload.get("pk", {})],
+                         sort_keys=True)
+        if key not in self._problems:
+            problem = make_problem(payload["problem"], **payload.get("pk", {}))
+            problem.space.compile_eagerly()
+            self._problems[key] = problem
+            self._pools[key] = WorkerPool(
+                problem, payload["archs"][0], workers=self.workers,
+                mode=self.mode, max_retries=self.max_retries)
+        return self._problems[key], self._pools[key]
+
+    # -- evaluation -------------------------------------------------------- #
+    def _evaluate(self, payload: dict) -> dict:
+        from .broker import encode_trial
+        problem, pool = self._problem(payload)
+        archs = list(payload["archs"])
+        if payload.get("rows") is not None:
+            rows = [int(r) for r in payload["rows"]]
+            if len(archs) > 1:
+                per_arch = pool.evaluate_rows(rows, archs=archs,
+                                              problem=problem)
+            else:
+                per_arch = {archs[0]: pool.evaluate_rows(
+                    rows, arch=archs[0], problem=problem)}
+        else:
+            cfgs = [problem.space.decode(c) for c in payload["configs"]]
+            per_arch = {a: pool.evaluate(cfgs, a, problem=problem)
+                        for a in archs}
+        return {"arch_trials": {a: [encode_trial(t) for t in trials]
+                                for a, trials in per_arch.items()}}
+
+    # -- the loop ---------------------------------------------------------- #
+    def _heartbeat_loop(self, job_id: int, stop: threading.Event) -> None:
+        # its own broker connection (SQLite connections are thread-local);
+        # a False heartbeat means the lease was reaped — this worker was
+        # presumed dead and the job re-leased, so stop renewing: our
+        # eventual complete/fail will be rejected (concurrent-worker dedup)
+        interval = max(self.lease_s / 3.0, 0.01)
+        while not stop.wait(interval):
+            if not self.broker.heartbeat(job_id, self.worker_id,
+                                         self.lease_s):
+                return
+
+    def serve_one(self, job_id: int, payload: dict) -> bool:
+        """Evaluate one leased job; returns True if the result landed."""
+        stop = threading.Event()
+        hb = threading.Thread(target=self._heartbeat_loop,
+                              args=(job_id, stop), daemon=True)
+        hb.start()
+        try:
+            result = self._evaluate(payload)
+        except Exception as e:
+            # evaluation infrastructure error: requeue the job (attempts-
+            # capped).  KeyboardInterrupt/SystemExit propagate instead —
+            # the worker dies and the lease expires, which is the same
+            # requeue without burning an attempt on an operator Ctrl-C.
+            self.broker.fail(job_id, self.worker_id, repr(e))
+            self.log(f"job {job_id} failed: {e!r}")
+            return False
+        finally:
+            stop.set()
+            hb.join()
+        ok = self.broker.complete(job_id, self.worker_id, result)
+        self.log(f"job {job_id} {'done' if ok else 'lost lease'}")
+        return ok
+
+    def run(self, *, max_jobs: int | None = None,
+            max_idle_s: float | None = None,
+            stop: threading.Event | None = None) -> int:
+        """Serve jobs until stopped; returns how many were served.
+
+        ``max_idle_s`` bounds how long the worker polls an empty queue
+        before exiting (fleet teardown without a control channel);
+        ``max_jobs`` and ``stop`` exist for tests and manual drains.
+        """
+        served = 0
+        idle_since = time.time()
+        while True:
+            if stop is not None and stop.is_set():
+                break
+            if max_jobs is not None and served >= max_jobs:
+                break
+            leased = self.broker.lease(self.worker_id, self.lease_s)
+            if leased is None:
+                if (max_idle_s is not None
+                        and time.time() - idle_since > max_idle_s):
+                    break
+                time.sleep(self.poll_s)
+                continue
+            self.serve_one(*leased)
+            served += 1
+            idle_since = time.time()
+        for pool in self._pools.values():
+            pool.close()
+        return served

@@ -1,0 +1,473 @@
+"""Queue-backend conformance suite + broker campaign properties.
+
+Every protocol property runs against BOTH backends (``MemoryBroker`` and
+``SQLiteBroker``) through one parametrized fixture: identical traces to
+the serial loop, lease-expiry requeue, poison-result isolation,
+concurrent-worker dedup, attempts-cap failure, async-tell resume.  The
+multi-*process* properties (detached workers, kill one mid-campaign) run
+against the SQLite backend with real subprocesses at the bottom.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+from contextlib import contextmanager
+from pathlib import Path
+
+import pytest
+
+from repro.core.problem import FunctionProblem
+from repro.core.space import Param, SearchSpace
+from repro.orchestrator import (BrokerWorker, Campaign, MemoryBroker,
+                                SessionSpec, SessionStore, SQLiteBroker,
+                                run_campaign, run_session)
+from repro.orchestrator import registry
+from repro.orchestrator.cli import _parse_tuner_args, main as cli_main
+from repro.orchestrator.queue import FAILED, LEASED, PENDING
+from repro.orchestrator.session import CAMPAIGN_TUNER_DEFAULTS
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(params=["memory", "sqlite"])
+def broker(request, tmp_path):
+    b = (MemoryBroker() if request.param == "memory"
+         else SQLiteBroker(tmp_path / "queue.db"))
+    yield b
+    b.close()
+
+
+@contextmanager
+def _fleet(broker, n=2, lease_s=5.0, workers=2):
+    """n BrokerWorker loops as daemon threads, stopped on exit."""
+    stop = threading.Event()
+    members = [BrokerWorker(broker, workers=workers, lease_s=lease_s,
+                            poll_s=0.005) for _ in range(n)]
+    threads = [threading.Thread(target=w.run, kwargs={"stop": stop},
+                                daemon=True) for w in members]
+    for t in threads:
+        t.start()
+    try:
+        yield members
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=30)
+
+
+def _traces_equal(a, b) -> bool:
+    return ([t.objective for t in a.trials] == [t.objective for t in b.trials]
+            and [t.config for t in a.trials] == [t.config for t in b.trials]
+            and [t.valid for t in a.trials] == [t.valid for t in b.trials])
+
+
+def _poison_problem():
+    space = SearchSpace([Param("a", tuple(range(24)))], name="toy_poison")
+
+    def fn(cfg, arch):
+        if cfg["a"] % 5 == 2:
+            raise RuntimeError(f"kaboom {cfg['a']}")
+        return float(cfg["a"] + 1)
+
+    return FunctionProblem(space, fn, name="toy_poison")
+
+
+# --------------------------------------------------------------------- #
+# conformance: identical traces
+# --------------------------------------------------------------------- #
+def test_broker_campaign_bitidentical_to_serial(broker, tmp_path):
+    """The acceptance property: a campaign through the durable queue —
+    journals, published tables, and returned traces — equals serial
+    ``run_session``, with async tell and cross-session row sharing."""
+    camp = Campaign.grid(problems=["toy_rastrigin"],
+                         tuners=["random", "genetic"],
+                         archs=["v5e", "v4"], seeds=range(2), budget=40,
+                         workers=2)
+    store_ref = SessionStore(tmp_path / "ref")
+    ref = {s.session_id: run_session(s, store=store_ref)
+           for s in camp.specs}
+
+    store_brk = SessionStore(tmp_path / "brk")
+    with _fleet(broker, n=3):
+        res = run_campaign(camp.specs, store_brk, broker=broker)
+
+    assert res.keys() == ref.keys()
+    for sid in ref:
+        assert _traces_equal(ref[sid], res[sid]), sid
+        # journal files are byte-identical (same records, same order)
+        assert (store_ref._journal_path(sid).read_text()
+                == store_brk._journal_path(sid).read_text()), sid
+        # published ResultTables agree
+        ta = store_ref.tables.get("toy_rastrigin", ref[sid].arch,
+                                  f"session_{sid}")
+        tb = store_brk.tables.get("toy_rastrigin", ref[sid].arch,
+                                  f"session_{sid}")
+        assert ta.configs == tb.configs and ta.objectives == tb.objectives
+        assert store_brk.meta(sid)["status"] == "done"
+
+
+def test_run_session_broker_form(broker):
+    spec = SessionSpec(problem="toy_quad", tuner="genetic", budget=30,
+                       seed=5)
+    ref = run_session(spec)
+    with _fleet(broker, n=1):
+        res = run_session(spec, broker=broker)
+    assert _traces_equal(ref, res)
+
+
+def test_broker_poison_result_isolation(broker, monkeypatch):
+    """A config that raises inside a worker comes back as an invalid
+    poisoned trial — fault markers identical to in-process evaluation —
+    and never fails the job or wedges the campaign."""
+    monkeypatch.setitem(registry.TOY_FACTORIES, "toy_poison",
+                        _poison_problem)
+    spec = SessionSpec(problem="toy_poison", tuner="random", budget=20,
+                       seed=3)
+    ref = run_session(spec)
+    with _fleet(broker, n=2):
+        res = run_campaign([spec], broker=broker)[spec.session_id]
+    assert _traces_equal(ref, res)
+    poisoned = [t for t in res.trials if t.info.get("poison")]
+    assert poisoned, "grid must hit at least one raising config"
+    for t_ref, t_brk in zip(ref.trials, res.trials):
+        assert t_ref.info.get("poison") == t_brk.info.get("poison")
+        assert t_ref.info.get("error") == t_brk.info.get("error")
+        assert t_ref.info.get("attempts") == t_brk.info.get("attempts")
+
+
+# --------------------------------------------------------------------- #
+# conformance: lease protocol
+# --------------------------------------------------------------------- #
+def test_lease_expiry_requeue_and_completion_dedup(broker):
+    """A worker that stops heartbeating loses its lease; the requeued job
+    goes to the next worker, and the dead worker's late result is
+    rejected — two workers can never both publish one job."""
+    jid = broker.submit({"problem": "toy_quad", "archs": ["v5e"],
+                         "rows": [1], "sessions": []})
+    got = broker.lease("w-dead", lease_s=0.05)
+    assert got is not None and got[0] == jid
+    assert broker.lease("w-live", lease_s=0.05) is None   # still leased
+    time.sleep(0.1)                                       # lease expires
+    got2 = broker.lease("w-live", lease_s=30.0)
+    assert got2 is not None and got2[0] == jid            # requeued
+    # the presumed-dead worker wakes up: every write is rejected
+    assert not broker.complete(jid, "w-dead", {"arch_trials": {}})
+    assert not broker.fail(jid, "w-dead", "late")
+    assert not broker.heartbeat(jid, "w-dead", 30.0)
+    # the live holder's result lands, exactly once
+    assert broker.complete(jid, "w-live", {"arch_trials": {"v5e": []}})
+    done, failed = broker.collect()
+    assert list(done) == [jid] and not failed
+    done, failed = broker.collect()                       # pop-once
+    assert not done and not failed
+
+
+def test_heartbeat_keeps_long_job_alive(broker):
+    jid = broker.submit({"problem": "toy_quad", "archs": ["v5e"],
+                         "rows": [1], "sessions": []})
+    assert broker.lease("w1", lease_s=0.1)[0] == jid
+    for _ in range(6):                 # work "runs" 3x the lease window
+        time.sleep(0.05)
+        assert broker.heartbeat(jid, "w1", 0.1)
+    assert broker.reap() == 0
+    assert broker.lease("w2", lease_s=0.1) is None
+    assert broker.complete(jid, "w1", {"arch_trials": {"v5e": []}})
+
+
+def test_attempts_cap_turns_expiry_into_failure(broker):
+    jid = broker.submit({"problem": "toy_quad", "archs": ["v5e"],
+                         "rows": [1], "sessions": ["sid-x"]})
+    for i in range(broker.max_attempts):
+        got = broker.lease(f"w{i}", lease_s=0.02)
+        assert got is not None and got[0] == jid
+        time.sleep(0.05)
+    assert broker.lease("w-final", lease_s=0.02) is None  # failed, not pending
+    done, failed = broker.collect()
+    assert not done and len(failed) == 1
+    assert failed[0]["id"] == jid
+    assert failed[0]["attempts"] == broker.max_attempts
+    assert "presumed dead" in failed[0]["error"]
+
+
+def test_concurrent_workers_each_job_leased_once(broker):
+    """Many threads hammering ``lease`` never co-own a job (the
+    conformance form of MITuna's claim-row-for-update)."""
+    n_jobs = 24
+    for i in range(n_jobs):
+        broker.submit({"problem": "toy_quad", "archs": ["v5e"],
+                       "rows": [i], "sessions": []})
+    claimed: list[tuple[int, str]] = []
+    lock = threading.Lock()
+
+    def hammer(wid: str) -> None:
+        while True:
+            got = broker.lease(wid, lease_s=30.0)
+            if got is None:
+                return
+            with lock:
+                claimed.append((got[0], wid))
+            broker.complete(got[0], wid, {"arch_trials": {"v5e": []}})
+
+    threads = [threading.Thread(target=hammer, args=(f"w{i}",))
+               for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    jobs = [j for j, _ in claimed]
+    assert sorted(jobs) == sorted(set(jobs)) and len(jobs) == n_jobs
+    done, failed = broker.collect()
+    assert len(done) == n_jobs and not failed
+
+
+def test_counts_and_in_flight_views(broker):
+    jid = broker.submit({"problem": "toy_quad", "archs": ["v5e"],
+                         "rows": [1], "sessions": ["sid-a", "sid-b"]})
+    assert broker.counts()[PENDING] == 1
+    broker.lease("w9", lease_s=30.0)
+    assert broker.counts()[LEASED] == 1
+    flight = broker.in_flight()
+    assert len(flight) == 1
+    assert flight[0]["job"] == jid and flight[0]["worker"] == "w9"
+    assert flight[0]["heartbeat_age"] >= 0.0
+    assert sorted(flight[0]["sessions"]) == ["sid-a", "sid-b"]
+
+
+# --------------------------------------------------------------------- #
+# async-tell campaign behavior
+# --------------------------------------------------------------------- #
+def test_failed_job_marks_sessions_failed_journal_intact(broker, tmp_path,
+                                                         monkeypatch):
+    """Attempts-cap exhaustion surfaces as the same failure shape as an
+    in-process evaluation error: campaign raises, sessions are FAILED in
+    the store with their journals intact (hence resumable)."""
+    broker.max_attempts = 1
+    monkeypatch.setattr(BrokerWorker, "_evaluate",
+                        lambda self, payload: (_ for _ in ()).throw(
+                            RuntimeError("worker exploded")))
+    store = SessionStore(tmp_path / "store")
+    spec = SessionSpec(problem="toy_quad", tuner="random", budget=20, seed=1)
+    with _fleet(broker, n=1):
+        with pytest.raises(RuntimeError, match="broker campaign failed"):
+            run_campaign([spec], store, broker=broker)
+    assert store.meta(spec.session_id)["status"] == "failed"
+    # recovery: the same store resumes cleanly once evaluation works
+    monkeypatch.undo()
+    res = run_session(spec, store=store)
+    assert len(res.trials) == 20
+    assert store.meta(spec.session_id)["status"] == "done"
+
+
+def test_broker_campaign_resumes_interrupted_session(broker, tmp_path):
+    """Journal replay composes with the broker driver: an interrupted
+    session picked up by a broker campaign finishes bit-identical to the
+    never-interrupted serial run."""
+    spec = SessionSpec(problem="toy_rastrigin", tuner="genetic", budget=60,
+                       seed=11)
+    ref = run_session(spec)
+    store = SessionStore(tmp_path / "store")
+    run_session(spec, store=store, stop_after=25)          # interrupted
+    assert store.meta(spec.session_id)["status"] == "interrupted"
+    with _fleet(broker, n=2):
+        res = run_campaign([spec], store, broker=broker)[spec.session_id]
+    assert _traces_equal(ref, res)
+    assert store.meta(spec.session_id)["status"] == "done"
+
+
+def test_stale_jobs_from_previous_driver_are_dropped(broker, tmp_path):
+    """A driver killed mid-campaign leaves jobs on the queue; a restarted
+    driver must drop their late results and failures (it resubmits what
+    it still needs) instead of crashing on unknown job ids."""
+    # stale leftovers: one job a worker will complete under the new
+    # driver, one already failed
+    broker.submit({"problem": "toy_quad", "pk": {}, "archs": ["v5e"],
+                   "rows": [0, 1, 2], "sessions": ["ghost"]})
+    dead = broker.submit({"problem": "toy_quad", "pk": {}, "archs": ["v5e"],
+                          "rows": [3], "sessions": ["ghost"]})
+    for _ in range(broker.max_attempts):
+        jid, _payload = broker.lease("w-old", lease_s=0.01)
+        while jid != dead:              # drain until we hold the doomed one
+            broker.complete(jid, "w-old", {"arch_trials": {"v5e": []}})
+            jid, _payload = broker.lease("w-old", lease_s=0.01)
+        time.sleep(0.03)                # let the lease expire
+    broker.collect()                    # pop the stale completions only...
+    broker.submit({"problem": "toy_quad", "pk": {}, "archs": ["v5e"],
+                   "rows": [0, 1], "sessions": ["ghost"]})  # ...leave one
+
+    spec = SessionSpec(problem="toy_rastrigin", tuner="random", budget=20,
+                       seed=2)
+    ref = run_session(spec)
+    store = SessionStore(tmp_path / "store")
+    with _fleet(broker, n=2):
+        res = run_campaign([spec], store, broker=broker)[spec.session_id]
+    assert _traces_equal(ref, res)
+    assert store.meta(spec.session_id)["status"] == "done"
+
+
+def test_cli_status_refuses_missing_broker_db(tmp_path, capsys):
+    store = SessionStore(tmp_path / "store")
+    missing = tmp_path / "nope" / "queue.db"
+    rc = cli_main(["status", "--store", str(store.root),
+                   "--broker", str(missing)])
+    assert rc == 2
+    assert "no broker db" in capsys.readouterr().err
+    assert not missing.exists()         # status never conjured one
+
+
+def test_broker_requires_registry_problems(broker):
+    spec = SessionSpec(problem="no_such_problem", tuner="random", budget=5)
+    with pytest.raises(ValueError, match="registry problems"):
+        run_campaign([spec], broker=broker)
+
+
+def test_v1_journal_store_is_refused_loudly(broker, tmp_path):
+    """The ride-along bugfix: a store last written by an older (v1,
+    config-column) orchestrator gets a clear error from the broker
+    driver, not a downstream failure."""
+    store = SessionStore(tmp_path / "store")
+    spec = SessionSpec(problem="toy_quad", tuner="random", budget=10, seed=0)
+    sid = store.create(spec)
+    with open(store._journal_path(sid), "w") as f:
+        f.write(json.dumps({"k": 3, "c": [3, 0, 0, 0], "o": 2.0,
+                            "v": True}) + "\n")
+    assert store.journal_version(sid) == 1
+    with pytest.raises(RuntimeError, match="v1"):
+        run_campaign([spec], store, broker=broker)
+    # the same store is still fine for the in-process paths
+    res = run_session(spec, store=store)
+    assert len(res.trials) == 10
+
+
+# --------------------------------------------------------------------- #
+# campaign spec defaults + CLI plumbing (satellites)
+# --------------------------------------------------------------------- #
+def test_campaign_grid_applies_surrogate_bo_batch_width():
+    camp = Campaign.grid(problems=["toy_quad"], tuners=["surrogate_bo"],
+                         budget=10)
+    assert camp.specs[0].tuner_kwargs == {"batch_width": 8}
+    assert CAMPAIGN_TUNER_DEFAULTS["surrogate_bo"]["batch_width"] == 8
+    # explicit settings win over the default
+    camp = Campaign.grid(problems=["toy_quad"], tuners=["surrogate_bo"],
+                         budget=10, tuner_kwargs={"batch_width": 2})
+    assert camp.specs[0].tuner_kwargs == {"batch_width": 2}
+    # other tuners are untouched
+    camp = Campaign.grid(problems=["toy_quad"], tuners=["random"], budget=10)
+    assert camp.specs[0].tuner_kwargs == {}
+
+
+def test_parse_tuner_args():
+    out = _parse_tuner_args(["batch_width=16", "moves=alias", "flag=true"],
+                            {"pop_size": 4})
+    assert out == {"pop_size": 4, "batch_width": 16, "moves": "alias",
+                   "flag": True}
+    with pytest.raises(ValueError, match="k=v"):
+        _parse_tuner_args(["oops"], {})
+
+
+def test_cli_campaign_tuner_arg_reaches_specs(tmp_path, capsys):
+    rc = cli_main(["campaign", "--problems", "toy_quad",
+                   "--tuners", "surrogate_bo", "--budget", "8",
+                   "--tuner-arg", "batch_width=2",
+                   "--store", str(tmp_path / "store")])
+    assert rc == 0
+    capsys.readouterr()
+    store = SessionStore(tmp_path / "store")
+    sids = store.list_sessions()
+    assert len(sids) == 1
+    assert store.load_spec(sids[0]).tuner_kwargs == {"batch_width": 2}
+
+
+def test_cli_status_reports_lease_holder(tmp_path, capsys):
+    store = SessionStore(tmp_path / "store")
+    spec = SessionSpec(problem="toy_quad", tuner="random", budget=10, seed=0)
+    sid = store.create(spec)
+    store.update_meta(sid, status="running")
+    db = str(tmp_path / "queue.db")
+    broker = SQLiteBroker(db)
+    jid = broker.submit({"problem": "toy_quad", "archs": ["v5e"],
+                         "rows": [1, 2], "sessions": [sid]})
+    assert broker.lease("host9:4242:abc123", lease_s=60.0)[0] == jid
+    rc = cli_main(["status", "--store", str(store.root), "--broker", db])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "host9:4242:abc123" in out and "ago" in out
+    # a running session with no live lease shows as queued, not silent
+    broker.complete(jid, "host9:4242:abc123", {"arch_trials": {"v5e": []}})
+    broker.collect()
+    rc = cli_main(["status", "--store", str(store.root), "--broker", db])
+    out = capsys.readouterr().out
+    assert rc == 0 and "(queued)" in out
+
+
+# --------------------------------------------------------------------- #
+# detached worker processes (SQLite only, the multi-host claim)
+# --------------------------------------------------------------------- #
+def _spawn_worker(db: str, *, lease: float, max_idle: float,
+                  tmp: Path, tag: str) -> subprocess.Popen:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(ROOT / "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    log = open(tmp / f"worker-{tag}.log", "w")
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.orchestrator", "worker",
+         "--broker", db, "--workers", "2", "--lease", str(lease),
+         "--poll", "0.02", "--max-idle", str(max_idle)],
+        env=env, stdout=log, stderr=log, cwd=str(tmp))
+
+
+def test_detached_workers_kill_one_midcampaign_trace_identical(tmp_path):
+    """The CI broker smoke scenario: a real worker process is SIGKILLed
+    *while it provably holds a lease* mid-campaign; lease expiry requeues
+    its jobs onto a survivor (spawned only after the kill, so the
+    requeue path cannot be skipped) and the finished trace equals the
+    in-process run."""
+    camp = Campaign.grid(problems=["toy_rastrigin"],
+                         tuners=["genetic", "random"],
+                         archs=["v5e", "v4"], seeds=[0], budget=100,
+                         workers=2)
+    ref = {s.session_id: run_session(s) for s in camp.specs}
+
+    db = str(tmp_path / "queue.db")
+    broker = SQLiteBroker(db)
+    store = SessionStore(tmp_path / "store")
+    doomed = _spawn_worker(db, lease=1.5, max_idle=60, tmp=tmp_path,
+                           tag="doomed")
+    procs = [doomed]
+    result: dict = {}
+
+    def _drive() -> None:
+        result["res"] = run_campaign(camp.specs, store, broker=broker)
+
+    driver = threading.Thread(target=_drive, daemon=True)
+    driver.start()
+    try:
+        # wait until the doomed worker actually holds a lease...
+        watch = SQLiteBroker(db)
+        deadline = time.time() + 60
+        while not watch.in_flight():
+            assert time.time() < deadline, "worker never leased a job"
+            assert driver.is_alive(), \
+                "campaign finished before any lease was observed"
+            time.sleep(0.002)
+        # ...then SIGKILL it mid-lease and bring up the survivor
+        doomed.kill()
+        assert driver.is_alive(), "kill must land mid-campaign"
+        procs.append(_spawn_worker(db, lease=1.5, max_idle=60, tmp=tmp_path,
+                                   tag="survivor"))
+        driver.join(timeout=120)
+        assert not driver.is_alive()
+    finally:
+        for p in procs:
+            p.kill()
+            p.wait(timeout=30)
+    assert doomed.returncode == -signal.SIGKILL
+    res = result["res"]
+    for sid in ref:
+        assert _traces_equal(ref[sid], res[sid]), sid
+        assert store.meta(sid)["status"] == "done"
