@@ -13,6 +13,10 @@
 4. print the campaign status table — the same view the CLI gives you:
 
     python -m repro.orchestrator status --store experiments/sessions
+
+   (add ``--watch`` for a live dashboard with progress bars and
+   best-so-far sparklines, ``--json`` for machine-readable rows, or
+   trace a run onto a timeline with ``examples/trace_session.py``)
 """
 
 from pathlib import Path

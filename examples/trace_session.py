@@ -1,0 +1,63 @@
+"""Trace a tuning session: spans on, top-10 slowest operations, exports.
+
+    PYTHONPATH=src python examples/trace_session.py
+
+1. enable span tracing and fleet metrics (one call; off by default and
+   free when off — see BENCH_telemetry.json),
+2. run one GA/gemm session through the full orchestrator stack, so every
+   instrumented seam fires: session.ask/tell, pool.evaluate/chunk,
+   journal.append/publish, eval.features/estimate,
+3. print the top-10 slowest span names (count / total / max / mean) —
+   where the wall time of a tuning run actually goes,
+4. export the trace twice: JSONL (grep/jq-able, one span per line) and
+   Chrome trace format — open chrome://tracing or https://ui.perfetto.dev
+   and drop the file in to see the session on a timeline.
+
+The same spans land in any run: `--trace trace.json` on the CLI
+(`submit`, `campaign`, `worker`) or REPRO_TRACE=1 in the environment.
+"""
+
+import tempfile
+from pathlib import Path
+
+from repro import telemetry
+from repro.telemetry import trace
+from repro.orchestrator import SessionSpec, SessionStore, run_session
+
+OUT = Path(__file__).resolve().parents[1] / "experiments"
+
+
+def main() -> None:
+    # -- 1. switch the telemetry layer on --------------------------------- #
+    telemetry.enable()
+
+    # -- 2. one traced session ------------------------------------------- #
+    spec = SessionSpec(problem="gemm", tuner="genetic", arch="v5e",
+                       budget=512, seed=17, workers=2,
+                       tuner_kwargs={"pop_size": 256, "tournament": 2})
+    with tempfile.TemporaryDirectory() as td:
+        res = run_session(spec, store=SessionStore(Path(td)))
+    print(f"session {spec.session_id}")
+    print(f"  evaluations {res.evaluations}, "
+          f"best {res.best.objective * 1e3:.3f} ms\n")
+
+    # -- 3. where did the time go? ---------------------------------------- #
+    print(f"{'span':<20s} {'count':>6s} {'total ms':>10s} "
+          f"{'max ms':>9s} {'mean ms':>9s}")
+    for row in trace.summarize(top=10):
+        print(f"{row['name']:<20s} {row['count']:>6d} "
+              f"{row['total_ms']:>10.3f} {row['max_ms']:>9.3f} "
+              f"{row['mean_ms']:>9.3f}")
+
+    # -- 4. exports ------------------------------------------------------- #
+    OUT.mkdir(parents=True, exist_ok=True)
+    jsonl = OUT / "trace_session.jsonl"
+    chrome = OUT / "trace_session.chrome.json"
+    trace.export_jsonl(jsonl)
+    trace.export_chrome(chrome)
+    print(f"\nwrote {jsonl}")
+    print(f"wrote {chrome}  (load in chrome://tracing / ui.perfetto.dev)")
+
+
+if __name__ == "__main__":
+    main()

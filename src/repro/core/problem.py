@@ -14,6 +14,7 @@ import math
 import time
 from typing import Any, Callable, Sequence
 
+from ..telemetry.trace import span
 from .costmodel import (ARCH_NAMES, DEFAULT_ARCH, FeatureBatch,
                         KernelFeatures, estimate_seconds,
                         estimate_seconds_batch)
@@ -211,16 +212,20 @@ class TunableProblem:
             return out
         if self._columnar_ok(len(rows)):
             comp = self.space.compiled()
-            cols = comp.value_columns(rows)
-            if self.arch_independent_features:
-                fbs = [self.feature_columns(cols, archs[0])] * len(archs)
-            else:
-                fbs = [self.feature_columns(cols, a) for a in archs]
+            with span("eval.features", cat="eval", n=len(rows),
+                      archs=len(archs)):
+                cols = comp.value_columns(rows)
+                if self.arch_independent_features:
+                    fbs = [self.feature_columns(cols, archs[0])] * len(archs)
+                else:
+                    fbs = [self.feature_columns(cols, a) for a in archs]
             if all(fb is not None for fb in fbs):
-                for i, (fb, arch) in enumerate(zip(fbs, archs)):
-                    out[i] = np.broadcast_to(
-                        np.asarray(estimate_seconds_batch(fb, arch)),
-                        (len(rows),))
+                with span("eval.estimate", cat="eval", n=len(rows),
+                          archs=len(archs)):
+                    for i, (fb, arch) in enumerate(zip(fbs, archs)):
+                        out[i] = np.broadcast_to(
+                            np.asarray(estimate_seconds_batch(fb, arch)),
+                            (len(rows),))
                 return out
         comp = self.space.compiled()
         if comp is not None \
@@ -275,7 +280,8 @@ class TunableProblem:
         comp = self.space.compiled()
         fb = None
         if self._columnar_ok(len(rows)):
-            fb = self.feature_columns(comp.value_columns(rows), arch)
+            with span("eval.features", cat="eval", n=len(rows), arch=arch):
+                fb = self.feature_columns(comp.value_columns(rows), arch)
         if fb is None:
             if comp is not None \
                     and type(self).evaluate is TunableProblem.evaluate:
@@ -295,9 +301,10 @@ class TunableProblem:
                 cfgs = [self.space.from_flat_index(int(r)) for r in rows]
             return self.evaluate_many(cfgs, arch)
         import numpy as np
-        times = np.broadcast_to(
-            np.asarray(estimate_seconds_batch(fb, arch), dtype=np.float64),
-            (len(rows),))
+        with span("eval.estimate", cat="eval", n=len(rows), arch=arch):
+            times = np.broadcast_to(
+                np.asarray(estimate_seconds_batch(fb, arch),
+                           dtype=np.float64), (len(rows),))
         # lazy trials: the trace keeps only (row, objective); the config
         # dict materializes on first access (or via materialize_configs)
         sp = self.space
@@ -409,16 +416,23 @@ class MeasuredProblem(TunableProblem):
     def evaluate(self, config: Config, arch: str = "cpu") -> Trial:
         if not self.space.satisfies(config):
             return Trial(config, math.inf, arch, valid=False)
+        # the compile-vs-measure split: one span per phase so a trace
+        # shows where a measured config's wall-clock went.  Span overhead
+        # sits outside the per-repeat perf_counter windows, so enabling
+        # tracing cannot bias the recorded objective.
         try:
-            fn = self.build(config)
+            with span("kernel.build", cat="kernel", arch=arch):
+                fn = self.build(config)
         except Exception as e:  # config that fails to build == invalid
             return Trial(config, math.inf, arch, valid=False,
                          info={"error": repr(e)})
-        for _ in range(self.warmup):
-            fn()
-        best = math.inf
-        for _ in range(self.repeats):
-            t0 = time.perf_counter()
-            fn()
-            best = min(best, time.perf_counter() - t0)
+        with span("kernel.measure", cat="kernel", arch=arch,
+                  repeats=self.repeats):
+            for _ in range(self.warmup):
+                fn()
+            best = math.inf
+            for _ in range(self.repeats):
+                t0 = time.perf_counter()
+                fn()
+                best = min(best, time.perf_counter() - t0)
         return Trial(config, best, arch, valid=True)

@@ -188,6 +188,7 @@ class CompiledSpace:
               cache_dir: str | Path | None = None) -> "CompiledSpace":
         """Compile ``space``; loads from / saves to the table cache when a
         cache directory is configured."""
+        from ..telemetry import metrics as _metrics
         cache_dir = Path(cache_dir) if cache_dir is not None \
             else get_cache_dir()
         path = None
@@ -195,7 +196,9 @@ class CompiledSpace:
             path = cache_dir / f"{space.name}-{space_fingerprint(space)}.npz"
             loaded = CompiledSpace._load(space, path)
             if loaded is not None:
+                _metrics.counter("space_cache.hit", space=space.name).inc()
                 return loaded
+            _metrics.counter("space_cache.miss", space=space.name).inc()
         comp = CompiledSpace(space, CompiledSpace._compute_mask(space),
                              cache_path=path)
         if path is not None:

@@ -57,6 +57,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Sequence
 
+from ...telemetry.trace import span
 from ..problem import Trial, TunableProblem
 from ..space import Config, SearchSpace
 
@@ -276,26 +277,32 @@ def run_tuner(tuner: Tuner, problem: TunableProblem, budget: int,
             break
         asks += 1
         if native:
-            key = int(tuner.ask_rows(1)[0])
+            with span("tuner.ask", cat="tuner"):
+                key = int(tuner.ask_rows(1)[0])
             if key in cache:
-                tuner.tell_rows([key], [_objective_of(cache[key])])
+                with span("tuner.tell", cat="tuner"):
+                    tuner.tell_rows([key], [_objective_of(cache[key])])
                 if not unique:
                     res.trials.append(cache[key])
                 continue
             t = problem.evaluate(comp.decode_row(key), arch)
             cache[key] = t
-            tuner.tell_rows([key], [_objective_of(t)])
+            with span("tuner.tell", cat="tuner"):
+                tuner.tell_rows([key], [_objective_of(t)])
         else:
-            cfg = tuner.ask()
+            with span("tuner.ask", cat="tuner"):
+                cfg = tuner.ask()
             key = problem.space.flat_index(cfg)
             if key in cache:
-                tuner.tell(cache[key])
+                with span("tuner.tell", cat="tuner"):
+                    tuner.tell(cache[key])
                 if not unique:
                     res.trials.append(cache[key])
                 continue
             t = problem.evaluate(cfg, arch)
             cache[key] = t
-            tuner.tell(t)
+            with span("tuner.tell", cat="tuner"):
+                tuner.tell(t)
         res.trials.append(t)
     return res
 

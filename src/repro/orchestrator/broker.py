@@ -165,13 +165,39 @@ class Broker:
         """
         raise NotImplementedError
 
+    # -- telemetry ---------------------------------------------------------- #
+    def record_metrics(self, worker: str, samples, ts: float | None = None
+                       ) -> None:
+        """Append worker-emitted metric samples to the broker's durable
+        ``metrics`` stream.
+
+        ``samples`` is an iterable of ``{"name", "value", "kind"}`` dicts
+        (``kind`` is ``"counter"`` — summed on aggregation — or
+        ``"gauge"`` — last-write-wins; see
+        :func:`repro.telemetry.metrics.aggregate_samples`).  Samples are
+        *never* deleted by :meth:`collect` or lease reaping: a SIGKILLed
+        worker's counters survive its jobs being requeued, so fleet
+        totals stay honest across worker churn.
+        """
+        raise NotImplementedError
+
+    def read_metrics(self, worker: str | None = None,
+                     name: str | None = None) -> list[dict]:
+        """Recorded samples (oldest first), optionally filtered:
+        ``{"ts", "worker", "name", "value", "kind"}`` per sample."""
+        raise NotImplementedError
+
     # -- introspection ----------------------------------------------------- #
     def counts(self) -> dict[str, int]:
         raise NotImplementedError
 
     def in_flight(self) -> list[dict]:
-        """Currently-leased jobs: ``{job, worker, heartbeat_age, sessions,
-        attempts}`` — what ``status --broker`` reports."""
+        """Currently-leased jobs: ``{job, worker, heartbeat_age,
+        lease_remaining, stale, sessions, attempts}`` — what
+        ``status --broker`` reports.  ``stale`` means the lease deadline
+        has passed but no ``lease``/``collect`` call has reaped the job
+        yet: the worker is presumed dead.  This is a read — it never
+        reaps."""
         raise NotImplementedError
 
     def reap(self) -> int:
@@ -195,10 +221,13 @@ class MemoryBroker(Broker):
     conformance suite meaningful.
     """
 
-    def __init__(self, max_attempts: int = 3):
+    def __init__(self, max_attempts: int = 3,
+                 metrics_sink: str | Path | None = None):
         self.max_attempts = max_attempts
+        self.metrics_sink = Path(metrics_sink) if metrics_sink else None
         self._lock = threading.Lock()
         self._jobs: dict[int, dict] = {}
+        self._metrics: list[dict] = []
         self._next = 1
 
     def submit(self, payload: dict) -> int:
@@ -314,9 +343,34 @@ class MemoryBroker(Broker):
             now = _now()
             return [{"job": j["id"], "worker": j["worker"],
                      "heartbeat_age": now - j["heartbeat"],
+                     "lease_remaining": j["lease_expires"] - now,
+                     "stale": j["lease_expires"] < now,
                      "attempts": j["attempts"],
                      "sessions": list(j["payload"].get("sessions", []))}
                     for j in self._jobs.values() if j["state"] == LEASED]
+
+    def record_metrics(self, worker: str, samples, ts: float | None = None
+                       ) -> None:
+        ts = _now() if ts is None else ts
+        recs = [{"ts": ts, "worker": worker, "name": s["name"],
+                 "value": float(s["value"]),
+                 "kind": s.get("kind", "counter")} for s in samples]
+        if not recs:
+            return
+        with self._lock:
+            self._metrics.extend(recs)
+            if self.metrics_sink is not None:
+                self.metrics_sink.parent.mkdir(parents=True, exist_ok=True)
+                with open(self.metrics_sink, "a") as f:
+                    for r in recs:
+                        f.write(json.dumps(r, separators=(",", ":")) + "\n")
+
+    def read_metrics(self, worker: str | None = None,
+                     name: str | None = None) -> list[dict]:
+        with self._lock:
+            return [dict(r) for r in self._metrics
+                    if (worker is None or r["worker"] == worker)
+                    and (name is None or r["name"] == name)]
 
 
 # --------------------------------------------------------------------- #
@@ -353,6 +407,15 @@ CREATE TABLE IF NOT EXISTS jobs (
     created       REAL    NOT NULL
 );
 CREATE INDEX IF NOT EXISTS jobs_state ON jobs (state, id);
+CREATE TABLE IF NOT EXISTS metrics (
+    id     INTEGER PRIMARY KEY AUTOINCREMENT,
+    ts     REAL    NOT NULL,
+    worker TEXT    NOT NULL,
+    name   TEXT    NOT NULL,
+    value  REAL    NOT NULL,
+    kind   TEXT    NOT NULL DEFAULT 'counter'
+);
+CREATE INDEX IF NOT EXISTS metrics_worker ON metrics (worker, name, id);
 """
 
 
@@ -516,12 +579,41 @@ class SQLiteBroker(Broker):
         now = _now()
         return [{"job": row["id"], "worker": row["worker"],
                  "heartbeat_age": now - row["heartbeat"],
+                 "lease_remaining": row["lease_expires"] - now,
+                 "stale": row["lease_expires"] < now,
                  "attempts": row["attempts"],
                  "sessions": list(json.loads(row["payload"])
                                   .get("sessions", []))}
                 for row in self._conn().execute(
-                    "SELECT id, worker, heartbeat, attempts, payload "
-                    "FROM jobs WHERE state = ?", (LEASED,))]
+                    "SELECT id, worker, heartbeat, lease_expires, attempts,"
+                    " payload FROM jobs WHERE state = ?", (LEASED,))]
+
+    def record_metrics(self, worker: str, samples, ts: float | None = None
+                       ) -> None:
+        ts = _now() if ts is None else ts
+        rows = [(ts, worker, s["name"], float(s["value"]),
+                 s.get("kind", "counter")) for s in samples]
+        if not rows:
+            return
+        with self._tx() as cur:
+            cur.executemany(
+                "INSERT INTO metrics (ts, worker, name, value, kind) "
+                "VALUES (?,?,?,?,?)", rows)
+
+    def read_metrics(self, worker: str | None = None,
+                     name: str | None = None) -> list[dict]:
+        sql = "SELECT ts, worker, name, value, kind FROM metrics"
+        clauses, params = [], []
+        if worker is not None:
+            clauses.append("worker = ?")
+            params.append(worker)
+        if name is not None:
+            clauses.append("name = ?")
+            params.append(name)
+        if clauses:
+            sql += " WHERE " + " AND ".join(clauses)
+        sql += " ORDER BY id"
+        return [dict(row) for row in self._conn().execute(sql, params)]
 
 
 def default_worker_id() -> str:

@@ -46,6 +46,7 @@ from typing import Callable, Iterable, Sequence
 
 from ..core.problem import TunableProblem
 from ..core.tuners.base import TuneResult
+from ..telemetry.trace import span
 from .broker import Broker, decode_trials
 from .registry import make_problem, problem_names
 from .session import CAMPAIGN_TUNER_DEFAULTS, DONE, SessionSpec
@@ -155,28 +156,31 @@ def run_campaign(specs: Sequence[SessionSpec],
         while any(not s["done"] for s in sessions):
             pending = [s for s in sessions
                        if not s["done"] and s["req"] is not None]
-            for key, need in _round_missing(pending, groups).items():
-                anchor = next(s for s in pending
-                              if s["spec"].share_key == key)
-                try:
-                    _fill_cache(need, groups[key], anchor["req"].problem,
-                                pool, share_archs)
-                except BaseException as e:
-                    anchor["gen"].throw(e)
-                    raise              # pragma: no cover — throw re-raises
-            for s in pending:
-                req: EvalRequest = s["req"]
-                if req.configs is not None:   # dict path: no row cache
+            with span("campaign.round", cat="campaign",
+                      sessions=len(pending)):
+                for key, need in _round_missing(pending, groups).items():
+                    anchor = next(s for s in pending
+                                  if s["spec"].share_key == key)
                     try:
-                        trials = pool.evaluate(req.configs, arch=req.arch,
-                                               problem=req.problem)
+                        _fill_cache(need, groups[key], anchor["req"].problem,
+                                    pool, share_archs)
                     except BaseException as e:
-                        s["gen"].throw(e)
+                        anchor["gen"].throw(e)
                         raise          # pragma: no cover — throw re-raises
-                else:
-                    cache = groups[s["spec"].share_key]["cache"]
-                    trials = [cache[r][req.arch] for r in req.rows]
-                _advance(s, trials, out, on_session)
+                for s in pending:
+                    req: EvalRequest = s["req"]
+                    if req.configs is not None:   # dict path: no row cache
+                        try:
+                            trials = pool.evaluate(req.configs,
+                                                   arch=req.arch,
+                                                   problem=req.problem)
+                        except BaseException as e:
+                            s["gen"].throw(e)
+                            raise      # pragma: no cover — throw re-raises
+                    else:
+                        cache = groups[s["spec"].share_key]["cache"]
+                        trials = [cache[r][req.arch] for r in req.rows]
+                    _advance(s, trials, out, on_session)
     finally:
         for s in sessions:
             if not s["done"]:
@@ -385,9 +389,12 @@ def _run_campaign_broker(specs: list[SessionSpec],
             req: EvalRequest = s["req"]
             if (not s["done"] and req is not None
                     and req.configs is not None and s.get("job") is None):
-                jid = broker.submit(_payload(s["spec"], [req.arch],
-                                             configs=req.configs,
-                                             sids=[s["spec"].session_id]))
+                with span("broker.submit", cat="broker",
+                          n=len(req.configs)):
+                    jid = broker.submit(
+                        _payload(s["spec"], [req.arch],
+                                 configs=req.configs,
+                                 sids=[s["spec"].session_id]))
                 s["job"] = jid
                 cfg_jobs[jid] = s
         # row-path sessions: merge missing (row, arch) pairs per group
@@ -423,8 +430,10 @@ def _run_campaign_broker(specs: list[SessionSpec],
                                                   share_archs).items():
                 sids = set().union(*(requesters.get((key, r, a), set())
                                      for r in rows for a in aset))
-                jid = broker.submit(_payload(g["spec"], aset, rows=rows,
-                                             sids=sids))
+                with span("broker.submit", cat="broker", n=len(rows),
+                          archs=len(aset)):
+                    jid = broker.submit(_payload(g["spec"], aset, rows=rows,
+                                                 sids=sids))
                 row_jobs[jid] = {"key": key, "rows": rows, "archs": aset,
                                  "sids": sids}
                 in_flight.update({(key, r, a): jid
@@ -488,7 +497,8 @@ def _run_campaign_broker(specs: list[SessionSpec],
 
         _pump_and_submit()
         while any(not s["done"] for s in sessions):
-            done_jobs, failures = broker.collect()
+            with span("broker.collect", cat="broker"):
+                done_jobs, failures = broker.collect()
             # failures of *our* jobs abort the campaign; stale failures
             # from a previous driver run are dropped like stale results
             failures = [f for f in failures

@@ -3,11 +3,13 @@
 Subcommands::
 
     submit   — register a session in a store and run it
-    status   — show every session in a store (or one, with its curve tail)
+    status   — show every session in a store (or one, with its curve tail);
+               --watch for a live ANSI dashboard, --json for machines
     resume   — continue an interrupted session from its journal
     campaign — run a whole grid (problems × tuners × archs × seeds),
                interleaved on one shared worker pool or a broker fleet
     worker   — serve a broker job queue as one detached worker process
+    metrics  — dump or tail a broker fleet's aggregate metrics as JSON
 
 Example::
 
@@ -15,6 +17,28 @@ Example::
         --arch v5e --budget 200 --seed 0 --workers 8 --store experiments/sessions
     python -m repro.orchestrator status --store experiments/sessions
     python -m repro.orchestrator resume <session-id> --store experiments/sessions
+
+Live views and machine-readable output::
+
+    # ANSI refresh loop: progress bars, best-so-far sparklines, worker
+    # lease/heartbeat health (with --broker); ctrl-C to stop
+    python -m repro.orchestrator status --store experiments/sessions --watch
+
+    # one JSON object per session on stdout (same columns as the table)
+    python -m repro.orchestrator status --store experiments/sessions --json
+
+    # aggregate fleet metrics (queue depth, per-worker throughput) as JSON;
+    # --tail re-emits every --interval seconds
+    python -m repro.orchestrator metrics --broker experiments/queue.db
+    python -m repro.orchestrator metrics --broker experiments/queue.db --tail
+
+Span tracing: pass ``--trace FILE`` to submit/campaign/worker to record
+spans (ask/tell, pool chunks, journal writes, broker round-trips) and
+export them on exit — Chrome ``chrome://tracing`` format for ``.json``
+paths, the JSONL grammar otherwise::
+
+    python -m repro.orchestrator submit --problem gemm --tuner genetic \\
+        --budget 200 --store experiments/sessions --trace experiments/trace.json
 
     # portability campaign: one problem, all four generations, arch-shared
     # evaluation (each deduped row measured once for all archs)
@@ -58,6 +82,7 @@ import argparse
 import json
 import math
 import sys
+import time
 
 from .registry import problem_names
 from .runner import resume_session, run_session
@@ -71,47 +96,210 @@ def _fmt_best(best) -> str:
     return f"{best * 1e3:.4f}ms" if best < 1.0 else f"{best:.4f}s"
 
 
-def _leases_by_session(broker) -> dict[str, tuple[str, float]]:
-    """``{session id: (worker, heartbeat age)}`` from in-flight broker
-    jobs — freshest heartbeat wins when several jobs carry one session."""
-    out: dict[str, tuple[str, float]] = {}
+def _fmt_age(seconds: float) -> str:
+    """Humanized duration: ``3.2s`` / ``4.1m`` / ``2.3h``."""
+    if seconds < 120:
+        return f"{seconds:.1f}s"
+    if seconds < 7200:
+        return f"{seconds / 60:.1f}m"
+    return f"{seconds / 3600:.1f}h"
+
+
+def _leases_by_session(broker) -> dict[str, tuple[str, float, bool]]:
+    """``{session id: (worker, heartbeat age, stale)}`` from in-flight
+    broker jobs — freshest heartbeat wins when several jobs carry one
+    session."""
+    out: dict[str, tuple[str, float, bool]] = {}
     for j in broker.in_flight():
         for sid in j["sessions"]:
             if sid not in out or j["heartbeat_age"] < out[sid][1]:
-                out[sid] = (j["worker"], j["heartbeat_age"])
+                out[sid] = (j["worker"], j["heartbeat_age"],
+                            bool(j.get("stale")))
     return out
 
 
-def _print_status(store: SessionStore, sid: str | None,
-                  broker=None) -> int:
-    sids = [sid] if sid else store.list_sessions()
+def _session_rows(store: SessionStore, sids: list[str],
+                  broker=None) -> list[dict]:
+    """One dict per session — the single source for the table, ``--json``
+    and ``--watch`` renderings."""
+    leases = _leases_by_session(broker) if broker is not None else {}
+    rows = []
+    for s in sids:
+        m = store.meta(s)
+        row = {"session": s, "status": m["status"],
+               "evaluated": m.get("evaluated", 0),
+               "budget": m["spec"]["budget"], "best": m.get("best")}
+        if broker is not None:
+            if s in leases:
+                worker, age, stale = leases[s]
+                row.update(worker=worker, heartbeat_age=age, stale=stale)
+            else:
+                row.update(worker=None, heartbeat_age=None, stale=False)
+        rows.append(row)
+    return rows
+
+
+def _lease_cell(row: dict) -> str:
+    if row.get("worker") is not None:
+        age = _fmt_age(row["heartbeat_age"])
+        if row.get("stale"):
+            return f" {row['worker']} (STALE >lease; {age} ago)"
+        return f" {row['worker']} ({age} ago)"
+    if row["status"] == "running":
+        # running in the store but no live lease: the batch is
+        # queued (or its worker just died and the job is requeued)
+        return " (queued)"
+    return ""
+
+
+def _render_status(rows: list[dict], with_broker: bool) -> str:
+    hdr = f"{'session':58s} {'status':12s} {'progress':>12s} {'best':>12s}"
+    if with_broker:
+        hdr += f" {'leased by (heartbeat)':30s}"
+    lines = [hdr, "-" * len(hdr)]
+    for row in rows:
+        prog = f"{row['evaluated']}/{row['budget']}"
+        line = (f"{row['session']:58s} {row['status']:12s} {prog:>12s} "
+                f"{_fmt_best(row['best']):>12s}")
+        if with_broker:
+            line += _lease_cell(row)
+        lines.append(line)
+    return "\n".join(lines)
+
+
+_SPARK_BLOCKS = "▁▂▃▄▅▆▇█"
+
+
+def _best_curve_spark(store: SessionStore, sid: str, width: int = 24) -> str:
+    """Best-so-far objective curve from the session journal as a unicode
+    sparkline (left = first evaluation; lower block = better).  Reads only
+    journal ``"o"`` values — no space needed, cheap enough to poll."""
+    p = store._journal_path(sid)
+    if not p.exists():
+        return ""
+    best = math.inf
+    curve: list[float] = []
+    for line in p.read_text().splitlines():
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError:
+            continue                   # torn line from a crash mid-append
+        o = rec.get("o")
+        if o is not None and o < best:
+            best = o
+        if math.isfinite(best):
+            curve.append(best)
+    if not curve:
+        return ""
+    n = min(width, len(curve))
+    pts = [curve[round(i * (len(curve) - 1) / max(n - 1, 1))]
+           for i in range(n)]
+    lo, hi = min(pts), max(pts)
+    if hi <= lo:
+        return _SPARK_BLOCKS[0] * n
+    return "".join(_SPARK_BLOCKS[round((v - lo) / (hi - lo) * 7)]
+                   for v in pts)
+
+
+def _progress_bar(evaluated: int, budget: int, width: int = 20) -> str:
+    frac = min(1.0, evaluated / budget) if budget else 0.0
+    filled = round(frac * width)
+    return "[" + "#" * filled + "." * (width - filled) + "]"
+
+
+def _render_watch(store: SessionStore, sids: list[str], broker,
+                  interval: float) -> str:
+    """One dashboard frame: per-session progress bars + best-so-far
+    sparklines, plus queue depth and per-worker lease/heartbeat health
+    when a broker is attached."""
+    stamp = time.strftime("%Y-%m-%d %H:%M:%S")
+    out = [f"repro status — {stamp} (refresh {interval:g}s, ctrl-C to stop)"]
+    if broker is not None:
+        c = broker.counts()
+        out.append(f"queue: pending {c.get('pending', 0)}  "
+                   f"leased {c.get('leased', 0)}  done {c.get('done', 0)}  "
+                   f"failed {c.get('failed', 0)}")
+    out.append("")
+    rows = _session_rows(store, sids, broker)
+    for row in rows:
+        bar = _progress_bar(row["evaluated"], row["budget"])
+        prog = f"{row['evaluated']}/{row['budget']}"
+        spark = _best_curve_spark(store, row["session"])
+        line = (f"{row['session']:58s} {row['status']:12s} {bar} "
+                f"{prog:>11s} {_fmt_best(row['best']):>12s}  {spark}")
+        if broker is not None:
+            line += _lease_cell(row)
+        out.append(line)
+    if broker is not None:
+        from ..telemetry.metrics import fleet_snapshot
+        snap = fleet_snapshot(broker)
+        if snap["workers"]:
+            out.append("")
+            out.append("workers:")
+            for w, d in sorted(snap["workers"].items()):
+                health = "STALE >lease" if d.get("stale") else "OK"
+                hb = (f"heartbeat {_fmt_age(d['heartbeat_age'])} ago"
+                      if d.get("heartbeat_age") is not None else "idle")
+                rate = d.get("configs_per_s")
+                rate_s = f"  {rate:.0f} cfg/s" if rate else ""
+                out.append(f"  {w}  leases {d.get('leases', 0)}  {hb}  "
+                           f"{health}{rate_s}")
+    return "\n".join(out)
+
+
+def _print_status(store: SessionStore, sid: str | None, broker=None, *,
+                  as_json: bool = False, watch: bool = False,
+                  interval: float = 2.0, count: int | None = None) -> int:
     if sid and not store.exists(sid):
         print(f"error: no session {sid!r} in {store.root}", file=sys.stderr)
         return 2
-    if not sids:
+    sids = [sid] if sid else store.list_sessions()
+    if not sids and not watch:
         print(f"(no sessions under {store.root})")
         return 0
-    leases = _leases_by_session(broker) if broker is not None else {}
-    hdr = f"{'session':58s} {'status':12s} {'progress':>12s} {'best':>12s}"
-    if broker is not None:
-        hdr += f" {'leased by (heartbeat)':30s}"
-    print(hdr)
-    print("-" * len(hdr))
-    for s in sids:
-        m = store.meta(s)
-        prog = f"{m.get('evaluated', 0)}/{m['spec']['budget']}"
-        line = (f"{s:58s} {m['status']:12s} {prog:>12s} "
-                f"{_fmt_best(m.get('best')):>12s}")
-        if broker is not None:
-            if s in leases:
-                worker, age = leases[s]
-                line += f" {worker} ({age:.1f}s ago)"
-            elif m["status"] == "running":
-                # running in the store but no live lease: the batch is
-                # queued (or its worker just died and the job is requeued)
-                line += " (queued)"
-        print(line)
+    if watch:
+        frames = 0
+        try:
+            while True:
+                frame = _render_watch(store,
+                                      [sid] if sid else store.list_sessions(),
+                                      broker, interval)
+                # curses-free ANSI refresh: clear screen, home cursor
+                print("\x1b[2J\x1b[H" + frame, flush=True)
+                frames += 1
+                if count is not None and frames >= count:
+                    return 0
+                time.sleep(interval)
+        except KeyboardInterrupt:      # pragma: no cover — interactive
+            return 0
+    rows = _session_rows(store, sids, broker)
+    if as_json:
+        for row in rows:
+            print(json.dumps(row, separators=(",", ":")))
+        return 0
+    print(_render_status(rows, with_broker=broker is not None))
     return 0
+
+
+def _run_metrics(broker, *, raw: bool = False, tail: bool = False,
+                 interval: float = 2.0, count: int | None = None) -> int:
+    """``metrics`` subcommand body: dump (or tail) the fleet aggregate."""
+    from ..telemetry.metrics import fleet_snapshot
+    emitted = 0
+    while True:
+        if raw:
+            for s in broker.read_metrics():
+                print(json.dumps(s, separators=(",", ":")))
+        else:
+            print(json.dumps(fleet_snapshot(broker),
+                             separators=(",", ":")), flush=True)
+        emitted += 1
+        if not tail or (count is not None and emitted >= count):
+            return 0
+        try:
+            time.sleep(interval)
+        except KeyboardInterrupt:      # pragma: no cover — interactive
+            return 0
 
 
 def _parse_tuner_args(pairs: list[str], base: dict) -> dict:
@@ -152,6 +340,9 @@ def main(argv: list[str] | None = None) -> int:
                        help="JSON dict of tuner constructor kwargs")
     p_sub.add_argument("--stop-after", type=int, default=None,
                        help="checkpoint-and-stop after N trials")
+    p_sub.add_argument("--trace", default=None, metavar="FILE",
+                       help="record telemetry spans; export on exit "
+                            "(.json => chrome://tracing, else JSONL)")
 
     p_st = sub.add_parser("status", help="show sessions in a store")
     p_st.add_argument("session", nargs="?", default=None)
@@ -159,6 +350,16 @@ def main(argv: list[str] | None = None) -> int:
     p_st.add_argument("--broker", default=None,
                       help="broker db: also show lease holder + heartbeat "
                            "age for sessions being served by the fleet")
+    p_st.add_argument("--json", action="store_true",
+                      help="one JSON object per session (the table's "
+                           "columns, machine-readable)")
+    p_st.add_argument("--watch", action="store_true",
+                      help="live ANSI dashboard: progress bars, best-so-far "
+                           "sparklines, worker health; refresh --interval")
+    p_st.add_argument("--interval", type=float, default=2.0,
+                      help="--watch refresh period, seconds")
+    p_st.add_argument("--count", type=int, default=None,
+                      help="--watch: exit after N frames (default: forever)")
 
     p_re = sub.add_parser("resume", help="continue an interrupted session")
     p_re.add_argument("session")
@@ -201,6 +402,9 @@ def main(argv: list[str] | None = None) -> int:
                       help="SQLite job-queue db: dispatch evaluation to "
                            "detached `worker` processes (async tell) "
                            "instead of an in-process pool")
+    p_ca.add_argument("--trace", default=None, metavar="FILE",
+                      help="record telemetry spans; export on exit "
+                           "(.json => chrome://tracing, else JSONL)")
 
     p_wo = sub.add_parser(
         "worker",
@@ -224,8 +428,64 @@ def main(argv: list[str] | None = None) -> int:
                       help="exit after serving N jobs")
     p_wo.add_argument("--id", default=None,
                       help="worker id shown in status (default host:pid)")
+    p_wo.add_argument("--trace", default=None, metavar="FILE",
+                      help="record telemetry spans; export on exit "
+                           "(.json => chrome://tracing, else JSONL)")
+
+    p_me = sub.add_parser(
+        "metrics",
+        help="dump or tail a broker fleet's aggregate metrics as JSON")
+    p_me.add_argument("--broker", required=True,
+                      help="SQLite job-queue db (shared filesystem path)")
+    p_me.add_argument("--raw", action="store_true",
+                      help="emit the raw per-job samples instead of the "
+                           "aggregate snapshot")
+    p_me.add_argument("--tail", action="store_true",
+                      help="keep emitting (one snapshot per line) every "
+                           "--interval seconds")
+    p_me.add_argument("--interval", type=float, default=2.0,
+                      help="--tail emit period, seconds")
+    p_me.add_argument("--count", type=int, default=None,
+                      help="--tail: exit after N snapshots "
+                           "(default: forever)")
 
     args = ap.parse_args(argv)
+
+    if getattr(args, "trace", None):
+        # enable both layers before any work, export the ring buffer on
+        # the way out (even when the command fails — a trace of the
+        # failure is the point)
+        from .. import telemetry
+        from ..telemetry import trace as trace_mod
+        telemetry.enable()
+        try:
+            return _dispatch(args)
+        finally:
+            if args.trace.endswith(".json"):
+                path = trace_mod.export_chrome(args.trace)
+            else:
+                path = trace_mod.export_jsonl(args.trace)
+            # scope the enable to this command: in-process callers (tests,
+            # notebooks) must not inherit a globally-enabled tracer
+            telemetry.disable()
+            print(f"trace written to {path}", file=sys.stderr)
+    return _dispatch(args)
+
+
+def _dispatch(args) -> int:
+    if args.cmd == "metrics":
+        from pathlib import Path
+
+        from .broker import SQLiteBroker
+        if not Path(args.broker).exists():
+            # read-only like status: never conjure an empty queue db at
+            # a typo'd path and report zero metrics against it
+            print(f"error: no broker db at {args.broker!r}",
+                  file=sys.stderr)
+            return 2
+        return _run_metrics(SQLiteBroker(args.broker), raw=args.raw,
+                            tail=args.tail, interval=args.interval,
+                            count=args.count)
 
     if args.cmd == "worker":
         from .broker import SQLiteBroker
@@ -259,7 +519,9 @@ def main(argv: list[str] | None = None) -> int:
                       file=sys.stderr)
                 return 2
             broker = SQLiteBroker(args.broker)
-        return _print_status(store, args.session, broker)
+        return _print_status(store, args.session, broker,
+                             as_json=args.json, watch=args.watch,
+                             interval=args.interval, count=args.count)
 
     if args.cmd == "submit":
         if args.problem not in problem_names():

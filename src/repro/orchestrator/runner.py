@@ -54,6 +54,8 @@ from typing import Callable, Generator
 from ..core.problem import Trial, TunableProblem
 from ..core.tuners import TUNERS
 from ..core.tuners.base import Tuner, TuneResult
+from ..telemetry import metrics as _metrics
+from ..telemetry.trace import span
 from .registry import make_problem
 from .session import DONE, FAILED, INTERRUPTED, RUNNING, SessionSpec
 from .store import SessionStore
@@ -136,6 +138,16 @@ def session_stepper(spec: SessionSpec, *, problem: TunableProblem,
 
     cache: dict[int, object] = {}
     cap = _batch_cap(tuner)
+    # telemetry handles resolved once (no-ops while metrics are off, so the
+    # per-batch cost of the disabled path is a few no-op method calls).
+    # Telemetry reads the trajectory, never steers it: no rng draws, no
+    # batch reshaping — bit-identity with telemetry off is a contract.
+    _slabel = spec.session_id
+    _c_evals = _metrics.counter("session.evals", session=_slabel)
+    _c_cache = _metrics.counter("session.cache_hits", session=_slabel)
+    _g_best = _metrics.gauge("session.best", session=_slabel)
+    _g_to_best = _metrics.gauge("session.evals_to_best", session=_slabel)
+    _best_seen = math.inf
     # index-native fast path: ask rows, dedup on the rows themselves (a row
     # *is* the flat index), evaluate through the pool's row path.  The ask
     # stream, batch widths, trajectories, and journal are identical to the
@@ -156,14 +168,15 @@ def session_stepper(spec: SessionSpec, *, problem: TunableProblem,
             # diverge from the never-interrupted one.  A real kill has the
             # same semantics — only whole journaled batches survive.
             n = min(cap, spec.budget - len(res.trials))
-            if native:
-                keys = [int(r) for r in tuner.ask_rows(max(1, n))]
-                cfgs: list = []
-            else:
-                cfgs = tuner.ask_batch(n)
-                keys = [int(k) for k in space.flat_index_many(cfgs)] \
-                    if len(cfgs) > 1 else \
-                    [space.flat_index(cfgs[0])] if cfgs else []
+            with span("session.ask", cat="session", n=n):
+                if native:
+                    keys = [int(r) for r in tuner.ask_rows(max(1, n))]
+                    cfgs: list = []
+                else:
+                    cfgs = tuner.ask_batch(n)
+                    keys = [int(k) for k in space.flat_index_many(cfgs)] \
+                        if len(cfgs) > 1 else \
+                        [space.flat_index(cfgs[0])] if cfgs else []
             if not keys:
                 # an empty ask is a finished() signal: a tuner whose
                 # exhaustion flips mid-batch may legally return fewer
@@ -175,10 +188,12 @@ def session_stepper(spec: SessionSpec, *, problem: TunableProblem,
             consume = [False] * len(keys)
             fresh: list[int] = []          # positions to actually evaluate
             first_seen: dict[int, int] = {}
+            cache_hits = 0
             for j, key in enumerate(keys):
                 if key in cache:
                     results[j] = cache[key]
                     consume[j] = not spec.unique
+                    cache_hits += 1
                 elif key in replay:        # answered from the journal
                     entry = replay[key]
                     entry[1] -= 1
@@ -213,14 +228,24 @@ def session_stepper(spec: SessionSpec, *, problem: TunableProblem,
 
             if store is not None and journal_records:
                 store.append_trials(sid, space, journal_records)
-            if native:
-                tuner.tell_rows(keys, [t.objective if t.ok else math.inf
-                                       for t in results])
-            else:
-                tuner.tell_batch(results)
+            with span("session.tell", cat="session", n=len(keys)):
+                if native:
+                    tuner.tell_rows(keys, [t.objective if t.ok else math.inf
+                                           for t in results])
+                else:
+                    tuner.tell_batch(results)
             for j in range(len(keys)):
                 if consume[j]:
                     res.trials.append(results[j])
+            if _metrics.is_enabled():
+                _c_evals.inc(len(fresh))
+                _c_cache.inc(cache_hits)
+                batch_best = min((t.objective for t in results if t.ok),
+                                 default=math.inf)
+                if batch_best < _best_seen:
+                    _best_seen = batch_best
+                    _g_best.set(batch_best)
+                    _g_to_best.set(len(res.trials))
 
             if store is not None:
                 b = res.best

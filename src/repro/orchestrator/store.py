@@ -32,6 +32,7 @@ from ..core.problem import Trial, TunableProblem
 from ..core.results import ResultsDB, ResultTable
 from ..core.space import SearchSpace
 from ..core.tuners.base import TuneResult
+from ..telemetry.trace import span
 from .session import CREATED, SessionSpec
 
 
@@ -158,7 +159,8 @@ class SessionStore:
             lines.append(json.dumps(rec, separators=(",", ":")))
         if not lines:
             return
-        with open(self._journal_path(sid), "ab+") as f:
+        with span("journal.append", cat="store", n=len(lines)), \
+                open(self._journal_path(sid), "ab+") as f:
             # a crash mid-append can leave a torn final line; never glue new
             # records onto it — the torn line must stay its own (skippable) line
             if f.tell() > 0:
@@ -225,8 +227,10 @@ class SessionStore:
     def publish_trace(self, sid: str, problem: TunableProblem,
                       result: TuneResult) -> Path:
         """Write the completed trace as a ResultTable through ResultsDB."""
-        table = ResultTable.from_trials(problem, result.arch, result.trials,
-                                        protocol=f"session_{sid}")
-        table.meta = {"tuner": result.tuner, "seed": result.seed,
-                      "session": sid}
-        return self.tables.put(table)
+        with span("journal.publish", cat="store", n=len(result.trials)):
+            table = ResultTable.from_trials(problem, result.arch,
+                                            result.trials,
+                                            protocol=f"session_{sid}")
+            table.meta = {"tuner": result.tuner, "seed": result.seed,
+                          "session": sid}
+            return self.tables.put(table)

@@ -36,6 +36,7 @@ from typing import Sequence
 
 from ..core.problem import MeasuredProblem, Trial, TunableProblem
 from ..core.space import Config
+from ..telemetry.trace import span
 from .queue import DONE, JobQueue
 
 
@@ -49,18 +50,23 @@ _THREAD_CHUNK_FLOOR = 32
 
 def _evaluate_chunk(problem: TunableProblem, configs: list[Config],
                     arch: str) -> list[Trial]:
-    # module-level so the process pool can pickle it
-    return problem.evaluate_many(configs, arch)
+    # module-level so the process pool can pickle it.  Chunk spans record
+    # in the executing thread's (or, for process mode, the child's own)
+    # ring buffer — per-chunk, never per-config.
+    with span("pool.chunk", cat="pool", n=len(configs), arch=arch):
+        return problem.evaluate_many(configs, arch)
 
 
 def _evaluate_rows_chunk(problem: TunableProblem, rows: list[int],
                          arch: str) -> list[Trial]:
-    return problem.trials_for_rows(rows, arch)
+    with span("pool.chunk", cat="pool", n=len(rows), arch=arch):
+        return problem.trials_for_rows(rows, arch)
 
 
 def _evaluate_rows_archs_chunk(problem: TunableProblem, rows: list[int],
                                archs: tuple[str, ...]) -> list[list[Trial]]:
-    return problem.trials_for_rows_archs(rows, archs)
+    with span("pool.chunk", cat="pool", n=len(rows), archs=len(archs)):
+        return problem.trials_for_rows_archs(rows, archs)
 
 
 def _evaluate_one(problem: TunableProblem, config: Config, arch: str) -> Trial:
@@ -178,9 +184,11 @@ class WorkerPool:
             return {a: self.evaluate(cfgs, a, problem=problem) for a in archs}
 
         ex = self._executor()
-        done, retry, broken = self._run_chunks(
-            rows, lambda chunk: ex.submit(_evaluate_rows_archs_chunk,
-                                          problem, chunk, archs))
+        with span("pool.evaluate", cat="pool", n=len(rows),
+                  archs=len(archs), mode=self.mode):
+            done, retry, broken = self._run_chunks(
+                rows, lambda chunk: ex.submit(_evaluate_rows_archs_chunk,
+                                              problem, chunk, archs))
         out: dict[str, list] = {a: [None] * len(rows) for a in archs}
         for lo, hi, per_arch in done:
             for a, trials in zip(archs, per_arch):
@@ -238,8 +246,11 @@ class WorkerPool:
         ex = self._executor()
 
         # 1. chunked fast path: one evaluate_many per worker
-        done, retry, broken = self._run_chunks(
-            items, lambda chunk: ex.submit(chunk_fn, problem, chunk, arch))
+        with span("pool.evaluate", cat="pool", n=len(items), arch=arch,
+                  mode=self.mode):
+            done, retry, broken = self._run_chunks(
+                items, lambda chunk: ex.submit(chunk_fn, problem, chunk,
+                                               arch))
         out: list[Trial | None] = [None] * len(items)
         for lo, hi, trials in done:
             out[lo:hi] = trials
@@ -389,9 +400,35 @@ class BrokerWorker:
         # eventual complete/fail will be rejected (concurrent-worker dedup)
         interval = max(self.lease_s / 3.0, 0.01)
         while not stop.wait(interval):
-            if not self.broker.heartbeat(job_id, self.worker_id,
-                                         self.lease_s):
+            with span("broker.heartbeat", cat="broker", job=job_id):
+                alive = self.broker.heartbeat(job_id, self.worker_id,
+                                              self.lease_s)
+            if not alive:
                 return
+
+    def _record_job_metrics(self, result: dict, seconds: float) -> None:
+        """Durable per-job throughput samples into the broker's metrics
+        stream.  Always recorded (not gated by the in-process telemetry
+        flag): one insert per *job* — a whole evaluation batch — so the
+        cost is noise, and the fleet view works without every worker
+        opting in.  Recorded before ``complete``, so the samples survive
+        even when the lease was lost and the result is rejected — the
+        work happened either way."""
+        trials = result["arch_trials"]
+        evals = sum(len(ts) for ts in trials.values())
+        poison = sum(1 for ts in trials.values()
+                     for _, _, info in ts if info.get("poison"))
+        try:
+            self.broker.record_metrics(self.worker_id, [
+                {"name": "jobs", "value": 1, "kind": "counter"},
+                {"name": "evals", "value": evals, "kind": "counter"},
+                {"name": "eval_s", "value": seconds, "kind": "counter"},
+                {"name": "poison", "value": poison, "kind": "counter"},
+                {"name": "configs_per_s", "kind": "gauge",
+                 "value": evals / seconds if seconds > 0 else 0.0},
+            ])
+        except Exception as e:    # telemetry must never take down a worker
+            self.log(f"job metrics record failed: {e!r}")
 
     def serve_one(self, job_id: int, payload: dict) -> bool:
         """Evaluate one leased job; returns True if the result landed."""
@@ -399,20 +436,25 @@ class BrokerWorker:
         hb = threading.Thread(target=self._heartbeat_loop,
                               args=(job_id, stop), daemon=True)
         hb.start()
+        t0 = time.monotonic()
         try:
-            result = self._evaluate(payload)
+            with span("worker.job", cat="worker", job=job_id):
+                result = self._evaluate(payload)
         except Exception as e:
             # evaluation infrastructure error: requeue the job (attempts-
             # capped).  KeyboardInterrupt/SystemExit propagate instead —
             # the worker dies and the lease expires, which is the same
             # requeue without burning an attempt on an operator Ctrl-C.
-            self.broker.fail(job_id, self.worker_id, repr(e))
+            with span("broker.fail", cat="broker", job=job_id):
+                self.broker.fail(job_id, self.worker_id, repr(e))
             self.log(f"job {job_id} failed: {e!r}")
             return False
         finally:
             stop.set()
             hb.join()
-        ok = self.broker.complete(job_id, self.worker_id, result)
+        self._record_job_metrics(result, time.monotonic() - t0)
+        with span("broker.complete", cat="broker", job=job_id):
+            ok = self.broker.complete(job_id, self.worker_id, result)
         self.log(f"job {job_id} {'done' if ok else 'lost lease'}")
         return ok
 
@@ -432,7 +474,8 @@ class BrokerWorker:
                 break
             if max_jobs is not None and served >= max_jobs:
                 break
-            leased = self.broker.lease(self.worker_id, self.lease_s)
+            with span("broker.lease", cat="broker"):
+                leased = self.broker.lease(self.worker_id, self.lease_s)
             if leased is None:
                 if (max_idle_s is not None
                         and time.time() - idle_since > max_idle_s):

@@ -471,3 +471,99 @@ def test_detached_workers_kill_one_midcampaign_trace_identical(tmp_path):
     for sid in ref:
         assert _traces_equal(ref[sid], res[sid]), sid
         assert store.meta(sid)["status"] == "done"
+
+
+# --------------------------------------------------------------------- #
+# worker metrics: the broker-backed fleet telemetry table
+# --------------------------------------------------------------------- #
+def test_metrics_snapshot_after_complete(broker):
+    """A real BrokerWorker records its per-job counters into the broker's
+    metrics table as part of serving a job — no telemetry opt-in needed —
+    and the totals match the session's published trace."""
+    from repro.telemetry.metrics import aggregate_samples
+
+    spec = SessionSpec(problem="toy_quad", tuner="genetic", budget=24,
+                       seed=3)
+    with _fleet(broker, n=1):
+        res = run_session(spec, broker=broker)
+    per_worker = aggregate_samples(broker.read_metrics())
+    assert len(per_worker) == 1
+    (_, m), = per_worker.items()
+    assert m["jobs"] >= 1
+    assert m["evals"] == len(res.trials)          # every trial billed once
+    assert m["eval_s"] > 0.0
+    assert m.get("poison", 0.0) == 0.0
+    assert m["configs_per_s"] > 0.0               # gauge, last batch
+
+
+def test_metrics_aggregation_matches_per_job_ground_truth(broker):
+    """Counters sum and gauges last-write-win across an explicit sequence
+    of per-job recordings — the aggregation contract, backend-identical."""
+    from repro.telemetry.metrics import aggregate_samples
+
+    truth = {"w1": [(4, 0.25), (6, 0.5)], "w2": [(8, 1.0)]}
+    for w, jobs in truth.items():
+        for evals, secs in jobs:
+            broker.record_metrics(w, [
+                {"name": "jobs", "value": 1, "kind": "counter"},
+                {"name": "evals", "value": evals, "kind": "counter"},
+                {"name": "eval_s", "value": secs, "kind": "counter"},
+                {"name": "configs_per_s", "value": evals / secs,
+                 "kind": "gauge"},
+            ])
+    agg = aggregate_samples(broker.read_metrics())
+    for w, jobs in truth.items():
+        assert agg[w]["jobs"] == len(jobs)
+        assert agg[w]["evals"] == sum(e for e, _ in jobs)
+        assert agg[w]["eval_s"] == pytest.approx(sum(s for _, s in jobs))
+        e, s = jobs[-1]                           # gauge: last write wins
+        assert agg[w]["configs_per_s"] == pytest.approx(e / s)
+    # filtered reads
+    assert {r["worker"] for r in broker.read_metrics(worker="w1")} == {"w1"}
+    assert {r["name"] for r in broker.read_metrics(name="jobs")} == {"jobs"}
+
+
+def test_metrics_survive_requeue_and_collect(broker):
+    """A worker that dies mid-lease (stops heartbeating, never completes)
+    keeps its recorded counters: samples are append-only and exempt from
+    ``collect``/``reap`` cleanup, so a post-mortem sees the dead worker's
+    progress next to the survivor's."""
+    from repro.telemetry.metrics import aggregate_samples
+
+    jid = broker.submit({"problem": "toy_quad", "archs": ["v5e"],
+                         "rows": [1], "sessions": []})
+    assert broker.lease("w-dead", lease_s=0.05)[0] == jid
+    # the doomed worker got some work done before the SIGKILL-equivalent
+    broker.record_metrics("w-dead", [
+        {"name": "jobs", "value": 1, "kind": "counter"},
+        {"name": "evals", "value": 3, "kind": "counter"}])
+    time.sleep(0.1)                               # lease expires, no reap
+    assert broker.lease("w-live", lease_s=30.0)[0] == jid   # requeued
+    broker.record_metrics("w-live", [
+        {"name": "jobs", "value": 1, "kind": "counter"},
+        {"name": "evals", "value": 3, "kind": "counter"}])
+    assert broker.complete(jid, "w-live", {"arch_trials": {"v5e": []}})
+    done, _ = broker.collect()                    # job rows cleaned up...
+    assert list(done) == [jid]
+    agg = aggregate_samples(broker.read_metrics())
+    assert agg["w-dead"]["evals"] == 3            # ...metrics rows are not
+    assert agg["w-live"]["evals"] == 3
+    assert agg["w-dead"]["jobs"] == agg["w-live"]["jobs"] == 1
+
+
+def test_in_flight_reports_stale_leases(broker):
+    """``in_flight`` flags an expired lease (and its negative remaining
+    time) without requeueing anything — it is a pure read for dashboards."""
+    jid = broker.submit({"problem": "toy_quad", "archs": ["v5e"],
+                         "rows": [1], "sessions": []})
+    broker.lease("w-slow", lease_s=0.05)
+    flight = broker.in_flight()
+    assert len(flight) == 1 and flight[0]["stale"] is False
+    assert flight[0]["lease_remaining"] > 0.0
+    time.sleep(0.1)
+    flight = broker.in_flight()
+    assert flight[0]["stale"] is True
+    assert flight[0]["lease_remaining"] < 0.0
+    assert flight[0]["job"] == jid
+    # still leased from the queue's point of view until someone reaps
+    assert broker.counts()[LEASED] == 1

@@ -76,7 +76,8 @@ def test_docs_actually_quote_commands():
     joined = " ".join(ALL_COMMANDS)
     for module in ("benchmarks.run", "benchmarks.table_portability"):
         assert module in joined, f"{module} not documented"
-    for sub in ("submit", "status", "resume", "campaign", "worker"):
+    for sub in ("submit", "status", "resume", "campaign", "worker",
+                "metrics"):
         assert any(f"repro.orchestrator {sub}" in c for c in ALL_COMMANDS), \
             f"orchestrator subcommand {sub!r} not documented"
 
@@ -91,7 +92,8 @@ def test_quoted_command_matches_entry_point(cmd, capsys):
             assert e.value.code == 0
             return
         sub = parts[3]
-        assert sub in ("submit", "status", "resume", "campaign", "worker"), \
+        assert sub in ("submit", "status", "resume", "campaign", "worker",
+                       "metrics"), \
             f"unknown subcommand in {cmd!r}"
         # argparse exits 0 on --help and would exit 2 on unknown flags —
         # but --help doesn't validate, so check each flag against the
