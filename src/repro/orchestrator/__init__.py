@@ -12,17 +12,21 @@ broker lease protocol).
 
 from .broker import Broker, MemoryBroker, SQLiteBroker
 from .campaign import Campaign, run_campaign
+from .chaos import FaultPlan, FaultRule
+from .doctor import diagnose
 from .queue import Job, JobQueue
 from .registry import make_problem, problem_names
 from .runner import (EvalRequest, resume_session, run_session,
                      session_stepper)
 from .session import SessionSpec
 from .store import SessionStore
+from .supervisor import FleetSupervisor
 from .workers import BrokerWorker, WorkerPool
 
 __all__ = [
-    "Broker", "BrokerWorker", "Campaign", "EvalRequest", "Job", "JobQueue",
-    "MemoryBroker", "SQLiteBroker", "SessionSpec", "SessionStore",
-    "WorkerPool", "make_problem", "problem_names", "resume_session",
+    "Broker", "BrokerWorker", "Campaign", "EvalRequest", "FaultPlan",
+    "FaultRule", "FleetSupervisor", "Job", "JobQueue", "MemoryBroker",
+    "SQLiteBroker", "SessionSpec", "SessionStore", "WorkerPool",
+    "diagnose", "make_problem", "problem_names", "resume_session",
     "run_campaign", "run_session", "session_stepper",
 ]

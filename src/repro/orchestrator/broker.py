@@ -63,6 +63,7 @@ trials journal and publish bit-identically to in-process ones).
 
 from __future__ import annotations
 
+import functools
 import json
 import os
 import sqlite3
@@ -71,6 +72,7 @@ import time
 import uuid
 from pathlib import Path
 
+from . import chaos
 from .queue import DONE, FAILED, LEASED, PENDING
 
 __all__ = ["Broker", "MemoryBroker", "SQLiteBroker",
@@ -78,7 +80,9 @@ __all__ = ["Broker", "MemoryBroker", "SQLiteBroker",
 
 
 def _now() -> float:
-    return time.time()
+    # the chaos plane can skew one reading (site broker.clock.skew) to
+    # attack the lease arithmetic; 0.0 whenever chaos is off
+    return time.time() + chaos.skew()
 
 
 # --------------------------------------------------------------------- #
@@ -383,6 +387,10 @@ class _Tx:
         self.conn = conn
 
     def __enter__(self) -> sqlite3.Cursor:
+        busy = chaos.fire("broker.busy")
+        if busy is not None:
+            # what sqlite raises when busy_timeout expires under a storm
+            raise sqlite3.OperationalError("database is locked (chaos)")
         self.conn.execute("BEGIN IMMEDIATE")
         return self.conn.cursor()
 
@@ -391,6 +399,34 @@ class _Tx:
             self.conn.execute("COMMIT")
         else:
             self.conn.execute("ROLLBACK")
+
+
+def _busy_retry(fn):
+    """Re-run a whole broker transaction on SQLITE_BUSY.
+
+    WAL + ``busy_timeout`` absorb ordinary contention, but when the
+    timeout itself expires (a lock storm, a worker wedged mid-COMMIT on
+    a sick filesystem) sqlite raises OperationalError — which without
+    this wrapper would crash a worker loop over a *transient* condition.
+    Retries are bounded (``busy_retries``) with exponential backoff, and
+    are safe because every broker mutation is a single self-contained
+    IMMEDIATE transaction: nothing committed yet when BEGIN/COMMIT fails.
+    """
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        delay = 0.01
+        retries = getattr(self, "busy_retries", 0)
+        for attempt in range(retries + 1):
+            try:
+                return fn(self, *args, **kwargs)
+            except sqlite3.OperationalError as e:
+                msg = str(e).lower()
+                if ("locked" not in msg and "busy" not in msg) \
+                        or attempt == retries:
+                    raise
+                time.sleep(delay)
+                delay = min(delay * 2, 0.2)
+    return wrapper
 
 
 _SCHEMA = """
@@ -431,10 +467,14 @@ class SQLiteBroker(Broker):
     """
 
     def __init__(self, path: str | Path, max_attempts: int = 3,
-                 timeout_s: float = 30.0):
+                 timeout_s: float = 30.0, busy_retries: int = 5):
         self.path = Path(path)
         self.max_attempts = max_attempts
         self.timeout_s = timeout_s
+        # SQLITE_BUSY past the busy_timeout is transient, not fatal: each
+        # mutation (one self-contained IMMEDIATE tx) re-runs up to this
+        # many times with backoff before the error propagates
+        self.busy_retries = busy_retries
         self._local = threading.local()
         self.path.parent.mkdir(parents=True, exist_ok=True)
         self._conn().executescript(_SCHEMA)        # idempotent
@@ -463,6 +503,7 @@ class SQLiteBroker(Broker):
             self._local.conn = None
 
     # -- protocol ---------------------------------------------------------- #
+    @_busy_retry
     def submit(self, payload: dict) -> int:
         with self._tx() as cur:
             cur.execute(
@@ -485,10 +526,12 @@ class SQLiteBroker(Broker):
              LEASED, now))
         return cur.rowcount
 
+    @_busy_retry
     def reap(self) -> int:
         with self._tx() as cur:
             return self._reap_cur(cur)
 
+    @_busy_retry
     def lease(self, worker: str, lease_s: float) -> tuple[int, dict] | None:
         with self._tx() as cur:
             self._reap_cur(cur)
@@ -504,6 +547,7 @@ class SQLiteBroker(Broker):
                 (LEASED, worker, now + lease_s, now, row["id"]))
             return row["id"], json.loads(row["payload"])
 
+    @_busy_retry
     def heartbeat(self, job_id: int, worker: str, lease_s: float) -> bool:
         with self._tx() as cur:
             now = _now()
@@ -513,6 +557,7 @@ class SQLiteBroker(Broker):
                 (now + lease_s, now, job_id, LEASED, worker))
             return cur.rowcount == 1
 
+    @_busy_retry
     def complete(self, job_id: int, worker: str, result: dict) -> bool:
         with self._tx() as cur:
             cur.execute(
@@ -522,6 +567,7 @@ class SQLiteBroker(Broker):
                  job_id, LEASED, worker))
             return cur.rowcount == 1
 
+    @_busy_retry
     def fail(self, job_id: int, worker: str, error: str) -> bool:
         with self._tx() as cur:
             cur.execute(
@@ -533,6 +579,7 @@ class SQLiteBroker(Broker):
                  job_id, LEASED, worker))
             return cur.rowcount == 1
 
+    @_busy_retry
     def attach_sessions(self, job_id: int, sids) -> bool:
         with self._tx() as cur:
             row = cur.execute("SELECT payload FROM jobs WHERE id=?",
@@ -547,6 +594,7 @@ class SQLiteBroker(Broker):
                          job_id))
             return True
 
+    @_busy_retry
     def collect(self) -> tuple[dict[int, dict], list[dict]]:
         with self._tx() as cur:
             self._reap_cur(cur)
@@ -588,6 +636,7 @@ class SQLiteBroker(Broker):
                     "SELECT id, worker, heartbeat, lease_expires, attempts,"
                     " payload FROM jobs WHERE state = ?", (LEASED,))]
 
+    @_busy_retry
     def record_metrics(self, worker: str, samples, ts: float | None = None
                        ) -> None:
         ts = _now() if ts is None else ts

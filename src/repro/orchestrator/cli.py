@@ -9,7 +9,12 @@ Subcommands::
     campaign — run a whole grid (problems × tuners × archs × seeds),
                interleaved on one shared worker pool or a broker fleet
     worker   — serve a broker job queue as one detached worker process
+    fleet    — supervise a self-healing fleet of worker processes:
+               restart-with-backoff, crash-loop quarantine, queue-depth
+               autoscaling between --min/--max, SIGTERM = graceful drain
     metrics  — dump or tail a broker fleet's aggregate metrics as JSON
+    doctor   — offline integrity check of a store (+ broker): torn
+               journal lines, orphaned RUNNING sessions, stale leases
 
 Example::
 
@@ -65,6 +70,37 @@ bit-identical to the in-process run::
     # who is working on what (lease holder + heartbeat age per session):
     python -m repro.orchestrator status --store experiments/sessions \\
         --broker experiments/queue.db
+
+Self-healing fleets: instead of starting workers by hand, let the
+supervisor keep the fleet between ``--min`` and ``--max`` processes
+(sized from queue depth), restart crashes with exponential backoff,
+quarantine crash-looping slots, and drain gracefully on SIGTERM/ctrl-C
+(every worker finishes its in-flight job first).  ``--job-timeout``
+arms the evaluation watchdog: a hung measurement becomes a journaled
+timeout-poison trial instead of pinning a lease until reap::
+
+    python -m repro.orchestrator fleet --broker experiments/queue.db \\
+        --min 2 --max 6 --lease 30 --job-timeout 300
+
+    # workers started by hand get the same drain + watchdog behavior:
+    python -m repro.orchestrator worker --broker experiments/queue.db \\
+        --job-timeout 300 --max-idle 60
+
+Campaign state health (read-only; exit 1 when problems are found)::
+
+    python -m repro.orchestrator doctor --store experiments/sessions \\
+        --broker experiments/queue.db --json
+
+Chaos engineering: ``--chaos PLAN.json`` (or ``REPRO_CHAOS``) arms the
+deterministic fault-injection plane — seeded schedules of worker
+crashes, evaluation hangs, heartbeat stalls, torn journal appends, lock
+storms and clock skew at named sites (see ``chaos.SITES``), replayable
+exactly for tests and ``benchmarks/chaos_bench.py``::
+
+    python -m repro.orchestrator worker --broker experiments/queue.db \\
+        --chaos plan.json
+    python -m repro.orchestrator fleet --broker experiments/queue.db \\
+        --min 2 --max 4 --chaos plan.json    # workers inherit the plan
 
 Per-tuner settings ride the spec: ``--tuner-arg k=v`` (repeatable, JSON
 values) merges into every session's ``tuner_kwargs`` — e.g. ``--tuner-arg
@@ -242,8 +278,15 @@ def _render_watch(store: SessionStore, sids: list[str], broker,
                       if d.get("heartbeat_age") is not None else "idle")
                 rate = d.get("configs_per_s")
                 rate_s = f"  {rate:.0f} cfg/s" if rate else ""
+                # robustness counters, shown only when nonzero: watchdog
+                # fires, abandoned batches, supervisor restart activity
+                extra = "".join(
+                    f"  {k} {int(d[k])}"
+                    for k in ("timeouts", "abandoned", "restarts",
+                              "quarantines", "fleet_size")
+                    if d.get(k))
                 out.append(f"  {w}  leases {d.get('leases', 0)}  {hb}  "
-                           f"{health}{rate_s}")
+                           f"{health}{rate_s}{extra}")
     return "\n".join(out)
 
 
@@ -340,6 +383,10 @@ def main(argv: list[str] | None = None) -> int:
                        help="JSON dict of tuner constructor kwargs")
     p_sub.add_argument("--stop-after", type=int, default=None,
                        help="checkpoint-and-stop after N trials")
+    p_sub.add_argument("--chaos", default=None, metavar="PLAN",
+                       help="fault-injection plan (JSON file path or inline "
+                            "JSON): arm the deterministic chaos plane in "
+                            "this process")
     p_sub.add_argument("--trace", default=None, metavar="FILE",
                        help="record telemetry spans; export on exit "
                             "(.json => chrome://tracing, else JSONL)")
@@ -402,6 +449,10 @@ def main(argv: list[str] | None = None) -> int:
                       help="SQLite job-queue db: dispatch evaluation to "
                            "detached `worker` processes (async tell) "
                            "instead of an in-process pool")
+    p_ca.add_argument("--chaos", default=None, metavar="PLAN",
+                      help="fault-injection plan (JSON file path or inline "
+                           "JSON): arm the deterministic chaos plane in "
+                           "this process")
     p_ca.add_argument("--trace", default=None, metavar="FILE",
                       help="record telemetry spans; export on exit "
                            "(.json => chrome://tracing, else JSONL)")
@@ -428,9 +479,64 @@ def main(argv: list[str] | None = None) -> int:
                       help="exit after serving N jobs")
     p_wo.add_argument("--id", default=None,
                       help="worker id shown in status (default host:pid)")
+    p_wo.add_argument("--job-timeout", type=float, default=None,
+                      help="evaluation watchdog: wall-clock seconds per "
+                           "job batch / per-config retry attempt; a hung "
+                           "measurement becomes a journaled timeout-poison "
+                           "trial (default: wait forever)")
+    p_wo.add_argument("--chaos", default=None, metavar="PLAN",
+                      help="fault-injection plan (JSON file path or inline "
+                           "JSON): arm the deterministic chaos plane in "
+                           "this process")
     p_wo.add_argument("--trace", default=None, metavar="FILE",
                       help="record telemetry spans; export on exit "
                            "(.json => chrome://tracing, else JSONL)")
+
+    p_fl = sub.add_parser(
+        "fleet",
+        help="supervise a self-healing fleet of worker processes")
+    p_fl.add_argument("--broker", required=True,
+                      help="SQLite job-queue db (shared filesystem path)")
+    p_fl.add_argument("--min", type=int, default=1, dest="min_workers",
+                      help="minimum live worker processes")
+    p_fl.add_argument("--max", type=int, default=4, dest="max_workers",
+                      help="maximum live worker processes")
+    p_fl.add_argument("--workers", type=int, default=2,
+                      help="evaluation threads/processes inside each worker")
+    p_fl.add_argument("--mode", default="auto",
+                      choices=("auto", "thread", "process"))
+    p_fl.add_argument("--lease", type=float, default=30.0,
+                      help="job lease seconds passed to each worker")
+    p_fl.add_argument("--poll", type=float, default=0.05,
+                      help="worker idle queue poll interval, seconds")
+    p_fl.add_argument("--job-timeout", type=float, default=None,
+                      help="evaluation watchdog budget passed to each "
+                           "worker (seconds)")
+    p_fl.add_argument("--backoff", type=float, default=0.5,
+                      help="base restart backoff, seconds (doubles per "
+                           "consecutive fast crash)")
+    p_fl.add_argument("--crash-loop", type=int, default=5,
+                      help="consecutive fast crashes before a slot is "
+                           "quarantined")
+    p_fl.add_argument("--quarantine", type=float, default=60.0,
+                      help="quarantine hold, seconds")
+    p_fl.add_argument("--scale-down-after", type=float, default=10.0,
+                      help="retire surplus workers only after demand has "
+                           "been below fleet size this many seconds")
+    p_fl.add_argument("--interval", type=float, default=0.5,
+                      help="supervisor tick period, seconds")
+    p_fl.add_argument("--chaos", default=None, metavar="PLAN",
+                      help="fault-injection plan (JSON file path or inline "
+                           "JSON), exported to every spawned worker via "
+                           "REPRO_CHAOS")
+    p_fl.add_argument("--log-dir", default=None,
+                      help="per-worker stdout/stderr log files (default: "
+                           "discard)")
+    p_fl.add_argument("--max-runtime", type=float, default=None,
+                      help="stop supervising after this many seconds")
+    p_fl.add_argument("--drain-after", type=float, default=None,
+                      help="exit once the queue has been empty this many "
+                           "seconds")
 
     p_me = sub.add_parser(
         "metrics",
@@ -448,6 +554,16 @@ def main(argv: list[str] | None = None) -> int:
     p_me.add_argument("--count", type=int, default=None,
                       help="--tail: exit after N snapshots "
                            "(default: forever)")
+
+    p_dr = sub.add_parser(
+        "doctor",
+        help="offline integrity check of a session store (+ broker)")
+    p_dr.add_argument("--store", required=True, help="session store dir")
+    p_dr.add_argument("--broker", default=None,
+                      help="broker db: also check leases, failed jobs and "
+                           "metrics-table sanity")
+    p_dr.add_argument("--json", action="store_true",
+                      help="emit the full report as one JSON object")
 
     args = ap.parse_args(argv)
 
@@ -472,7 +588,31 @@ def main(argv: list[str] | None = None) -> int:
     return _dispatch(args)
 
 
+def _drain_signals(note: str):
+    """Install SIGTERM/SIGINT handlers that set (and return) a stop
+    event — first signal drains gracefully, printing ``note``.  No-op
+    (still returns the event) off the main thread, where the ``signal``
+    module refuses handlers (e.g. CLI funcs driven from test threads)."""
+    import signal
+    import threading
+    stop = threading.Event()
+
+    def _handler(signum, frame):        # pragma: no cover — signal path
+        print(note, file=sys.stderr, flush=True)
+        stop.set()
+
+    if threading.current_thread() is threading.main_thread():
+        signal.signal(signal.SIGTERM, _handler)
+        signal.signal(signal.SIGINT, _handler)
+    return stop
+
+
 def _dispatch(args) -> int:
+    if getattr(args, "chaos", None):
+        # arm this process's chaos plane before any work touches a seam
+        from .chaos import FaultPlan, install
+        install(FaultPlan.load(args.chaos))
+
     if args.cmd == "metrics":
         from pathlib import Path
 
@@ -494,17 +634,67 @@ def _dispatch(args) -> int:
             SQLiteBroker(args.broker), worker_id=args.id,
             workers=args.workers, mode=args.mode,
             max_retries=args.max_retries, lease_s=args.lease,
-            poll_s=args.poll,
+            poll_s=args.poll, job_timeout_s=args.job_timeout,
             log=lambda msg: print(msg, file=sys.stderr, flush=True))
+        # SIGTERM/ctrl-C = graceful drain: the in-flight job finishes and
+        # is completed/failed at the broker before the loop exits
+        stop = _drain_signals(
+            f"worker {worker.worker_id} draining (finishing in-flight job)")
         print(f"worker {worker.worker_id} serving {args.broker}",
               file=sys.stderr, flush=True)
         served = worker.run(max_jobs=args.max_jobs,
-                            max_idle_s=args.max_idle)
+                            max_idle_s=args.max_idle, stop=stop)
         print(f"worker {worker.worker_id} exiting after {served} job(s)",
               file=sys.stderr, flush=True)
         return 0
 
+    if args.cmd == "fleet":
+        from .broker import SQLiteBroker
+        from .supervisor import FleetSupervisor
+        sup = FleetSupervisor(
+            SQLiteBroker(args.broker),
+            min_workers=args.min_workers, max_workers=args.max_workers,
+            eval_workers=args.workers, mode=args.mode, lease_s=args.lease,
+            poll_s=args.poll, job_timeout_s=args.job_timeout,
+            backoff_base_s=args.backoff,
+            crash_loop_threshold=args.crash_loop,
+            quarantine_s=args.quarantine,
+            scale_down_after_s=args.scale_down_after,
+            interval_s=args.interval, chaos_plan=args.chaos,
+            log_dir=args.log_dir,
+            log=lambda msg: print(msg, file=sys.stderr, flush=True))
+        stop = _drain_signals(
+            f"fleet {sup.sup_id} draining (workers finish in-flight jobs)")
+        print(f"fleet {sup.sup_id} supervising {args.broker} "
+              f"({args.min_workers}..{args.max_workers} workers)",
+              file=sys.stderr, flush=True)
+        events = sup.run(stop=stop, max_runtime_s=args.max_runtime,
+                         drain_on_empty_s=args.drain_after)
+        print(json.dumps(events, separators=(",", ":")))
+        return 0
+
     store = SessionStore(args.store)
+
+    if args.cmd == "doctor":
+        from .doctor import diagnose, render_report
+        broker = None
+        if args.broker is not None:
+            from pathlib import Path
+
+            from .broker import SQLiteBroker
+            if not Path(args.broker).exists():
+                # doctor is read-only: never conjure an empty queue db at
+                # a typo'd path and declare it healthy
+                print(f"error: no broker db at {args.broker!r}",
+                      file=sys.stderr)
+                return 2
+            broker = SQLiteBroker(args.broker)
+        report = diagnose(store, broker)
+        if args.json:
+            print(json.dumps(report, separators=(",", ":")))
+        else:
+            print(render_report(report))
+        return 0 if report["ok"] else 1
 
     if args.cmd == "status":
         broker = None

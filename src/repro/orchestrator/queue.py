@@ -39,6 +39,10 @@ class Job:
     state: str = PENDING
     error: str | None = None
     result: Any = None
+    # True when the *latest* failure was the evaluation watchdog firing
+    # (not a raise): a poison caused by timeouts carries a "timeout"
+    # marker in its trial info so hangs are distinguishable from crashes
+    timed_out: bool = False
 
 
 class JobQueue:

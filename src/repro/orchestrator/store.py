@@ -22,6 +22,7 @@ cache layer as the paper's exhaustive/sampled tables.
 from __future__ import annotations
 
 import json
+import logging
 import math
 import os
 import time
@@ -32,8 +33,12 @@ from ..core.problem import Trial, TunableProblem
 from ..core.results import ResultsDB, ResultTable
 from ..core.space import SearchSpace
 from ..core.tuners.base import TuneResult
+from ..telemetry import metrics as _metrics
 from ..telemetry.trace import span
+from . import chaos
 from .session import CREATED, SessionSpec
+
+_log = logging.getLogger("repro.orchestrator.store")
 
 
 #: info value types the journal persists as-is
@@ -159,6 +164,7 @@ class SessionStore:
             lines.append(json.dumps(rec, separators=(",", ":")))
         if not lines:
             return
+        torn = chaos.fire("journal.append.torn")
         with span("journal.append", cat="store", n=len(lines)), \
                 open(self._journal_path(sid), "ab+") as f:
             # a crash mid-append can leave a torn final line; never glue new
@@ -167,9 +173,23 @@ class SessionStore:
                 f.seek(-1, os.SEEK_END)
                 if f.read(1) != b"\n":
                     f.write(b"\n")
-            f.write(("\n".join(lines) + "\n").encode())
-            f.flush()
-            os.fsync(f.fileno())
+            if torn is not None:
+                # injected crash mid-write: every line lands whole except
+                # the last, which is cut mid-record with no newline — the
+                # exact artifact a power loss during this write leaves
+                last = lines[-1].encode()
+                cut = max(1, min(len(last) - 1,
+                                 int(len(last) * float(torn.get("frac", 0.5)))))
+                f.write(b"".join(ln.encode() + b"\n" for ln in lines[:-1]))
+                f.write(last[:cut])
+                f.flush()
+                os.fsync(f.fileno())
+            else:
+                f.write(("\n".join(lines) + "\n").encode())
+                f.flush()
+                os.fsync(f.fileno())
+        if torn is not None:
+            chaos.die("journal.append.torn", torn)
 
     def journal_version(self, sid: str) -> int | None:
         """Sniff a session's journal format: ``2`` (row-native), ``1``
@@ -196,31 +216,43 @@ class SessionStore:
 
         A crash mid-append can tear one line (append_trials guarantees the
         tear never merges with later records); torn lines are skipped — the
-        one lost evaluation is simply redone — and everything else replays.
+        one lost evaluation is simply redone — but never silently: each
+        skip is logged and counted (telemetry counter
+        ``journal.torn_lines``).  The file is streamed line-by-line, never
+        slurped — resume cost stays flat in journal size.
         """
         p = self._journal_path(sid)
         if not p.exists():
             return []
         out: list[tuple[int, Trial]] = []
-        for line in p.read_text().splitlines():
-            if not line.strip():
-                continue
-            try:
-                rec = json.loads(line)
-            except json.JSONDecodeError:
-                continue               # torn line from a crash mid-append
-            obj = math.inf if rec["o"] is None else float(rec["o"])
-            key = int(rec["k"])
-            if "c" in rec:             # v1 record: explicit encoded config
-                cfg = space.decode(rec["c"])
-                info = dict(rec.get("i", {}))
-                if "e" in rec:
-                    info["error"] = rec["e"]
-                t = Trial(cfg, obj, arch, valid=bool(rec["v"]), info=info)
-            else:                      # v2: row-only — decode lazily, if ever
-                t = Trial(None, obj, arch, valid=bool(rec["v"]),
-                          info=dict(rec.get("i", {})), row=key, space=space)
-            out.append((key, t))
+        torn = 0
+        with open(p) as f:
+            for line in f:
+                if not line.strip():
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    torn += 1          # torn line from a crash mid-append
+                    continue
+                obj = math.inf if rec["o"] is None else float(rec["o"])
+                key = int(rec["k"])
+                if "c" in rec:         # v1 record: explicit encoded config
+                    cfg = space.decode(rec["c"])
+                    info = dict(rec.get("i", {}))
+                    if "e" in rec:
+                        info["error"] = rec["e"]
+                    t = Trial(cfg, obj, arch, valid=bool(rec["v"]), info=info)
+                else:                  # v2: row-only — decode lazily, if ever
+                    t = Trial(None, obj, arch, valid=bool(rec["v"]),
+                              info=dict(rec.get("i", {})), row=key,
+                              space=space)
+                out.append((key, t))
+        if torn:
+            _log.warning(
+                "journal %s: skipped %d torn line(s) (crash mid-append); "
+                "the lost evaluation(s) will be redone on resume", sid, torn)
+            _metrics.counter("journal.torn_lines", session=sid).inc(torn)
         return out
 
     # -- finished traces --------------------------------------------------- #

@@ -37,7 +37,15 @@ from typing import Sequence
 from ..core.problem import MeasuredProblem, Trial, TunableProblem
 from ..core.space import Config
 from ..telemetry.trace import span
+from . import chaos
 from .queue import DONE, JobQueue
+
+
+class EvalCancelled(Exception):
+    """An in-flight batch was abandoned on purpose (lease lost): the
+    worker's result would be rejected by completion-requires-lease, so
+    finishing the evaluation is pure waste.  Raised out of the pool's
+    wait loops when the caller's cancel event is set."""
 
 
 #: thread-mode minimum chunk size: splitting a small analytical batch
@@ -52,24 +60,30 @@ def _evaluate_chunk(problem: TunableProblem, configs: list[Config],
                     arch: str) -> list[Trial]:
     # module-level so the process pool can pickle it.  Chunk spans record
     # in the executing thread's (or, for process mode, the child's own)
-    # ring buffer — per-chunk, never per-config.
+    # ring buffer — per-chunk, never per-config.  chaos site eval.hang
+    # simulates a wedged measurement *inside* the chunk — it pins this
+    # executor thread exactly like a hung kernel build would.
+    chaos.sleep("eval.hang")
     with span("pool.chunk", cat="pool", n=len(configs), arch=arch):
         return problem.evaluate_many(configs, arch)
 
 
 def _evaluate_rows_chunk(problem: TunableProblem, rows: list[int],
                          arch: str) -> list[Trial]:
+    chaos.sleep("eval.hang")
     with span("pool.chunk", cat="pool", n=len(rows), arch=arch):
         return problem.trials_for_rows(rows, arch)
 
 
 def _evaluate_rows_archs_chunk(problem: TunableProblem, rows: list[int],
                                archs: tuple[str, ...]) -> list[list[Trial]]:
+    chaos.sleep("eval.hang")
     with span("pool.chunk", cat="pool", n=len(rows), archs=len(archs)):
         return problem.trials_for_rows_archs(rows, archs)
 
 
 def _evaluate_one(problem: TunableProblem, config: Config, arch: str) -> Trial:
+    chaos.sleep("eval.hang")
     return problem.evaluate(config, arch)
 
 
@@ -82,7 +96,8 @@ class WorkerPool:
     """
 
     def __init__(self, problem: TunableProblem, arch: str, workers: int = 4,
-                 mode: str = "auto", max_retries: int = 2):
+                 mode: str = "auto", max_retries: int = 2,
+                 job_timeout_s: float | None = None):
         if mode == "auto":
             mode = "process" if isinstance(problem, MeasuredProblem) else "thread"
         if mode not in ("thread", "process"):
@@ -92,6 +107,15 @@ class WorkerPool:
         self.workers = max(1, int(workers))
         self.mode = mode
         self.max_retries = max_retries
+        # the evaluation watchdog: bounds the chunked fast path as one
+        # batch deadline, then each per-config retry attempt separately —
+        # a config whose *every* attempt exceeds it terminates as a
+        # timeout-poison trial (info: poison + timeout) instead of
+        # pinning the pool until the broker reaps the lease
+        self.job_timeout_s = job_timeout_s
+        #: watchdog observability: bumped on every timed-out chunk/attempt
+        #: and every cancelled batch (read by BrokerWorker job metrics)
+        self.stats = {"timeouts": 0, "cancelled": 0}
         self._ex: Executor | None = None
 
     # -- lifecycle -------------------------------------------------------- #
@@ -124,7 +148,8 @@ class WorkerPool:
     # -- evaluation ------------------------------------------------------- #
     def evaluate_rows(self, rows: Sequence[int], arch: str | None = None,
                       *, archs: Sequence[str] | None = None,
-                      problem: TunableProblem | None = None):
+                      problem: TunableProblem | None = None,
+                      cancel: threading.Event | None = None):
         """Row-native :meth:`evaluate`: valid compiled-space rows in, trials
         out — same ordering/fault-isolation guarantees, but the chunks run
         ``TunableProblem.trials_for_rows`` (value columns straight from the
@@ -139,7 +164,8 @@ class WorkerPool:
         """
         problem = problem or self.problem
         if archs is not None:
-            return self._evaluate_rows_archs(rows, tuple(archs), problem)
+            return self._evaluate_rows_archs(rows, tuple(archs), problem,
+                                             cancel=cancel)
         rows = [int(r) for r in rows]
         if not rows:
             return []
@@ -147,10 +173,11 @@ class WorkerPool:
             # measured problems re-derive everything from configs anyway;
             # keep one battle-tested path through the process pool
             cfgs = self._rows_to_configs(rows, problem)
-            return self.evaluate(cfgs, arch, problem=problem)
+            return self.evaluate(cfgs, arch, problem=problem, cancel=cancel)
         return self._evaluate_chunked(rows, arch or self.arch,
                                       _evaluate_rows_chunk,
-                                      self._rows_to_configs, problem)
+                                      self._rows_to_configs, problem,
+                                      cancel=cancel)
 
     def _rows_to_configs(self, rows: list[int],
                          problem: TunableProblem | None = None) -> list[Config]:
@@ -161,18 +188,20 @@ class WorkerPool:
         return [problem.space.from_flat_index(int(r)) for r in rows]
 
     def evaluate(self, configs: Sequence[Config], arch: str | None = None,
-                 *, problem: TunableProblem | None = None) -> list[Trial]:
+                 *, problem: TunableProblem | None = None,
+                 cancel: threading.Event | None = None) -> list[Trial]:
         """Evaluate ``configs`` in parallel; ordered, fault-isolated."""
         configs = list(configs)
         if not configs:
             return []
         return self._evaluate_chunked(configs, arch or self.arch,
                                       _evaluate_chunk, None,
-                                      problem or self.problem)
+                                      problem or self.problem, cancel=cancel)
 
     # -- arch-shared evaluation ------------------------------------------- #
     def _evaluate_rows_archs(self, rows: Sequence[int], archs: tuple[str, ...],
-                             problem: TunableProblem
+                             problem: TunableProblem,
+                             cancel: threading.Event | None = None
                              ) -> dict[str, list[Trial]]:
         rows = [int(r) for r in rows]
         if not rows:
@@ -181,14 +210,18 @@ class WorkerPool:
             # measured problems measure per architecture by definition —
             # there is nothing to share beyond the one decode
             cfgs = self._rows_to_configs(rows, problem)
-            return {a: self.evaluate(cfgs, a, problem=problem) for a in archs}
+            return {a: self.evaluate(cfgs, a, problem=problem, cancel=cancel)
+                    for a in archs}
 
         ex = self._executor()
+        deadline = (None if self.job_timeout_s is None
+                    else time.monotonic() + self.job_timeout_s)
         with span("pool.evaluate", cat="pool", n=len(rows),
                   archs=len(archs), mode=self.mode):
             done, retry, broken = self._run_chunks(
                 rows, lambda chunk: ex.submit(_evaluate_rows_archs_chunk,
-                                              problem, chunk, archs))
+                                              problem, chunk, archs),
+                cancel=cancel, deadline=deadline)
         out: dict[str, list] = {a: [None] * len(rows) for a in archs}
         for lo, hi, per_arch in done:
             for a, trials in zip(archs, per_arch):
@@ -205,8 +238,9 @@ class WorkerPool:
             if broken:
                 ex = self._rebuild()
             for a in archs:
-                self._evaluate_with_retries(configs, retry, out[a], a, ex,
-                                            problem)
+                self._evaluate_with_retries(
+                    configs, retry, out[a], a, ex, problem, cancel=cancel,
+                    attempt_timeout_s=self.job_timeout_s)
         return out
 
     def _n_chunks(self, n_items: int) -> int:
@@ -214,43 +248,78 @@ class WorkerPool:
             return max(1, min(self.workers, n_items // _THREAD_CHUNK_FLOOR))
         return min(self.workers, n_items)
 
-    def _run_chunks(self, items: list, submit) -> tuple[list, list[int], bool]:
+    def _run_chunks(self, items: list, submit, *,
+                    cancel: threading.Event | None = None,
+                    deadline: float | None = None
+                    ) -> tuple[list, list[int], bool]:
         """Fan ``items`` out as worker chunks (``submit(chunk) -> Future``).
 
         Returns ``(done, retry, broken)``: ``done`` as ``(lo, hi, result)``
         per successful chunk, ``retry`` the item indices of chunks that
         raised (poison isolation runs them one by one), and ``broken`` True
-        when a failure was a BrokenExecutor — the caller must rebuild the
-        executor before retrying."""
+        when the executor must be rebuilt before retrying — after a
+        BrokenExecutor, or after the watchdog fired (the hung chunk's
+        thread still occupies the old executor).
+
+        ``deadline`` (monotonic) is the batch watchdog: chunks still
+        pending then are cancelled and routed to the per-config retry
+        path, where each config gets its own attempt timeout.
+        ``cancel`` abandons the whole batch by raising
+        :class:`EvalCancelled` — the lease-lost fast exit.
+        """
         n_chunks = self._n_chunks(len(items))
         bounds = [round(i * len(items) / n_chunks)
                   for i in range(n_chunks + 1)]
         spans = [(bounds[i], bounds[i + 1]) for i in range(n_chunks)
                  if bounds[i] < bounds[i + 1]]
-        futs = [submit(items[lo:hi]) for lo, hi in spans]
+        pending = {submit(items[lo:hi]): (lo, hi) for lo, hi in spans}
         done: list = []
         retry: list[int] = []
         broken = False
-        for (lo, hi), fut in zip(spans, futs):
-            try:
-                done.append((lo, hi, fut.result()))
-            except BrokenExecutor:
-                retry.extend(range(lo, hi))
+        block = cancel is None and deadline is None
+        while pending:
+            if cancel is not None and cancel.is_set():
+                for fut in pending:
+                    fut.cancel()
+                self.stats["cancelled"] += 1
+                raise EvalCancelled("batch abandoned (lease lost)")
+            finished, _ = wait(list(pending),
+                               timeout=None if block else 0.05,
+                               return_when=FIRST_COMPLETED)
+            for fut in finished:
+                lo, hi = pending.pop(fut)
+                try:
+                    done.append((lo, hi, fut.result()))
+                except BrokenExecutor:
+                    retry.extend(range(lo, hi))
+                    broken = True
+                except Exception:
+                    retry.extend(range(lo, hi))  # isolate the poison item(s)
+            if deadline is not None and pending \
+                    and time.monotonic() >= deadline:
+                for fut, (lo, hi) in pending.items():
+                    fut.cancel()
+                    retry.extend(range(lo, hi))
+                pending.clear()
+                self.stats["timeouts"] += 1
                 broken = True
-            except Exception:
-                retry.extend(range(lo, hi))   # isolate the poison item(s)
         return done, retry, broken
 
     def _evaluate_chunked(self, items: list, arch: str, chunk_fn,
-                          to_configs, problem: TunableProblem) -> list[Trial]:
+                          to_configs, problem: TunableProblem,
+                          cancel: threading.Event | None = None
+                          ) -> list[Trial]:
         ex = self._executor()
+        deadline = (None if self.job_timeout_s is None
+                    else time.monotonic() + self.job_timeout_s)
 
         # 1. chunked fast path: one evaluate_many per worker
         with span("pool.evaluate", cat="pool", n=len(items), arch=arch,
                   mode=self.mode):
             done, retry, broken = self._run_chunks(
                 items, lambda chunk: ex.submit(chunk_fn, problem, chunk,
-                                               arch))
+                                               arch),
+                cancel=cancel, deadline=deadline)
         out: list[Trial | None] = [None] * len(items)
         for lo, hi, trials in done:
             out[lo:hi] = trials
@@ -265,18 +334,23 @@ class WorkerPool:
                     configs[i] = cfg
             if broken:
                 ex = self._rebuild()
-            self._evaluate_with_retries(configs, retry, out, arch, ex, problem)
+            self._evaluate_with_retries(configs, retry, out, arch, ex,
+                                        problem, cancel=cancel,
+                                        attempt_timeout_s=self.job_timeout_s)
         return out  # type: ignore[return-value]
 
     def _evaluate_with_retries(self, configs: list[Config], indices: list[int],
                                out: list, arch: str, ex: Executor,
-                               problem: TunableProblem | None = None) -> None:
+                               problem: TunableProblem | None = None, *,
+                               cancel: threading.Event | None = None,
+                               attempt_timeout_s: float | None = None) -> None:
         problem = problem or self.problem
         queue = JobQueue(self.max_retries)
         for i in indices:
             queue.submit(i, configs[i])       # key == batch index: unique
 
-        running = {}
+        running: dict = {}
+        deadlines: dict = {}
 
         def launch() -> None:
             nonlocal ex
@@ -292,12 +366,22 @@ class WorkerPool:
                     fut = ex.submit(_evaluate_one, problem, job.config,
                                     arch)
                 running[fut] = job
+                if attempt_timeout_s is not None:
+                    deadlines[fut] = time.monotonic() + attempt_timeout_s
 
         launch()
+        block = cancel is None and attempt_timeout_s is None
         while running:
-            done, _ = wait(list(running), return_when=FIRST_COMPLETED)
+            if cancel is not None and cancel.is_set():
+                for fut in running:
+                    fut.cancel()
+                self.stats["cancelled"] += 1
+                raise EvalCancelled("batch abandoned (lease lost)")
+            done, _ = wait(list(running), timeout=None if block else 0.05,
+                           return_when=FIRST_COMPLETED)
             for fut in done:
                 job = running.pop(fut)
+                deadlines.pop(fut, None)
                 err = fut.exception()
                 if err is None:
                     queue.complete(job, fut.result())
@@ -306,7 +390,27 @@ class WorkerPool:
                     # jobs; their retries run on the rebuilt pool.  Attempts
                     # are counted for everyone so a config that kills its
                     # worker every time still terminates as poisoned.
+                    job.timed_out = False
                     queue.fail(job, repr(err))   # requeue or poison
+            if attempt_timeout_s is not None and running:
+                now = time.monotonic()
+                hung = [f for f, dl in deadlines.items()
+                        if f in running and dl <= now]
+                for fut in hung:
+                    job = running.pop(fut)
+                    deadlines.pop(fut, None)
+                    fut.cancel()
+                    # each retry gets a fresh attempt budget; a config
+                    # whose every attempt times out poisons with the
+                    # timeout marker (see the tail loop below)
+                    job.timed_out = True
+                    self.stats["timeouts"] += 1
+                    queue.fail(job, "evaluation timed out after "
+                                    f"{attempt_timeout_s:g}s")
+                if hung:
+                    # the hung attempts' threads still occupy the old
+                    # executor — retries need fresh workers
+                    ex = self._rebuild()
             launch()
 
         for i in indices:
@@ -314,10 +418,13 @@ class WorkerPool:
             if job is not None and job.state == DONE:
                 out[i] = job.result
             else:
+                info = {"error": job.error if job else "lost",
+                        "poison": True,
+                        "attempts": job.attempts if job else 0}
+                if job is not None and job.timed_out:
+                    info["timeout"] = True
                 out[i] = Trial(configs[i], math.inf, arch, valid=False,
-                               info={"error": job.error if job else "lost",
-                                     "poison": True,
-                                     "attempts": job.attempts if job else 0})
+                               info=info)
 
 
 # --------------------------------------------------------------------- #
@@ -345,7 +452,7 @@ class BrokerWorker:
     def __init__(self, broker, *, worker_id: str | None = None,
                  workers: int = 2, mode: str = "auto", max_retries: int = 2,
                  lease_s: float = 30.0, poll_s: float = 0.05,
-                 log=None):
+                 job_timeout_s: float | None = None, log=None):
         from .broker import default_worker_id
         self.broker = broker
         self.worker_id = worker_id or default_worker_id()
@@ -354,6 +461,7 @@ class BrokerWorker:
         self.max_retries = max_retries
         self.lease_s = lease_s
         self.poll_s = poll_s
+        self.job_timeout_s = job_timeout_s
         self.log = log or (lambda msg: None)
         self._problems: dict[str, TunableProblem] = {}
         self._pools: dict[str, WorkerPool] = {}
@@ -369,11 +477,13 @@ class BrokerWorker:
             self._problems[key] = problem
             self._pools[key] = WorkerPool(
                 problem, payload["archs"][0], workers=self.workers,
-                mode=self.mode, max_retries=self.max_retries)
+                mode=self.mode, max_retries=self.max_retries,
+                job_timeout_s=self.job_timeout_s)
         return self._problems[key], self._pools[key]
 
     # -- evaluation -------------------------------------------------------- #
-    def _evaluate(self, payload: dict) -> dict:
+    def _evaluate(self, payload: dict,
+                  cancel: threading.Event | None = None) -> dict:
         from .broker import encode_trial
         problem, pool = self._problem(payload)
         archs = list(payload["archs"])
@@ -381,32 +491,47 @@ class BrokerWorker:
             rows = [int(r) for r in payload["rows"]]
             if len(archs) > 1:
                 per_arch = pool.evaluate_rows(rows, archs=archs,
-                                              problem=problem)
+                                              problem=problem, cancel=cancel)
             else:
                 per_arch = {archs[0]: pool.evaluate_rows(
-                    rows, arch=archs[0], problem=problem)}
+                    rows, arch=archs[0], problem=problem, cancel=cancel)}
         else:
             cfgs = [problem.space.decode(c) for c in payload["configs"]]
-            per_arch = {a: pool.evaluate(cfgs, a, problem=problem)
+            per_arch = {a: pool.evaluate(cfgs, a, problem=problem,
+                                         cancel=cancel)
                         for a in archs}
         return {"arch_trials": {a: [encode_trial(t) for t in trials]
                                 for a, trials in per_arch.items()}}
 
+    def _pool_stat(self, name: str) -> int:
+        return sum(p.stats.get(name, 0) for p in self._pools.values())
+
     # -- the loop ---------------------------------------------------------- #
-    def _heartbeat_loop(self, job_id: int, stop: threading.Event) -> None:
+    def _heartbeat_loop(self, job_id: int, stop: threading.Event,
+                        cancel: threading.Event) -> None:
         # its own broker connection (SQLite connections are thread-local);
         # a False heartbeat means the lease was reaped — this worker was
-        # presumed dead and the job re-leased, so stop renewing: our
-        # eventual complete/fail will be rejected (concurrent-worker dedup)
+        # presumed dead and the job re-leased, so stop renewing AND set
+        # ``cancel``: our eventual complete/fail would be rejected
+        # (concurrent-worker dedup), so finishing the doomed batch is
+        # pure waste — the pool abandons it at the next chunk boundary
         interval = max(self.lease_s / 3.0, 0.01)
         while not stop.wait(interval):
+            stall = chaos.fire("worker.heartbeat.stall")
+            if stall is not None:
+                # injected GC pause / network partition: no renewals for
+                # stall_s — past the lease, the broker reaps us
+                if stop.wait(float(stall.get("stall_s", self.lease_s))):
+                    return
             with span("broker.heartbeat", cat="broker", job=job_id):
                 alive = self.broker.heartbeat(job_id, self.worker_id,
                                               self.lease_s)
             if not alive:
+                cancel.set()
                 return
 
-    def _record_job_metrics(self, result: dict, seconds: float) -> None:
+    def _record_job_metrics(self, result: dict, seconds: float,
+                            timeouts: int = 0) -> None:
         """Durable per-job throughput samples into the broker's metrics
         stream.  Always recorded (not gated by the in-process telemetry
         flag): one insert per *job* — a whole evaluation batch — so the
@@ -418,28 +543,54 @@ class BrokerWorker:
         evals = sum(len(ts) for ts in trials.values())
         poison = sum(1 for ts in trials.values()
                      for _, _, info in ts if info.get("poison"))
+        samples = [
+            {"name": "jobs", "value": 1, "kind": "counter"},
+            {"name": "evals", "value": evals, "kind": "counter"},
+            {"name": "eval_s", "value": seconds, "kind": "counter"},
+            {"name": "poison", "value": poison, "kind": "counter"},
+            {"name": "configs_per_s", "kind": "gauge",
+             "value": evals / seconds if seconds > 0 else 0.0},
+        ]
+        if timeouts:
+            samples.append({"name": "timeouts", "value": timeouts,
+                            "kind": "counter"})
+        if chaos.active():
+            # observed fault schedule, cumulative per worker process:
+            # gauges (last-write-wins per worker id) sum across a fleet
+            # to the total injected-fault count the bench publishes
+            samples.extend({"name": f"chaos.{site}", "kind": "gauge",
+                            "value": st["fires"]}
+                           for site, st in chaos.stats().items()
+                           if st["fires"])
         try:
-            self.broker.record_metrics(self.worker_id, [
-                {"name": "jobs", "value": 1, "kind": "counter"},
-                {"name": "evals", "value": evals, "kind": "counter"},
-                {"name": "eval_s", "value": seconds, "kind": "counter"},
-                {"name": "poison", "value": poison, "kind": "counter"},
-                {"name": "configs_per_s", "kind": "gauge",
-                 "value": evals / seconds if seconds > 0 else 0.0},
-            ])
+            self.broker.record_metrics(self.worker_id, samples)
         except Exception as e:    # telemetry must never take down a worker
             self.log(f"job metrics record failed: {e!r}")
 
     def serve_one(self, job_id: int, payload: dict) -> bool:
         """Evaluate one leased job; returns True if the result landed."""
         stop = threading.Event()
+        cancel = threading.Event()
         hb = threading.Thread(target=self._heartbeat_loop,
-                              args=(job_id, stop), daemon=True)
+                              args=(job_id, stop, cancel), daemon=True)
         hb.start()
         t0 = time.monotonic()
+        timeouts0 = self._pool_stat("timeouts")
         try:
             with span("worker.job", cat="worker", job=job_id):
-                result = self._evaluate(payload)
+                result = self._evaluate(payload, cancel=cancel)
+        except EvalCancelled:
+            # the heartbeat thread observed a reaped lease: the job was
+            # already re-leased elsewhere and our result would be
+            # rejected — don't complete, don't fail (that would race the
+            # new holder), just record the abandonment and lease again
+            try:
+                self.broker.record_metrics(self.worker_id, [
+                    {"name": "abandoned", "value": 1, "kind": "counter"}])
+            except Exception:
+                pass
+            self.log(f"job {job_id} abandoned (lease lost mid-batch)")
+            return False
         except Exception as e:
             # evaluation infrastructure error: requeue the job (attempts-
             # capped).  KeyboardInterrupt/SystemExit propagate instead —
@@ -452,7 +603,10 @@ class BrokerWorker:
         finally:
             stop.set()
             hb.join()
-        self._record_job_metrics(result, time.monotonic() - t0)
+        chaos.crash("worker.crash.before_complete")
+        self._record_job_metrics(result, time.monotonic() - t0,
+                                 timeouts=self._pool_stat("timeouts")
+                                 - timeouts0)
         with span("broker.complete", cat="broker", job=job_id):
             ok = self.broker.complete(job_id, self.worker_id, result)
         self.log(f"job {job_id} {'done' if ok else 'lost lease'}")
