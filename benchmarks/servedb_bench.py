@@ -1,0 +1,236 @@
+"""Find-DB serving benchmark: lookup throughput + the degradation drill.
+
+The acceptance properties for the servedb layer (docs/architecture.md,
+"Serving contracts"):
+
+1. **Throughput** — the never-raise chain answers "best config for
+   (kernel, shape, arch)" at interactive latency from the in-memory
+   snapshot (no jax, no problem construction on the hot path); the
+   committed ``BENCH_servedb.json`` records lookups/sec and the
+   per-tier hit mix (exact/nearest/heuristic/default) of a published
+   query workload.
+2. **The drill** — under a seeded chaos schedule covering both find-DB
+   fault sites (crash between temp-write and rename; post-publish
+   corruption) *plus* a hard SIGKILL-style publisher death
+   (``os._exit`` mid-publish in a subprocess), every lookup is still
+   answered, never below the static-default floor, with the degraded
+   tier visible; and once an intact snapshot is restored, lookups are
+   **bit-identical** to the pre-fault answers.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.servedb_bench           # full
+    PYTHONPATH=src python -m benchmarks.servedb_bench --smoke   # CI
+
+The full run writes ``BENCH_servedb.json`` at the repo root.  Smoke mode
+runs the same drill and a shortened throughput loop, then checks the
+committed ``BENCH_servedb.json`` still honors its own recorded
+lookups/sec bound.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT_PATH = ROOT / "BENCH_servedb.json"
+
+#: committed-bound safety margin: the full run records
+#: ``lookups_per_s / BOUND_MARGIN`` as the floor CI re-checks
+BOUND_MARGIN = 20.0
+
+#: the seeded schedule for the drill: first publish dies in the
+#: commit window, second lands but is bit-flipped on disk
+DRILL_PLAN = {
+    "seed": 20260809,
+    "faults": [
+        {"site": "servedb.publish.crash", "p": 1.0, "max_fires": 1},
+        {"site": "servedb.snapshot.corrupt", "p": 1.0, "max_fires": 1,
+         "mode": "bitflip", "frac": 0.4},
+    ],
+}
+
+
+def _build_store(root: Path) -> Path:
+    """A tiny two-problem, two-arch campaign store to distill from."""
+    from repro.orchestrator.runner import run_session
+    from repro.orchestrator.session import SessionSpec
+    from repro.orchestrator.store import SessionStore
+    store = SessionStore(root / "sessions")
+    for problem in ("toy_quad", "toy_rastrigin"):
+        for arch in ("v5e", "v4"):
+            spec = SessionSpec(problem=problem, tuner="random", arch=arch,
+                               budget=24, seed=0, workers=2)
+            store.create(spec)
+            run_session(spec, store=store, mode="thread")
+    return store.root
+
+
+def _publish(store_root: Path, db: Path):
+    from repro.servedb.distill import build_snapshot
+    from repro.servedb.snapshot import publish
+    snap, binary, problems = build_snapshot(store_root)
+    assert not problems, problems
+    publish(snap, db, binary_bytes=binary)
+    return snap
+
+
+def _workload():
+    """The published query mix: exact hits, a nearest-shape miss, a
+    cross-arch heuristic, and an unknown-kernel default."""
+    return [
+        ("toy_quad", {}, "v5e"),            # exact
+        ("toy_rastrigin", {}, "v4"),        # exact
+        ("toy_quad", {"n": 64}, "v5e"),     # nearest (no shaped entry)
+        ("toy_quad", {}, "v6e"),            # heuristic: cross-arch
+        ("gemm", {"m": 4096}, "v5e"),       # default (not in this DB)
+    ]
+
+
+def _throughput(db: Path, n: int) -> tuple[float, dict]:
+    from repro.servedb import ServeDB
+    sdb = ServeDB(db, use_cost_model=False)
+    mix = _workload()
+    for kernel, shape, arch in mix:        # warm the reload stat
+        sdb.lookup(kernel, shape, arch)
+    t0 = time.perf_counter()
+    for i in range(n):
+        kernel, shape, arch = mix[i % len(mix)]
+        sdb.lookup(kernel, shape, arch)
+    dt = time.perf_counter() - t0
+    counts = sdb.tier_counts()
+    total = sum(counts.values())
+    rates = {t: c / total for t, c in counts.items()}
+    return n / dt, rates
+
+
+def _drill(store_root: Path, db: Path) -> dict:
+    """Both chaos sites + a SIGKILL-style publisher death; asserts the
+    never-below-defaults and bit-identical-after-restore contracts."""
+    from repro.orchestrator import chaos
+    from repro.servedb import ServeDB, TIERS
+    from repro.servedb.snapshot import SNAPSHOT_NAME, publish, verify_dir
+    from repro.servedb.distill import build_snapshot
+
+    snap, binary, problems = build_snapshot(store_root)
+    assert not problems, problems
+    publish(snap, db, binary_bytes=binary)
+    sdb = ServeDB(db, use_cost_model=False, reload_every_s=0.0)
+    baseline = {(k, json.dumps(s, sort_keys=True), a):
+                sdb.lookup(k, s, a) for k, s, a in _workload()}
+    assert all(r.tier in TIERS for r in baseline.values())
+
+    # 1+2: seeded plan — publish dies in the commit window, the retry
+    # lands but is corrupted on disk; every lookup keeps answering
+    chaos.install(chaos.FaultPlan.from_json(DRILL_PLAN))
+    crashed = corrupted = False
+    try:
+        publish(snap, db, binary_bytes=binary)
+    except BaseException as e:
+        crashed = type(e).__name__ == "ChaosCrash"
+    assert crashed, "publish.crash site did not fire"
+    publish(snap, db, binary_bytes=binary)      # fires snapshot.corrupt
+    chaos.uninstall()
+    sdb2 = ServeDB(db, use_cost_model=False, reload_every_s=0.0)
+    corrupted = bool(sdb2.problems())
+    assert corrupted, "snapshot.corrupt site did not fire"
+    degraded = [sdb2.lookup(k, s, a) for k, s, a in _workload()]
+    assert all(r.tier in TIERS and isinstance(r.config, dict)
+               for r in degraded), "a dispatch went unanswered"
+
+    # 3: hard publisher death (os._exit — the SIGKILL shape) in a real
+    # subprocess; the live name must be untouched and serving must go on
+    code = (
+        "from repro.servedb.snapshot import Snapshot, publish\n"
+        "from repro.orchestrator import chaos\n"
+        "chaos.install(chaos.FaultPlan.from_json({'seed': 1, 'faults': ["
+        "{'site': 'servedb.publish.crash', 'p': 1.0, 'exit': True,"
+        " 'exit_code': 137}]}))\n"
+        f"publish(Snapshot(tables={{}}), {str(db)!r})\n")
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        env=dict(os.environ, PYTHONPATH=str(ROOT / "src")),
+        capture_output=True, timeout=120)
+    assert proc.returncode == 137, (proc.returncode, proc.stderr[-500:])
+    report = verify_dir(db)
+    assert any("leftover temp" in p for p in report["problems"]), report
+    survivors = [sdb2.lookup(k, s, a) for k, s, a in _workload()]
+    assert all(r.tier in TIERS for r in survivors)
+
+    # restore an intact snapshot: lookups must be bit-identical to the
+    # pre-fault baseline (config AND provenance)
+    (db / (SNAPSHOT_NAME + ".tmp")).unlink(missing_ok=True)
+    publish(snap, db, binary_bytes=binary)
+    sdb3 = ServeDB(db, use_cost_model=False, reload_every_s=0.0)
+    restored = {(k, json.dumps(s, sort_keys=True), a):
+                sdb3.lookup(k, s, a) for k, s, a in _workload()}
+    mismatches = [
+        key for key, base in baseline.items()
+        if (base.config, base.tier, base.detail) !=
+           (restored[key].config, restored[key].tier, restored[key].detail)]
+    assert not mismatches, f"lookups drifted after restore: {mismatches}"
+    return {
+        "publish_crash_fired": crashed,
+        "corruption_quarantined": corrupted,
+        "sigkill_exit_code": proc.returncode,
+        "all_dispatches_answered": True,
+        "bit_identical_after_restore": not mismatches,
+    }
+
+
+def _assert_committed_bound() -> None:
+    """CI regression guard: the committed full-run numbers must honor
+    their own recorded lookups/sec bound."""
+    data = json.loads(OUT_PATH.read_text())
+    assert data["lookups_per_s"] >= data["bound_lookups_per_s"], \
+        f"committed BENCH_servedb.json violates its bound: {data}"
+    assert data["criterion_met"], data["criterion"]
+    for tier in ("exact", "nearest", "heuristic", "default"):
+        assert tier in data["hit_rates"], data["hit_rates"]
+
+
+def run(smoke: bool = False) -> dict:
+    n = 2_000 if smoke else 50_000
+    with tempfile.TemporaryDirectory() as tmp:
+        tmp = Path(tmp)
+        store_root = _build_store(tmp)
+        db = tmp / "servedb"
+        _publish(store_root, db)
+        lps, rates = _throughput(db, n)
+        drill = _drill(store_root, tmp / "servedb_drill")
+    out = {
+        "protocol": "smoke" if smoke else "full",
+        "workload": [[k, s, a] for k, s, a in _workload()],
+        "lookups": n,
+        "lookups_per_s": lps,
+        "bound_lookups_per_s": lps / BOUND_MARGIN,
+        "hit_rates": rates,
+        "drill": drill,
+        "plan": DRILL_PLAN,
+        "criterion": "every dispatch answered under chaos (>= static "
+                     "defaults, tier recorded); bit-identical lookups "
+                     "after intact restore; throughput >= recorded bound",
+        "criterion_met": all(drill.values()),
+    }
+    if smoke:
+        _assert_committed_bound()
+        print(json.dumps({k: out[k] for k in
+                          ("lookups_per_s", "hit_rates", "drill")},
+                         indent=2))
+    else:
+        OUT_PATH.write_text(json.dumps(out, indent=2) + "\n")
+        print(f"wrote {OUT_PATH}")
+        print(json.dumps({k: out[k] for k in
+                          ("lookups_per_s", "hit_rates", "drill")},
+                         indent=2))
+    return out
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv[1:])

@@ -28,6 +28,15 @@ def cells_for(arch_name: str):
         yield shape_name
 
 
+def attention_shape(cfg: ModelConfig, seq_len: int) -> dict:
+    """The flash-attention problem shape a model dispatches at ``seq_len``
+    — the find-DB lookup key tying the model zoo to the tuning campaigns
+    (``AttentionProblem`` shape kwargs: query/kv head counts, query and
+    kv sequence lengths, head dim)."""
+    return {"hq": cfg.n_heads, "hkv": max(1, cfg.n_kv_heads),
+            "tq": int(seq_len), "tk": int(seq_len), "d": cfg.d_head}
+
+
 def reduce_config(cfg: ModelConfig) -> ModelConfig:
     """Tiny same-family config for CPU smoke tests: same pattern/features,
     small dims."""

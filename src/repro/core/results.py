@@ -143,6 +143,22 @@ class ResultsDB:
     def has(self, problem: str, arch: str, protocol: str) -> bool:
         return self._path(problem, arch, protocol).exists()
 
+    def list_tables(self) -> list[tuple[str, str, str]]:
+        """Every cached ``(problem, arch, protocol)`` key, sorted.
+
+        The inverse of :meth:`_path`'s naming scheme: problem and arch
+        never contain dots, so the first two dot-fields are exact and the
+        remainder is the (``:``-mangled) protocol.  Unparsable strays in
+        the cache directory are ignored — consumers (the servedb
+        distiller) must not fall over a hand-dropped file.
+        """
+        out = []
+        for p in self.root.glob("*.json.zst"):
+            parts = p.name[:-len(".json.zst")].split(".")
+            if len(parts) >= 3:
+                out.append((parts[0], parts[1], ".".join(parts[2:])))
+        return sorted(out)
+
     def put(self, table: ResultTable) -> Path:
         p = self._path(table.problem, table.arch, table.protocol)
         tmp = p.with_suffix(".tmp")

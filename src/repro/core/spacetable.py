@@ -131,6 +131,20 @@ def mixed_radix_strides(cards: Sequence[int]) -> np.ndarray:
     return np.concatenate(([1], cp[:-1]))[::-1].astype(np.int64)
 
 
+def rows_from_codes(cards: Sequence[int],
+                    codes: np.ndarray | Sequence[Sequence[int]]) -> np.ndarray:
+    """Inverse of :meth:`CompiledSpace.codes_for`: fold mixed-radix code
+    rows back into flat indices (``codes @ strides``).  Kept next to
+    :func:`mixed_radix_strides` so every encoder and decoder of the
+    row==flat-index invariant shares the same two functions — the servedb
+    binary export writes rows through this and a serving process can
+    decode them with plain ``divmod``."""
+    codes = np.asarray(codes, dtype=np.int64)
+    if codes.size == 0:
+        return np.zeros(0, dtype=np.int64)
+    return codes @ mixed_radix_strides(cards)
+
+
 def _value_array(values: tuple) -> np.ndarray:
     """Per-parameter value column as a numpy array (object dtype when the
     values are heterogeneous)."""

@@ -72,6 +72,7 @@ import time
 import uuid
 from pathlib import Path
 
+from ..core.retry import retry_call
 from . import chaos
 from .queue import DONE, FAILED, LEASED, PENDING
 
@@ -401,6 +402,14 @@ class _Tx:
             self.conn.execute("ROLLBACK")
 
 
+def _is_busy(e: BaseException) -> bool:
+    """Is this the transient SQLITE_BUSY/locked OperationalError?"""
+    if not isinstance(e, sqlite3.OperationalError):
+        return False
+    msg = str(e).lower()
+    return "locked" in msg or "busy" in msg
+
+
 def _busy_retry(fn):
     """Re-run a whole broker transaction on SQLITE_BUSY.
 
@@ -408,24 +417,21 @@ def _busy_retry(fn):
     timeout itself expires (a lock storm, a worker wedged mid-COMMIT on
     a sick filesystem) sqlite raises OperationalError — which without
     this wrapper would crash a worker loop over a *transient* condition.
-    Retries are bounded (``busy_retries``) with exponential backoff, and
-    are safe because every broker mutation is a single self-contained
-    IMMEDIATE transaction: nothing committed yet when BEGIN/COMMIT fails.
+    Retries are bounded (``busy_retries``) with exponential backoff and
+    deterministic jitter through the shared policy in
+    :mod:`repro.core.retry` (the same code path the servedb snapshot
+    publish lock retries through, so the ``broker.busy`` chaos site
+    exercises one implementation, not per-caller copies).  Safe because
+    every broker mutation is a single self-contained IMMEDIATE
+    transaction: nothing is committed yet when BEGIN/COMMIT fails.
     """
     @functools.wraps(fn)
     def wrapper(self, *args, **kwargs):
-        delay = 0.01
-        retries = getattr(self, "busy_retries", 0)
-        for attempt in range(retries + 1):
-            try:
-                return fn(self, *args, **kwargs)
-            except sqlite3.OperationalError as e:
-                msg = str(e).lower()
-                if ("locked" not in msg and "busy" not in msg) \
-                        or attempt == retries:
-                    raise
-                time.sleep(delay)
-                delay = min(delay * 2, 0.2)
+        return retry_call(
+            lambda: fn(self, *args, **kwargs),
+            retries=getattr(self, "busy_retries", 0),
+            retry_on=_is_busy, base_s=0.01, max_s=0.2,
+            salt=f"{type(self).__name__}.{fn.__name__}")
     return wrapper
 
 

@@ -78,6 +78,14 @@ SITES = {
     "broker.clock.skew":
         "broker _now() — offset this one clock reading by skew_s "
         "seconds (params: skew_s=float)",
+    "servedb.publish.crash":
+        "servedb snapshot publish — die after the temp file is written "
+        "and fsynced but before the rename commits it, leaving only the "
+        "temp artifact (params: exit=bool for os._exit, exit_code=int)",
+    "servedb.snapshot.corrupt":
+        "servedb snapshot publish — corrupt the just-published snapshot "
+        "bytes in place, as a torn or bit-rotted sector would (params: "
+        "mode='truncate'|'bitflip', frac=float cut/flip point)",
 }
 
 #: rule keys that schedule the fault; everything else is a site param

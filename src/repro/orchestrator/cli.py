@@ -14,7 +14,12 @@ Subcommands::
                autoscaling between --min/--max, SIGTERM = graceful drain
     metrics  — dump or tail a broker fleet's aggregate metrics as JSON
     doctor   — offline integrity check of a store (+ broker): torn
-               journal lines, orphaned RUNNING sessions, stale leases
+               journal lines, orphaned RUNNING sessions, stale leases;
+               --servedb adds find-DB snapshot triage
+    servedb  — the tuned-config serving layer: build (distill campaign
+               traces into an atomically-published, checksummed
+               snapshot), query (the never-raise degradation chain),
+               verify (offline snapshot/quarantine triage)
 
 Example::
 
@@ -101,6 +106,28 @@ exactly for tests and ``benchmarks/chaos_bench.py``::
         --chaos plan.json
     python -m repro.orchestrator fleet --broker experiments/queue.db \\
         --min 2 --max 4 --chaos plan.json    # workers inherit the plan
+
+Tuned-config serving (the find-DB): distill finished campaign traces
+into per-(kernel, arch) golden tables, published as one atomic,
+checksummed snapshot; answer "best config for (kernel, shape, arch)"
+through the never-raise degradation chain (exact → nearest-shape →
+heuristic → static default, the tier recorded in the result and in
+telemetry); triage torn or bit-rotted snapshots offline::
+
+    python -m repro.orchestrator servedb build \\
+        --store experiments/sessions --db experiments/servedb
+
+    # interactive lookups survive any DB state (absent/stale/corrupt):
+    python -m repro.orchestrator servedb query --db experiments/servedb \\
+        --kernel flash_attention --arch v5e \\
+        --shape '{"hq":32,"hkv":8,"tq":4096,"tk":4096,"d":128}'
+
+    # one verdict line per snapshot artifact; exit 1 on problems
+    python -m repro.orchestrator servedb verify --db experiments/servedb
+
+    # the same triage inside the campaign health check:
+    python -m repro.orchestrator doctor --store experiments/sessions \\
+        --servedb experiments/servedb
 
 Per-tuner settings ride the spec: ``--tuner-arg k=v`` (repeatable, JSON
 values) merges into every session's ``tuner_kwargs`` — e.g. ``--tuner-arg
@@ -360,6 +387,98 @@ def _parse_tuner_args(pairs: list[str], base: dict) -> dict:
     return out
 
 
+def _render_servedb_verify(report: dict) -> str:
+    """Human rendering of :func:`repro.servedb.snapshot.verify_dir` —
+    one verdict line per snapshot artifact."""
+    lines = [f"servedb: {report['root']}"]
+    for s in report["snapshots"]:
+        if s["status"] == "corrupt":
+            lines.append(f"  {s['file']:24s} CORRUPT  {s['error']}")
+        else:
+            verdict = s["status"].upper().ljust(8)
+            lines.append(
+                f"  {s['file']:24s} {verdict} gen {s['generation']} "
+                f"{s['kernels']} kernel(s) {s['entries']} entr"
+                f"{'y' if s['entries'] == 1 else 'ies'}"
+                + (f"  binary {'ok' if s['binary_ok'] else 'BAD'}"
+                   if "binary_ok" in s else ""))
+    for q in report["quarantined"]:
+        lines.append(f"  quarantine/{q['file']:24s} ({q['reason']})")
+    if report["problems"]:
+        lines.append(f"problems ({len(report['problems'])}):")
+        lines.extend(f"  - {p}" for p in report["problems"])
+    else:
+        lines.append("no problems found")
+    return "\n".join(lines)
+
+
+def _run_servedb(args) -> int:
+    """``servedb`` subcommand body: build | query | verify."""
+    from ..servedb import ServeDB, verify_dir
+    if args.action == "build":
+        if not args.store:
+            print("error: servedb build needs --store", file=sys.stderr)
+            return 2
+        from ..servedb.distill import build_snapshot
+        from ..servedb.snapshot import publish
+        snap, binary, problems = build_snapshot(
+            args.store, ttl_s=args.ttl,
+            include_protocols=tuple(p for p in args.include.split(",") if p),
+            with_binary=not args.no_binary)
+        for p in problems:
+            print(f"warning: {p}", file=sys.stderr)
+        path = publish(snap, args.db, binary_bytes=binary)
+        if args.json:
+            print(json.dumps(
+                {"db": args.db, "generation": snap.generation,
+                 "kernels": snap.kernels(), "entries": snap.n_entries(),
+                 "binary": snap.binary, "build_problems": problems},
+                separators=(",", ":")))
+        else:
+            print(f"servedb: published generation {snap.generation} "
+                  f"({snap.n_entries()} entr"
+                  f"{'y' if snap.n_entries() == 1 else 'ies'} across "
+                  f"{len(snap.kernels())} kernel(s)) to {path}")
+        return 0
+    if args.action == "query":
+        if not args.kernel:
+            print("error: servedb query needs --kernel", file=sys.stderr)
+            return 2
+        try:
+            shape = json.loads(args.shape) if args.shape else {}
+        except json.JSONDecodeError as e:
+            print(f"error: --shape is not valid JSON: {e}", file=sys.stderr)
+            return 2
+        db = ServeDB(args.db, serve_stale=args.stale_ok)
+        res = db.lookup(args.kernel, shape, args.arch)
+        if args.json:
+            print(json.dumps(
+                {"kernel": res.kernel, "arch": res.arch, "shape": res.shape,
+                 "config": res.config, "tier": res.tier,
+                 "detail": res.detail, "objective": res.objective,
+                 "matched_shape": res.matched_shape,
+                 "distance": res.distance, "stale": res.stale,
+                 "generation": res.generation}, separators=(",", ":")))
+        else:
+            prov = f" [{res.detail}]" if res.detail else ""
+            flags = " (STALE snapshot)" if res.stale else ""
+            print(f"{res.kernel} @ {res.arch}: tier={res.tier}{prov}{flags}")
+            print(f"  config {json.dumps(res.config, sort_keys=True)}")
+            if res.objective is not None:
+                print(f"  objective {_fmt_best(res.objective)}"
+                      + (f"  donor shape {json.dumps(res.matched_shape)}"
+                         f" (distance {res.distance:.2f})"
+                         if res.tier != "exact" else ""))
+        return 0
+    # verify
+    report = verify_dir(args.db)
+    if args.json:
+        print(json.dumps(report, separators=(",", ":")))
+    else:
+        print(_render_servedb_verify(report))
+    return 0 if report["ok"] else 1
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="repro.orchestrator",
@@ -562,8 +681,48 @@ def main(argv: list[str] | None = None) -> int:
     p_dr.add_argument("--broker", default=None,
                       help="broker db: also check leases, failed jobs and "
                            "metrics-table sanity")
+    p_dr.add_argument("--servedb", default=None, metavar="DB",
+                      help="find-DB dir: also triage servedb snapshots "
+                           "(checksum verdicts, quarantine listing)")
     p_dr.add_argument("--json", action="store_true",
                       help="emit the full report as one JSON object")
+
+    p_sv = sub.add_parser(
+        "servedb",
+        help="build / query / verify the tuned-config find-DB")
+    p_sv.add_argument("action", choices=("build", "query", "verify"),
+                      help="build: distill a session store into an atomic "
+                           "snapshot; query: one lookup through the "
+                           "degradation chain; verify: offline snapshot "
+                           "triage (exit 1 on problems)")
+    p_sv.add_argument("--db", required=True,
+                      help="find-DB directory (snapshot + quarantine)")
+    p_sv.add_argument("--store", default=None,
+                      help="build: session store to distill from")
+    p_sv.add_argument("--ttl", type=float, default=None,
+                      help="build: snapshot time-to-live in seconds "
+                           "(lookups past it degrade and flag stale; "
+                           "default: never stale)")
+    p_sv.add_argument("--include", default="session",
+                      help="build: comma-separated ResultsDB protocol "
+                           "prefixes to distill (default: session traces "
+                           "only; add exhaustive,sampled for the paper's "
+                           "full-space tables)")
+    p_sv.add_argument("--no-binary", action="store_true",
+                      help="build: skip the npz row-encoded binary export")
+    p_sv.add_argument("--kernel", default=None,
+                      help="query: kernel table name (e.g. "
+                           "flash_attention, gemm)")
+    p_sv.add_argument("--arch", default="v5e",
+                      help="query: architecture key")
+    p_sv.add_argument("--shape", default=None, metavar="JSON",
+                      help="query: problem shape as a JSON dict "
+                           "(default: {} — matches the nearest entry)")
+    p_sv.add_argument("--stale-ok", action="store_true",
+                      help="query: serve flagged-stale table hits instead "
+                           "of degrading past a stale snapshot")
+    p_sv.add_argument("--json", action="store_true",
+                      help="machine-readable output")
 
     args = ap.parse_args(argv)
 
@@ -673,6 +832,9 @@ def _dispatch(args) -> int:
         print(json.dumps(events, separators=(",", ":")))
         return 0
 
+    if args.cmd == "servedb":
+        return _run_servedb(args)
+
     store = SessionStore(args.store)
 
     if args.cmd == "doctor":
@@ -689,7 +851,7 @@ def _dispatch(args) -> int:
                       file=sys.stderr)
                 return 2
             broker = SQLiteBroker(args.broker)
-        report = diagnose(store, broker)
+        report = diagnose(store, broker, servedb=args.servedb)
         if args.json:
             print(json.dumps(report, separators=(",", ":")))
         else:

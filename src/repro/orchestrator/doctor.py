@@ -16,6 +16,10 @@ it only reads.  Checks:
   ``lease``/``collect`` reaps, so a persistently stale lease means no
   driver or worker is touching the queue), failed jobs, and
   metrics-table sanity (finite values, known kinds).
+* **Find-DB** (``--servedb``) — servedb snapshot triage: checksum
+  verification of the live snapshot (and its binary export), stale-TTL
+  flags, quarantine listing, leftover publish temp files; one verdict
+  per snapshot artifact.
 
 Everything lands in one report dict (``--json``); exit status 1 when
 problems were found, 0 when clean.
@@ -57,10 +61,12 @@ def _scan_journal(path: Path) -> dict:
     return out
 
 
-def diagnose(store: SessionStore, broker: Broker | None = None) -> dict:
-    """Inspect ``store`` (and optionally ``broker``); returns the report:
-    ``{"sessions": [...], "broker": {...}|None, "problems": [...],
-    "ok": bool}``.  Read-only — never reaps, pops, or mutates."""
+def diagnose(store: SessionStore, broker: Broker | None = None,
+             servedb: str | Path | None = None) -> dict:
+    """Inspect ``store`` (and optionally ``broker`` and a find-DB dir);
+    returns the report: ``{"sessions": [...], "broker": {...}|None,
+    "servedb": {...}|None, "problems": [...], "ok": bool}``.  Read-only —
+    never reaps, pops, quarantines, or mutates."""
     problems: list[str] = []
 
     # sessions whose batches are in flight on the fleet right now
@@ -142,8 +148,15 @@ def diagnose(store: SessionStore, broker: Broker | None = None) -> dict:
                          "metric_workers": len(workers),
                          "bad_metric_samples": bad_samples}
 
+    servedb_report = None
+    if servedb is not None:
+        from ..servedb.snapshot import verify_dir
+        servedb_report = verify_dir(servedb)
+        problems.extend(f"servedb: {p}" for p in servedb_report["problems"])
+
     return {"store": str(store.root), "generated_at": time.time(),
             "sessions": sessions, "broker": broker_report,
+            "servedb": servedb_report,
             "problems": problems, "ok": not problems}
 
 
@@ -173,6 +186,24 @@ def render_report(report: dict) -> str:
             f"leased {c.get('leased', 0)} done {c.get('done', 0)} "
             f"failed {c.get('failed', 0)}; stale leases "
             f"{b['stale_leases']}; {b['metric_workers']} metric worker(s)")
+    if report.get("servedb") is not None:
+        sv = report["servedb"]
+        for s in sv["snapshots"]:
+            if s["status"] == "corrupt":
+                lines.append(f"  servedb: {s['file']:24s} CORRUPT  "
+                             f"{s['error']}")
+            else:
+                lines.append(
+                    f"  servedb: {s['file']:24s} {s['status'].upper():8s} "
+                    f"gen {s['generation']} {s['entries']} entr"
+                    f"{'y' if s['entries'] == 1 else 'ies'}"
+                    + (f"  binary {'ok' if s['binary_ok'] else 'BAD'}"
+                       if "binary_ok" in s else ""))
+        if not sv["snapshots"]:
+            lines.append(f"  servedb: {sv['root']} — no snapshot")
+        if sv["quarantined"]:
+            lines.append(f"  servedb: {len(sv['quarantined'])} "
+                         f"quarantined artifact(s)")
     if report["problems"]:
         lines.append(f"problems ({len(report['problems'])}):")
         lines.extend(f"  - {p}" for p in report["problems"])

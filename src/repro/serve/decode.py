@@ -45,6 +45,11 @@ class ServeConfig:
     temperature: float = 0.0          # 0 => greedy
     eos_token: int | None = None
     seed: int = 0
+    #: find-DB directory for tuned Pallas block sizes (None: static
+    #: defaults without consulting any DB)
+    servedb: str | None = None
+    #: architecture key for find-DB lookups
+    arch: str = "v5e"
 
 
 @dataclasses.dataclass
@@ -90,6 +95,42 @@ class ServingEngine:
         self._key = jax.random.key(c.seed)
         self._decode = jax.jit(self._decode_fn)
         self.steps = 0
+        self._servedb: Any = None
+        #: kernel name -> LookupResult for this engine's dispatch shapes.
+        #: Resolved through the find-DB degradation chain, so it is
+        #: populated (at worst with static defaults) under every DB
+        #: state — absent, stale, or corrupt — and the engine keeps
+        #: serving; the chosen tier is visible in telemetry and here.
+        self.kernel_plan = self._plan_kernels()
+
+    def _plan_kernels(self) -> dict:
+        """Resolve tuned Pallas configs for this engine's kernels at
+        dispatch time.  Never raises — the never-fail contract of the
+        lookup chain extends to engine construction."""
+        from ..configs.common import attention_shape
+        from ..servedb import ServeDB, default_config, lookup as _lookup
+        c = self.cfg
+        if c.servedb is not None:
+            self._servedb = ServeDB(c.servedb)
+            do = self._servedb.lookup
+        else:
+            def do(kernel, shape, arch):       # DB-less: the static floor
+                return _lookup.LookupResult(
+                    kernel=kernel, arch=arch, shape=shape,
+                    config=default_config(kernel), tier="default",
+                    detail="default:no-db")
+        shape = attention_shape(self.model.cfg, c.max_len)
+        return {"flash_attention":
+                do("flash_attention", shape, c.arch)}
+
+    def kernel_config(self, kernel: str) -> dict:
+        """The tuned (or degraded-to-default) config the Pallas
+        deployment path uses for ``kernel``."""
+        plan = self.kernel_plan.get(kernel)
+        if plan is None:
+            from ..servedb import default_config
+            return default_config(kernel)
+        return dict(plan.config)
 
     # ------------------------------------------------------------------ #
     def _decode_fn(self, params, cache, token, positions, enc_out):

@@ -1,0 +1,49 @@
+"""Static default configs — the floor of the degradation chain.
+
+When the find-DB is absent, stale, corrupt, or simply has never seen a
+kernel, the lookup chain bottoms out here: one conservative config per
+kernel, chosen to satisfy each space's constraints at its *default*
+shape and to lean small (modest tiles, f32 accumulation) so they stay
+inside VMEM across the whole shape range rather than being fast anywhere
+in particular.  This is the paper's robustness floor: a served default
+is slower than a tuned config, but it always runs — the serving path
+never answers "no config".
+
+Keys are *table* names (``SearchSpace.name`` / ``ResultTable.problem``),
+the same namespace the snapshot's tables use — note ``flash_attention``,
+not the registry's ``attention``.
+"""
+
+from __future__ import annotations
+
+__all__ = ["STATIC_DEFAULTS", "default_config"]
+
+STATIC_DEFAULTS: dict[str, dict] = {
+    "flash_attention": {"block_q": 128, "block_kv": 128, "block_h": 1,
+                        "skip_masked": 1, "acc_dtype": "f32"},
+    "gemm": {"block_m": 128, "block_n": 128, "block_k": 128, "unroll_k": 1,
+             "grid_order": "mn", "split_k": 1, "acc_dtype": "f32",
+             "rhs_layout": "kn"},
+    "conv2d": {"block_h": 8, "block_w": 128, "unroll_fh": 1, "unroll_fw": 1,
+               "row_chunk": 0, "acc_dtype": "f32", "filter_smem": 1},
+    "dedisp": {"block_d": 8, "block_c": 8, "time_chunk": 0,
+               "unroll_d": 1, "acc_dtype": "f32"},
+    "expdist": {"block_i": 32, "block_j": 128, "use_column": 0,
+                "n_y_blocks": 1, "unroll_j": 1, "exp_variant": "exp",
+                "compute_dtype": "f32"},
+    "hotspot": {"block_h": 16, "block_w": 64, "tt": 1, "unroll_t": 1,
+                "keep_power_vmem": 0, "acc_dtype": "f32",
+                "grid_order": "rm"},
+    "nbody": {"block_i": 32, "block_j": 128, "layout": "soa", "unroll_j": 1,
+              "rsqrt_method": "exact", "compute_dtype": "f32"},
+    "pnpoly": {"block_points": 128, "unroll_v": 1,
+               "between_method": 0, "use_method": 0,
+               "precompute_slope": 1, "coord_layout": "soa"},
+}
+
+
+def default_config(kernel: str) -> dict:
+    """The static default for ``kernel`` — ``{}`` for kernels we have no
+    default for, so even an unknown name gets a (vacuous) answer instead
+    of an exception."""
+    return dict(STATIC_DEFAULTS.get(kernel, {}))

@@ -1,0 +1,489 @@
+"""servedb contract tests: atomic publish, quarantine, the degradation
+chain's ordering/determinism, hot reload, distillation, and the shared
+retry policy."""
+
+from __future__ import annotations
+
+import json
+import math
+import threading
+
+import pytest
+
+from repro.core.retry import RetryBudgetExceeded, backoff_delays, retry_call
+from repro.orchestrator import chaos
+from repro.orchestrator.runner import run_session
+from repro.orchestrator.session import SessionSpec
+from repro.orchestrator.store import SessionStore
+from repro.servedb import (STATIC_DEFAULTS, ServeDB, Snapshot, TIERS,
+                           default_config)
+from repro.servedb import snapshot as snap_mod
+from repro.servedb.distill import build_snapshot, load_binary
+from repro.servedb.lookup import _best_entry
+from repro.servedb.snapshot import (SNAPSHOT_NAME, load, publish, shape_key,
+                                    shape_distance, verify_dir)
+
+
+@pytest.fixture(autouse=True)
+def _no_chaos():
+    yield
+    chaos.uninstall()
+
+
+def _entry(shape, config, objective=1.0, protocol="session_x"):
+    return {"shape": shape, "config": config, "objective": objective,
+            "protocol": protocol, "trials": 10}
+
+
+def _snap(entries=None, heuristic=None, ttl_s=None):
+    group = {"param_names": ["a", "b"], "heuristic": heuristic,
+             "entries": entries or []}
+    return Snapshot(tables={"k": {"v5e": group}}, ttl_s=ttl_s)
+
+
+# --------------------------------------------------------------------- #
+# snapshot grammar + atomic publish
+# --------------------------------------------------------------------- #
+def test_publish_load_roundtrip(tmp_path):
+    snap = _snap([_entry({"n": 64}, {"a": 1, "b": 2})])
+    path = publish(snap, tmp_path)
+    assert path.name == SNAPSHOT_NAME
+    got, problems = load(tmp_path)
+    assert problems == []
+    assert got.generation == 1
+    assert got.tables == snap_mod._canonical_tables(snap.tables)
+    # republish bumps the generation, entries unchanged
+    publish(snap, tmp_path)
+    got2, _ = load(tmp_path)
+    assert got2.generation == 2
+    assert got2.tables == got.tables
+
+
+def test_publish_is_byte_deterministic(tmp_path):
+    a = _snap([_entry({"n": 64}, {"a": 1}), _entry({"n": 8}, {"a": 2})])
+    b = _snap([_entry({"n": 8}, {"a": 2}), _entry({"n": 64}, {"a": 1})])
+    a.generation = b.generation = 3
+    a.created_at = b.created_at = 123.0
+    assert a.to_bytes() == b.to_bytes()
+
+
+@pytest.mark.parametrize("corrupter", [
+    lambda raw: raw[: len(raw) // 2],                       # truncation
+    lambda raw: raw[:50] + bytes([raw[50] ^ 0x20]) + raw[51:],  # bitflip
+    lambda raw: b"not json at all",
+    lambda raw: b'{"header": {"magic": "something-else"}}',
+])
+def test_corrupt_snapshot_quarantines_without_raising(tmp_path, corrupter):
+    publish(_snap([_entry({}, {"a": 1})]), tmp_path)
+    p = tmp_path / SNAPSHOT_NAME
+    p.write_bytes(corrupter(p.read_bytes()))
+    got, problems = load(tmp_path)          # must not raise
+    assert got is None
+    assert problems and "quarantined" in problems[0]
+    assert not p.exists()                   # moved aside, never re-parsed
+    qdir = tmp_path / "quarantine"
+    assert list(qdir.glob("*.bad"))
+    report = verify_dir(tmp_path)
+    assert not report["ok"]
+    assert report["quarantined"]
+
+
+def test_binary_checksum_failure_disables_binary_only(tmp_path):
+    snap = _snap([_entry({}, {"a": 1})])
+    publish(snap, tmp_path, binary_bytes=b"not-an-npz-but-checksummed")
+    # corrupt the npz, not the JSON
+    binpath = next(tmp_path.glob("tables-g*.npz"))
+    binpath.write_bytes(b"rotted")
+    got, problems = load(tmp_path)
+    assert got is not None                  # JSON tables still serve
+    assert got.binary is None               # binary disabled
+    assert problems and "binary" in problems[0]
+
+
+def test_crash_between_temp_and_rename_preserves_old_snapshot(tmp_path):
+    publish(_snap([_entry({}, {"a": 1})]), tmp_path)
+    before = (tmp_path / SNAPSHOT_NAME).read_bytes()
+    chaos.install(chaos.FaultPlan(seed=3, rules=[
+        chaos.FaultRule("servedb.publish.crash", p=1.0, max_fires=1)]))
+    with pytest.raises(BaseException):
+        publish(_snap([_entry({}, {"a": 2})]), tmp_path)
+    # the live snapshot is byte-for-byte the old one; the temp artifact
+    # is diagnosable and the next publish succeeds
+    assert (tmp_path / SNAPSHOT_NAME).read_bytes() == before
+    report = verify_dir(tmp_path)
+    assert any("temp" in p for p in report["problems"])
+    publish(_snap([_entry({}, {"a": 2})]), tmp_path)
+    got, problems = load(tmp_path)
+    assert problems == []
+    assert got.tables["k"]["v5e"]["entries"][0]["config"] == {"a": 2}
+
+
+def test_corrupt_site_truncate_and_bitflip_are_detected(tmp_path):
+    for i, mode in enumerate(("truncate", "bitflip")):
+        root = tmp_path / mode
+        chaos.install(chaos.FaultPlan(seed=i, rules=[
+            chaos.FaultRule("servedb.snapshot.corrupt", p=1.0, max_fires=1,
+                            params={"mode": mode, "frac": 0.5})]))
+        publish(_snap([_entry({}, {"a": 1})]), root)
+        chaos.uninstall()
+        got, problems = load(root)
+        assert got is None
+        assert problems and "quarantined" in problems[0]
+
+
+def test_publish_lock_serializes_and_breaks_dead_holders(tmp_path):
+    # a live contender: publishes serialize, both land
+    snap = _snap([_entry({}, {"a": 1})])
+    errs = []
+
+    def contend():
+        try:
+            publish(snap, tmp_path)
+        except Exception as e:              # pragma: no cover
+            errs.append(e)
+
+    ts = [threading.Thread(target=contend) for _ in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errs
+    got, _ = load(tmp_path)
+    assert got.generation == 4
+    # a dead holder's lock is broken immediately (pid no longer exists)
+    lock = tmp_path / "publish.lock"
+    lock.write_text("999999999\n")
+    publish(snap, tmp_path)
+    assert load(tmp_path)[0].generation == 5
+
+
+# --------------------------------------------------------------------- #
+# the degradation chain
+# --------------------------------------------------------------------- #
+def _chain_db(tmp_path, **kw):
+    snap = _snap(
+        entries=[_entry({"n": 64}, {"a": 1, "b": 1}, objective=0.5),
+                 _entry({"n": 256}, {"a": 2, "b": 2}, objective=0.7)],
+        heuristic={"a": 9, "b": 9}, **kw)
+    snap.tables["k"]["v4"] = {
+        "param_names": ["a", "b"], "heuristic": None,
+        "entries": [_entry({"n": 64}, {"a": 7, "b": 7})]}
+    publish(snap, tmp_path)
+    return ServeDB(tmp_path, use_cost_model=False, reload_every_s=0.0)
+
+
+def test_chain_order_exact_nearest_heuristic_default(tmp_path):
+    db = _chain_db(tmp_path)
+    r = db.lookup("k", {"n": 64}, "v5e")
+    assert (r.tier, r.config) == ("exact", {"a": 1, "b": 1})
+    assert not r.degraded()
+    r = db.lookup("k", {"n": 96}, "v5e")    # log2-nearer to 64 than 256
+    assert (r.tier, r.config) == ("nearest", {"a": 1, "b": 1})
+    assert r.matched_shape == {"n": 64} and r.distance > 0
+    r = db.lookup("k", {"n": 300}, "v6e")   # arch absent -> cross-arch
+    assert r.tier == "heuristic"
+    assert r.detail == "heuristic:cross-arch:v4"
+    assert r.config == {"a": 7, "b": 7}
+    r = db.lookup("unknown_kernel", {}, "v5e")
+    assert (r.tier, r.config) == ("default", {})
+    assert db.lookup("gemm", {}, "v5e").config == STATIC_DEFAULTS["gemm"]
+    # the per-tier counters saw every answer
+    counts = db.tier_counts()
+    assert counts["exact"] == 1 and counts["nearest"] == 1
+    assert counts["heuristic"] == 1 and counts["default"] == 2
+
+
+def test_chain_heuristic_distilled_beats_default(tmp_path):
+    # an arch group with a heuristic but no entries: heuristic tier
+    snap = _snap(entries=[], heuristic={"a": 9, "b": 9})
+    publish(snap, tmp_path)
+    db = ServeDB(tmp_path, use_cost_model=False, reload_every_s=0.0)
+    r = db.lookup("k", {"n": 1}, "v5e")
+    assert (r.tier, r.detail) == ("heuristic", "heuristic:distilled")
+    assert r.config == {"a": 9, "b": 9}
+
+
+def test_nearest_is_deterministic_under_ties():
+    # two entries equidistant from the query: the smaller shape key wins,
+    # stably, regardless of list order
+    e1 = _entry({"n": 32}, {"a": 1})
+    e2 = _entry({"n": 128}, {"a": 2})
+    q = {"n": 64}
+    assert shape_distance(q, e1["shape"]) == shape_distance(q, e2["shape"])
+    for entries in ([e1, e2], [e2, e1]):
+        e, d = _best_entry(entries, q)
+        assert e["config"] == {"a": 2}      # {"n":128} sorts before {"n":32}
+        assert shape_key(e["shape"]) == min(shape_key(e1["shape"]),
+                                            shape_key(e2["shape"]))
+
+
+def test_shape_distance_is_log_scaled_and_total():
+    assert shape_distance({"n": 64}, {"n": 64}) == 0.0
+    assert shape_distance({"n": 64}, {"n": 128}) \
+        < shape_distance({"n": 64}, {"n": 1024})
+    # missing/non-numeric dims cost a fixed penalty, never raise
+    assert shape_distance({"n": 64}, {"m": 64}) > 30
+    assert math.isfinite(shape_distance({"n": "x"}, {"n": 64}))
+
+
+def test_lookup_never_raises_even_on_internal_error(tmp_path):
+    db = ServeDB(tmp_path / "nonexistent", use_cost_model=False,
+                 reload_every_s=3600.0)
+    r = db.lookup("k", {"n": 1}, "v5e")
+    assert r.tier == "default"
+    # poison the snapshot attribute outright: the chain's own failure
+    # still answers from the floor
+    db._snapshot = object()
+    r = db.lookup("k", {"n": 1}, "v5e")
+    assert r.tier == "default" and "chain-error" in r.detail
+
+
+def test_stale_snapshot_degrades_and_flags(tmp_path):
+    snap = _snap([_entry({"n": 64}, {"a": 1, "b": 1})], ttl_s=0.0)
+    snap.created_at = 1.0                   # long past its ttl
+    publish(snap, tmp_path)
+    db = ServeDB(tmp_path, use_cost_model=False, reload_every_s=0.0)
+    r = db.lookup("k", {"n": 64}, "v5e")
+    assert r.stale and r.tier == "default"  # tables skipped
+    # serve_stale: the hit is served, still flagged
+    db2 = ServeDB(tmp_path, use_cost_model=False, reload_every_s=0.0,
+                  serve_stale=True)
+    r2 = db2.lookup("k", {"n": 64}, "v5e")
+    assert r2.stale and r2.tier == "exact"
+    assert verify_dir(tmp_path)["snapshots"][0]["status"] == "stale"
+
+
+# --------------------------------------------------------------------- #
+# hot reload
+# --------------------------------------------------------------------- #
+def test_hot_reload_unchanged_snapshot_is_bit_identical(tmp_path):
+    db = _chain_db(tmp_path)
+    queries = [("k", {"n": 64}, "v5e"), ("k", {"n": 96}, "v5e"),
+               ("k", {"n": 1}, "v6e"), ("zzz", {}, "v5e")]
+    before = [db.lookup(*q) for q in queries]
+    # rewrite the identical bytes (mtime changes, content does not)
+    p = tmp_path / SNAPSHOT_NAME
+    raw = p.read_bytes()
+    p.write_bytes(raw)
+    assert db.reload(force=True) is False   # same generation: no swap event
+    after = [db.lookup(*q) for q in queries]
+    for b, a in zip(before, after):
+        assert (b.config, b.tier, b.detail, b.generation) \
+            == (a.config, a.tier, a.detail, a.generation)
+
+
+def test_hot_reload_picks_up_new_generation(tmp_path):
+    db = _chain_db(tmp_path)
+    assert db.lookup("k", {"n": 64}, "v5e").config == {"a": 1, "b": 1}
+    snap = _snap([_entry({"n": 64}, {"a": 5, "b": 5})])
+    publish(snap, tmp_path)
+    assert db.reload(force=True) is True
+    r = db.lookup("k", {"n": 64}, "v5e")
+    assert r.config == {"a": 5, "b": 5} and r.generation == 2
+
+
+def test_hot_reload_corrupt_replacement_keeps_serving_old(tmp_path):
+    db = _chain_db(tmp_path)
+    before = db.lookup("k", {"n": 64}, "v5e")
+    p = tmp_path / SNAPSHOT_NAME
+    p.write_bytes(p.read_bytes()[:100])     # torn replacement lands
+    db.reload(force=True)
+    assert db.problems()                    # detected + quarantined...
+    after = db.lookup("k", {"n": 64}, "v5e")
+    assert (after.tier, after.config) == (before.tier, before.config)
+    # ...and an intact republish restores bit-identical lookups
+    _chain_db(tmp_path)                     # republish same tables
+    db.reload(force=True)
+    restored = db.lookup("k", {"n": 64}, "v5e")
+    assert (restored.tier, restored.config, restored.detail) \
+        == (before.tier, before.config, before.detail)
+
+
+# --------------------------------------------------------------------- #
+# distillation from a real campaign store
+# --------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def toy_store(tmp_path_factory):
+    root = tmp_path_factory.mktemp("store")
+    store = SessionStore(root)
+    for problem, arch in (("toy_quad", "v5e"), ("toy_quad", "v4"),
+                          ("toy_rastrigin", "v5e")):
+        spec = SessionSpec(problem=problem, tuner="random", arch=arch,
+                           budget=16, seed=0, workers=2)
+        store.create(spec)
+        run_session(spec, store=store, mode="thread")
+    return root
+
+
+def test_distill_serves_campaign_best(toy_store, tmp_path):
+    snap, binary, problems = build_snapshot(toy_store)
+    assert problems == []
+    assert snap.kernels() == ["toy_quad", "toy_rastrigin"]
+    publish(snap, tmp_path, binary_bytes=binary)
+    db = ServeDB(tmp_path, use_cost_model=False, reload_every_s=0.0)
+    store = SessionStore(toy_store)
+    for kernel, arch in (("toy_quad", "v5e"), ("toy_quad", "v4"),
+                         ("toy_rastrigin", "v5e")):
+        r = db.lookup(kernel, {}, arch)
+        assert r.tier == "exact"
+        sid = r.detail[len("session_"):]
+        table = store.tables.get(kernel, arch, r.detail)
+        best_cfg, best_obj = table.best()
+        assert r.objective == best_obj
+        spec = store.load_spec(sid)
+        assert spec.arch == arch
+
+
+def test_binary_export_roundtrips_to_json_configs(toy_store, tmp_path):
+    snap, binary, _ = build_snapshot(toy_store)
+    assert binary is not None
+    publish(snap, tmp_path, binary_bytes=binary)
+    loaded, problems = load(tmp_path)
+    assert problems == [] and loaded.binary is not None
+    bins = load_binary(tmp_path, loaded)
+    assert bins is not None
+    for kernel, archs in loaded.tables.items():
+        for arch, group in archs.items():
+            entries = group["entries"]      # already in canonical order
+            got = bins[kernel][arch]
+            assert got["configs"] == [e["config"] for e in entries]
+            assert list(got["objectives"]) == \
+                [e["objective"] for e in entries]
+            assert got["shapes"] == [shape_key(e["shape"]) for e in entries]
+
+
+def test_distill_keeps_best_across_sessions(toy_store, tmp_path):
+    # a second, bigger-budget session for the same cell must win iff
+    # it finds a strictly better objective
+    store = SessionStore(toy_store)
+    spec = SessionSpec(problem="toy_quad", tuner="genetic", arch="v5e",
+                       budget=48, seed=1, workers=2)
+    store.create(spec)
+    run_session(spec, store=store, mode="thread")
+    snap, _, problems = build_snapshot(toy_store, with_binary=False)
+    assert problems == []
+    entries = snap.tables["toy_quad"]["v5e"]["entries"]
+    assert len(entries) == 1                # one shape cell, best-of kept
+    objs = [math.inf]
+    for kernel, arch, protocol in store.tables.list_tables():
+        if kernel == "toy_quad" and arch == "v5e":
+            objs.append(store.tables.get(kernel, arch, protocol).best()[1])
+    assert entries[0]["objective"] == min(objs)
+
+
+def test_list_tables_inverts_the_naming_scheme(toy_store):
+    store = SessionStore(toy_store)
+    keys = store.tables.list_tables()
+    assert keys == sorted(keys)
+    for problem, arch, protocol in keys:
+        assert store.tables.has(problem, arch, protocol)
+        t = store.tables.get(problem, arch, protocol)
+        assert (t.problem, t.arch) == (problem, arch)
+
+
+# --------------------------------------------------------------------- #
+# static defaults stay valid configs
+# --------------------------------------------------------------------- #
+def test_static_defaults_are_valid_at_default_shapes():
+    jax = pytest.importorskip("jax")        # noqa: F841 — kernel stack
+    from repro.orchestrator.registry import make_problem
+    from repro.servedb.distill import REGISTRY_NAME
+    for kernel, cfg in STATIC_DEFAULTS.items():
+        problem = make_problem(REGISTRY_NAME[kernel])
+        space = problem.space
+        assert set(cfg) == set(space.param_names), kernel
+        space.encode(cfg)                   # every value in its alphabet
+        assert space.satisfies(cfg), \
+            f"{kernel} default violates a constraint: {cfg}"
+    assert default_config("no_such_kernel") == {}
+
+
+# --------------------------------------------------------------------- #
+# the shared retry policy
+# --------------------------------------------------------------------- #
+def test_backoff_delays_bounded_and_deterministic():
+    a = list(backoff_delays(6, base_s=0.01, max_s=0.2, salt="x"))
+    b = list(backoff_delays(6, base_s=0.01, max_s=0.2, salt="x"))
+    assert a == b                           # replayable
+    assert len(a) == 6
+    raw = [0.01, 0.02, 0.04, 0.08, 0.16, 0.2]
+    for got, cap in zip(a, raw):
+        assert cap * 0.5 <= got <= cap      # jitter scales in [1-j, 1]
+    assert a != list(backoff_delays(6, base_s=0.01, max_s=0.2, salt="y"))
+    plain = list(backoff_delays(6, base_s=0.01, max_s=0.2, jitter=0.0))
+    assert plain == raw                     # jitter=0: capped doubling
+
+
+def test_retry_call_budget_and_predicate():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise TimeoutError("busy")
+        return "ok"
+
+    slept = []
+    assert retry_call(flaky, retries=5,
+                      retry_on=lambda e: isinstance(e, TimeoutError),
+                      sleep=slept.append) == "ok"
+    assert len(calls) == 3 and len(slept) == 2
+    # a non-transient error propagates immediately, unretried
+    calls.clear()
+    with pytest.raises(ValueError):
+        retry_call(lambda: (_ for _ in ()).throw(ValueError("no")),
+                   retries=5, retry_on=lambda e: False, sleep=slept.append)
+    # exhausted budget with `what`: the summary error names the operation
+    with pytest.raises(RetryBudgetExceeded, match="the op"):
+        retry_call(lambda: (_ for _ in ()).throw(TimeoutError("busy")),
+                   retries=2, retry_on=lambda e: True, what="the op",
+                   sleep=lambda s: None)
+
+
+# --------------------------------------------------------------------- #
+# doctor + CLI integration
+# --------------------------------------------------------------------- #
+def test_doctor_triages_servedb(toy_store, tmp_path, capsys):
+    from repro.orchestrator.cli import main as cli_main
+    snap, binary, _ = build_snapshot(toy_store)
+    publish(snap, tmp_path, binary_bytes=binary)
+    assert cli_main(["doctor", "--store", str(toy_store),
+                     "--servedb", str(tmp_path), "--json"]) == 0
+    report = json.loads(capsys.readouterr().out)
+    assert report["servedb"]["ok"]
+    assert report["servedb"]["snapshots"][0]["status"] == "ok"
+    # corrupt it: doctor flags, exit 1, one verdict line rendered
+    p = tmp_path / SNAPSHOT_NAME
+    p.write_bytes(p.read_bytes()[:-40])
+    assert cli_main(["doctor", "--store", str(toy_store),
+                     "--servedb", str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert "CORRUPT" in out
+    assert p.exists()                       # doctor is read-only
+
+
+def test_cli_servedb_build_query_verify(toy_store, tmp_path, capsys):
+    from repro.orchestrator.cli import main as cli_main
+    db = str(tmp_path / "db")
+    assert cli_main(["servedb", "build", "--store", str(toy_store),
+                     "--db", db]) == 0
+    capsys.readouterr()
+    assert cli_main(["servedb", "query", "--db", db, "--kernel", "toy_quad",
+                     "--arch", "v5e", "--json"]) == 0
+    res = json.loads(capsys.readouterr().out)
+    assert res["tier"] == "exact" and res["generation"] == 1
+    assert cli_main(["servedb", "verify", "--db", db]) == 0
+    capsys.readouterr()
+    # degraded-but-alive: corrupt, query still answers, verify exits 1
+    from pathlib import Path
+    sp = Path(db) / SNAPSHOT_NAME
+    sp.write_bytes(sp.read_bytes()[: 80])
+    assert cli_main(["servedb", "query", "--db", db, "--kernel", "toy_quad",
+                     "--arch", "v5e", "--json"]) == 0
+    res = json.loads(capsys.readouterr().out)
+    assert res["tier"] in TIERS and res["tier"] != "exact"
+    assert cli_main(["servedb", "verify", "--db", db]) == 1
+    capsys.readouterr()
+    # build needs --store; query needs --kernel
+    assert cli_main(["servedb", "build", "--db", db]) == 2
+    assert cli_main(["servedb", "query", "--db", db]) == 2
