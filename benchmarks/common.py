@@ -19,12 +19,11 @@ keep reproducing the published sampled-table numbers.
 from __future__ import annotations
 
 import csv
-import sys
 import time
 from pathlib import Path
 
 from repro.core.costmodel import ARCH_NAMES
-from repro.core.results import ResultsDB, ResultTable
+from repro.core.results import ResultsDB
 from repro.core.spacetable import set_cache_dir
 from repro.kernels.attention.space import AttentionProblem
 from repro.kernels.conv2d.space import Conv2dProblem

@@ -10,7 +10,6 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.analysis.distribution import (distribution_profile,
-                                              relative_performance,
                                               top_cluster_fraction)
 from repro.core.costmodel import ARCH_NAMES
 

@@ -7,7 +7,6 @@ kept in a separate column for comparison (they undercount scan bodies)."""
 from __future__ import annotations
 
 import json
-from pathlib import Path
 
 from .common import ROOT, emit, write_csv
 

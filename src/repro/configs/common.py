@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from ..models.transformer import BlockSpec, ModelConfig
+from ..models.transformer import ModelConfig
 
 # ------------------------------------------------------------------ #
 # assigned input-shape cells (LM transformer shapes)

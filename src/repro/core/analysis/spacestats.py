@@ -8,7 +8,6 @@ params only), Reduce-Constrained.
 
 from __future__ import annotations
 
-import math
 
 from ..problem import TunableProblem
 from ..space import SearchSpace

@@ -12,10 +12,9 @@ configs can be encoded to index vectors and back.
 from __future__ import annotations
 
 import itertools
-import math
 import random
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import TYPE_CHECKING, Any, Callable, Iterator, Sequence
 
 if TYPE_CHECKING:  # pragma: no cover

@@ -23,12 +23,11 @@ reverse pipeline automatically).
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 def stage_permutation(n_stages: int) -> list[tuple[int, int]]:

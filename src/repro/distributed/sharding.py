@@ -23,7 +23,6 @@ import contextvars
 from typing import Any
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _MESH: contextvars.ContextVar[Mesh | None] = \

@@ -31,7 +31,10 @@ class AttentionProblem(KernelProblem):
         params = [
             Param("block_q", (64, 128, 256, 512, 1024)),
             Param("block_kv", (128, 256, 512, 1024, 2048)),
-            Param("block_h", (1, 2, 4, 8)),
+            # menu trimmed to this shape's GQA group: block_h values that
+            # can never satisfy gqa_group are dead rows (space audit)
+            Param("block_h", tuple(v for v in (1, 2, 4, 8)
+                                   if v <= g and g % v == 0)),
             Param("skip_masked", (0, 1)),
             Param("acc_dtype", ("f32", "bf16")),
         ]

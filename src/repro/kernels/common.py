@@ -16,7 +16,6 @@ against the oracles.
 
 from __future__ import annotations
 
-import math
 from typing import Any
 
 import jax

@@ -11,7 +11,7 @@ import numpy as np
 
 from ...core.costmodel import FeatureBatch, KernelFeatures
 from ...core.space import Config, Constraint, Param, SearchSpace
-from ..common import PORTABLE_VMEM, KernelProblem, cdiv, round_up
+from ..common import PORTABLE_VMEM, KernelProblem, cdiv
 from . import kernel, ref
 
 

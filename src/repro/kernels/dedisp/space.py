@@ -34,7 +34,11 @@ class DedispProblem(KernelProblem):
         params = [
             Param("block_d", (8, 16, 32, 64, 128, 256, 512)),
             Param("block_c", (1, 2, 4, 8, 16, 32, 64)),
-            Param("time_chunk", (0, 256, 512, 1024, 2048, 4096, 8192)),
+            # chunks larger than t_out are dead rows (space audit): 0
+            # already means "whole t_out", so trim the menu to the shape
+            Param("time_chunk", tuple(v for v in (0, 256, 512, 1024,
+                                                  2048, 4096, 8192)
+                                      if v <= self.shape["t_out"])),
             Param("unroll_d", (1, 2, 4, 8)),
             Param("acc_dtype", ("f32", "bf16")),
         ]

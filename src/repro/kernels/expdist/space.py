@@ -25,11 +25,17 @@ class ExpdistProblem(KernelProblem):
             ws = 3 * bi * 4 + 3 * bj * 4 + inter + c["n_y_blocks"] * 4
             return 2 * ws <= PORTABLE_VMEM
 
+        bj_vals = (128, 256, 512, 1024, 2048)
+        # n_y_blocks beyond the largest possible j-grid (smallest block_j)
+        # can never satisfy njb_le_grid: dead rows (space audit)
+        max_grid = cdiv(self.shape["kb"], min(bj_vals))
         params = [
             Param("block_i", (8, 16, 32, 64, 128, 256, 512)),
-            Param("block_j", (128, 256, 512, 1024, 2048)),
+            Param("block_j", bj_vals),
             Param("use_column", (0, 1)),
-            Param("n_y_blocks", (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)),
+            Param("n_y_blocks", tuple(v for v in (1, 2, 4, 8, 16, 32, 64,
+                                                  128, 256, 512, 1024)
+                                      if v <= max_grid)),
             Param("unroll_j", (1, 2, 4)),
             Param("exp_variant", ("exp", "exp2")),
             Param("compute_dtype", ("f32", "bf16")),

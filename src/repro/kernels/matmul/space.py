@@ -6,9 +6,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ...core.costmodel import TPU_GENERATIONS, FeatureBatch, KernelFeatures
+from ...core.costmodel import FeatureBatch, KernelFeatures
 from ...core.space import Config, Constraint, Param, SearchSpace
-from ..common import PORTABLE_VMEM, KernelProblem, cdiv, round_up
+from ..common import PORTABLE_VMEM, KernelProblem, round_up
 from . import kernel, ref
 
 

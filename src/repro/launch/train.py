@@ -18,7 +18,6 @@ by step index.  Re-launching this command is the whole recovery protocol.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import os
 

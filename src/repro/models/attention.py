@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from ..distributed.sharding import axis_size as _tp_axis, constrain
-from .layers import _init, apply_rope, norm_param, rms_norm
+from .layers import _init, apply_rope, rms_norm
 
 NEG_INF = -1e30
 

@@ -7,7 +7,6 @@ remainder layers are unrolled.  Remat wraps the scan body.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -14,7 +14,6 @@ via config.frontend.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -24,8 +23,7 @@ from . import attention as attn
 from . import moe as moe_lib
 from . import rglru as rglru_lib
 from . import rwkv6 as rwkv_lib
-from .layers import (embed, make_embedding, make_mlp, mlp, norm_param,
-                     rms_norm, unembed)
+from .layers import make_mlp, mlp, norm_param, rms_norm
 
 
 @dataclasses.dataclass(frozen=True)

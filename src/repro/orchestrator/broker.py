@@ -80,10 +80,6 @@ __all__ = ["Broker", "MemoryBroker", "SQLiteBroker",
            "encode_trial", "decode_trials"]
 
 
-def _now() -> float:
-    # the chaos plane can skew one reading (site broker.clock.skew) to
-    # attack the lease arithmetic; 0.0 whenever chaos is off
-    return time.time() + chaos.skew()
 
 
 # --------------------------------------------------------------------- #
@@ -132,6 +128,16 @@ class Broker:
     protocol.  Subclasses implement the storage primitives."""
 
     max_attempts: int = 3
+    #: lease-arithmetic time source.  Wall clock by default because
+    #: lease deadlines are persisted epochs shared across processes (a
+    #: monotonic clock has no cross-process meaning); injectable so
+    #: tests drive expiry deterministically instead of sleeping it out.
+    clock = staticmethod(time.time)
+
+    def _now(self) -> float:
+        # the chaos plane can skew one reading (site broker.clock.skew)
+        # to attack the lease arithmetic; 0.0 whenever chaos is off
+        return self.clock() + chaos.skew()
 
     # -- driver side ------------------------------------------------------ #
     def submit(self, payload: dict) -> int:
@@ -227,9 +233,12 @@ class MemoryBroker(Broker):
     """
 
     def __init__(self, max_attempts: int = 3,
-                 metrics_sink: str | Path | None = None):
+                 metrics_sink: str | Path | None = None,
+                 clock=None):
         self.max_attempts = max_attempts
         self.metrics_sink = Path(metrics_sink) if metrics_sink else None
+        if clock is not None:
+            self.clock = clock
         self._lock = threading.Lock()
         self._jobs: dict[int, dict] = {}
         self._metrics: list[dict] = []
@@ -243,11 +252,11 @@ class MemoryBroker(Broker):
                 "id": jid, "payload": payload, "state": PENDING,
                 "attempts": 0, "worker": None, "lease_expires": None,
                 "heartbeat": None, "result": None, "error": None,
-                "created": _now()}
+                "created": self._now()}
             return jid
 
     def _reap_locked(self) -> int:
-        now, n = _now(), 0
+        now, n = self._now(), 0
         for j in self._jobs.values():
             if j["state"] == LEASED and j["lease_expires"] < now:
                 n += 1
@@ -273,8 +282,8 @@ class MemoryBroker(Broker):
                     j["state"] = LEASED
                     j["worker"] = worker
                     j["attempts"] += 1
-                    j["lease_expires"] = _now() + lease_s
-                    j["heartbeat"] = _now()
+                    j["lease_expires"] = self._now() + lease_s
+                    j["heartbeat"] = self._now()
                     return j["id"], j["payload"]
             return None
 
@@ -289,8 +298,8 @@ class MemoryBroker(Broker):
             j = self._owned(job_id, worker)
             if j is None:
                 return False
-            j["lease_expires"] = _now() + lease_s
-            j["heartbeat"] = _now()
+            j["lease_expires"] = self._now() + lease_s
+            j["heartbeat"] = self._now()
             return True
 
     def complete(self, job_id: int, worker: str, result: dict) -> bool:
@@ -345,7 +354,7 @@ class MemoryBroker(Broker):
 
     def in_flight(self) -> list[dict]:
         with self._lock:
-            now = _now()
+            now = self._now()
             return [{"job": j["id"], "worker": j["worker"],
                      "heartbeat_age": now - j["heartbeat"],
                      "lease_remaining": j["lease_expires"] - now,
@@ -356,7 +365,7 @@ class MemoryBroker(Broker):
 
     def record_metrics(self, worker: str, samples, ts: float | None = None
                        ) -> None:
-        ts = _now() if ts is None else ts
+        ts = self._now() if ts is None else ts
         recs = [{"ts": ts, "worker": worker, "name": s["name"],
                  "value": float(s["value"]),
                  "kind": s.get("kind", "counter")} for s in samples]
@@ -388,7 +397,7 @@ class _Tx:
         self.conn = conn
 
     def __enter__(self) -> sqlite3.Cursor:
-        busy = chaos.fire("broker.busy")
+        busy = chaos.fire(chaos.BROKER_BUSY)
         if busy is not None:
             # what sqlite raises when busy_timeout expires under a storm
             raise sqlite3.OperationalError("database is locked (chaos)")
@@ -473,9 +482,12 @@ class SQLiteBroker(Broker):
     """
 
     def __init__(self, path: str | Path, max_attempts: int = 3,
-                 timeout_s: float = 30.0, busy_retries: int = 5):
+                 timeout_s: float = 30.0, busy_retries: int = 5,
+                 clock=None):
         self.path = Path(path)
         self.max_attempts = max_attempts
+        if clock is not None:
+            self.clock = clock
         self.timeout_s = timeout_s
         # SQLITE_BUSY past the busy_timeout is transient, not fatal: each
         # mutation (one self-contained IMMEDIATE tx) re-runs up to this
@@ -514,11 +526,11 @@ class SQLiteBroker(Broker):
         with self._tx() as cur:
             cur.execute(
                 "INSERT INTO jobs (payload, state, created) VALUES (?,?,?)",
-                (json.dumps(payload, separators=(",", ":")), PENDING, _now()))
+                (json.dumps(payload, separators=(",", ":")), PENDING, self._now()))
             return cur.lastrowid
 
     def _reap_cur(self, cur: sqlite3.Cursor) -> int:
-        now = _now()
+        now = self._now()
         cur.execute(
             "UPDATE jobs SET "
             " state=CASE WHEN attempts >= ? THEN ? ELSE ? END,"
@@ -546,7 +558,7 @@ class SQLiteBroker(Broker):
                 "ORDER BY id LIMIT 1", (PENDING,)).fetchone()
             if row is None:
                 return None
-            now = _now()
+            now = self._now()
             cur.execute(
                 "UPDATE jobs SET state=?, worker=?, attempts=attempts+1,"
                 " lease_expires=?, heartbeat=? WHERE id=?",
@@ -556,7 +568,7 @@ class SQLiteBroker(Broker):
     @_busy_retry
     def heartbeat(self, job_id: int, worker: str, lease_s: float) -> bool:
         with self._tx() as cur:
-            now = _now()
+            now = self._now()
             cur.execute(
                 "UPDATE jobs SET lease_expires=?, heartbeat=? "
                 "WHERE id=? AND state=? AND worker=?",
@@ -630,7 +642,7 @@ class SQLiteBroker(Broker):
         return out
 
     def in_flight(self) -> list[dict]:
-        now = _now()
+        now = self._now()
         return [{"job": row["id"], "worker": row["worker"],
                  "heartbeat_age": now - row["heartbeat"],
                  "lease_remaining": row["lease_expires"] - now,
@@ -645,7 +657,7 @@ class SQLiteBroker(Broker):
     @_busy_retry
     def record_metrics(self, worker: str, samples, ts: float | None = None
                        ) -> None:
-        ts = _now() if ts is None else ts
+        ts = self._now() if ts is None else ts
         rows = [(ts, worker, s["name"], float(s["value"]),
                  s.get("kind", "counter")) for s in samples]
         if not rows:

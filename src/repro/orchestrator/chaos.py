@@ -54,35 +54,53 @@ from pathlib import Path
 
 __all__ = ["SITES", "FaultRule", "FaultPlan", "ChaosCrash",
            "install", "uninstall", "active", "current_plan",
-           "fire", "sleep", "skew", "die", "crash", "stats"]
+           "fire", "sleep", "skew", "die", "crash", "stats",
+           "WORKER_CRASH_BEFORE_COMPLETE", "JOURNAL_APPEND_TORN",
+           "WORKER_HEARTBEAT_STALL", "EVAL_HANG", "BROKER_BUSY",
+           "BROKER_CLOCK_SKEW", "SERVEDB_PUBLISH_CRASH",
+           "SERVEDB_SNAPSHOT_CORRUPT"]
 
+
+# Site names as importable constants: call sites (and fault plans built
+# in code) reference these instead of re-typing the string — a typo'd
+# site then fails at import/lint time, not by silently never firing.
+# `repro lint` (staticcheck rule chaos-site) enforces that any literal
+# site string appearing in src/ is a member of SITES.
+WORKER_CRASH_BEFORE_COMPLETE = "worker.crash.before_complete"
+JOURNAL_APPEND_TORN = "journal.append.torn"
+WORKER_HEARTBEAT_STALL = "worker.heartbeat.stall"
+EVAL_HANG = "eval.hang"
+BROKER_BUSY = "broker.busy"
+BROKER_CLOCK_SKEW = "broker.clock.skew"
+SERVEDB_PUBLISH_CRASH = "servedb.publish.crash"
+SERVEDB_SNAPSHOT_CORRUPT = "servedb.snapshot.corrupt"
 
 #: every injection point, with its seam and the rule params it honors
 SITES = {
-    "worker.crash.before_complete":
+    WORKER_CRASH_BEFORE_COMPLETE:
         "BrokerWorker.serve_one — die after evaluating, before complete "
         "(params: exit=bool for os._exit, exit_code=int)",
-    "journal.append.torn":
+    JOURNAL_APPEND_TORN:
         "SessionStore.append_trials — crash mid-write, leaving a "
         "genuinely torn final line (params: frac=float cut point, "
         "exit/exit_code)",
-    "worker.heartbeat.stall":
+    WORKER_HEARTBEAT_STALL:
         "BrokerWorker heartbeat loop — skip lease renewals for stall_s "
         "seconds (params: stall_s=float)",
-    "eval.hang":
+    EVAL_HANG:
         "WorkerPool chunk/retry evaluation — sleep hang_s before "
         "evaluating (params: hang_s=float)",
-    "broker.busy":
+    BROKER_BUSY:
         "SQLiteBroker transaction entry — raise OperationalError "
         "'database is locked' (no params)",
-    "broker.clock.skew":
+    BROKER_CLOCK_SKEW:
         "broker _now() — offset this one clock reading by skew_s "
         "seconds (params: skew_s=float)",
-    "servedb.publish.crash":
+    SERVEDB_PUBLISH_CRASH:
         "servedb snapshot publish — die after the temp file is written "
         "and fsynced but before the rename commits it, leaving only the "
         "temp artifact (params: exit=bool for os._exit, exit_code=int)",
-    "servedb.snapshot.corrupt":
+    SERVEDB_SNAPSHOT_CORRUPT:
         "servedb snapshot publish — corrupt the just-published snapshot "
         "bytes in place, as a torn or bit-rotted sector would (params: "
         "mode='truncate'|'bitflip', frac=float cut/flip point)",
@@ -279,7 +297,7 @@ def sleep(site: str, default_s: float = 1.0) -> bool:
     return True
 
 
-def skew(site: str = "broker.clock.skew") -> float:
+def skew(site: str = BROKER_CLOCK_SKEW) -> float:
     """Clock offset for this one reading (0.0 when the site is quiet)."""
     params = fire(site)
     if params is None:

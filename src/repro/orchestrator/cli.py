@@ -20,6 +20,10 @@ Subcommands::
                traces into an atomically-published, checksummed
                snapshot), query (the never-raise degradation chain),
                verify (offline snapshot/quarantine triage)
+    lint     — static contract checks (wall-clock/RNG in deterministic
+               seams, chaos-site registry, telemetry naming, journal
+               grammar, broker transactions, retry policy) plus
+               --spaces search-space audits; --strict is the CI gate
 
 Example::
 
@@ -479,6 +483,61 @@ def _run_servedb(args) -> int:
     return 0 if report["ok"] else 1
 
 
+def _run_lint(args) -> int:
+    """``lint`` subcommand body: contract checks (+ space audit)."""
+    from pathlib import Path
+
+    from ..staticcheck import (Engine, apply_baseline, default_rules,
+                               load_baseline, write_baseline)
+    if args.paths:
+        paths = [Path(p) for p in args.paths]
+        root = Path.cwd()
+    else:
+        # default: the installed package itself, wherever it lives
+        # (repro is a namespace package: locate it via __path__)
+        import repro
+        pkg = Path(next(iter(repro.__path__)))
+        paths, root = [pkg], pkg.parent
+
+    engine = Engine(default_rules(), root=root)
+    findings = engine.lint_paths(paths)
+    if args.write_baseline:
+        write_baseline(args.write_baseline, findings)
+        print(f"lint: baseline with {len(findings)} finding(s) "
+              f"written to {args.write_baseline}")
+        return 0
+    if args.baseline:
+        findings = apply_baseline(findings, load_baseline(args.baseline))
+
+    audits = []
+    if args.spaces:
+        from ..staticcheck import audit_space
+        from .registry import make_problem, problem_names
+        for name in problem_names():
+            audits.append(audit_space(make_problem(name).space))
+
+    bad_audits = [a for a in audits if not a.ok]
+    if args.json:
+        print(json.dumps(
+            {"findings": [f.to_json() for f in findings],
+             "spaces": [a.to_json() for a in audits],
+             "ok": not findings and not bad_audits},
+            separators=(",", ":")))
+    else:
+        for f in findings:
+            print(f.render())
+        for a in audits:
+            print(a.render())
+        n = len(findings) + len(bad_audits)
+        print(f"lint: {len(findings)} finding(s)"
+              + (f", {len(bad_audits)}/{len(audits)} space(s) failing"
+                 if audits else "")
+              + ("" if n else " — clean"))
+    if args.strict and (findings or bad_audits):
+        return 1
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="repro.orchestrator",
@@ -684,6 +743,10 @@ def main(argv: list[str] | None = None) -> int:
     p_dr.add_argument("--servedb", default=None, metavar="DB",
                       help="find-DB dir: also triage servedb snapshots "
                            "(checksum verdicts, quarantine listing)")
+    p_dr.add_argument("--lint", action="store_true",
+                      help="also run the staticcheck contract rules over "
+                           "the installed repro package and fold findings "
+                           "into the problem list")
     p_dr.add_argument("--json", action="store_true",
                       help="emit the full report as one JSON object")
 
@@ -722,6 +785,28 @@ def main(argv: list[str] | None = None) -> int:
                       help="query: serve flagged-stale table hits instead "
                            "of degrading past a stale snapshot")
     p_sv.add_argument("--json", action="store_true",
+                      help="machine-readable output")
+
+    p_li = sub.add_parser(
+        "lint",
+        help="static contract checks + search-space audit")
+    p_li.add_argument("paths", nargs="*", metavar="PATH",
+                      help="files/directories to lint (default: the "
+                           "installed repro package)")
+    p_li.add_argument("--strict", action="store_true",
+                      help="exit 1 on any non-baselined finding (CI gate); "
+                           "default is advisory (always exit 0)")
+    p_li.add_argument("--baseline", default=None, metavar="JSON",
+                      help="tolerate the findings recorded in this "
+                           "baseline file, report only new ones")
+    p_li.add_argument("--write-baseline", default=None, metavar="JSON",
+                      help="record the current findings to JSON and exit 0 "
+                           "(how a baseline is [re]generated)")
+    p_li.add_argument("--spaces", action="store_true",
+                      help="also audit every registered kernel search "
+                           "space (dead values, unsatisfiable/redundant "
+                           "constraints, Hamming-1 connectivity)")
+    p_li.add_argument("--json", action="store_true",
                       help="machine-readable output")
 
     args = ap.parse_args(argv)
@@ -835,6 +920,9 @@ def _dispatch(args) -> int:
     if args.cmd == "servedb":
         return _run_servedb(args)
 
+    if args.cmd == "lint":
+        return _run_lint(args)
+
     store = SessionStore(args.store)
 
     if args.cmd == "doctor":
@@ -851,7 +939,8 @@ def _dispatch(args) -> int:
                       file=sys.stderr)
                 return 2
             broker = SQLiteBroker(args.broker)
-        report = diagnose(store, broker, servedb=args.servedb)
+        report = diagnose(store, broker, servedb=args.servedb,
+                          lint=args.lint)
         if args.json:
             print(json.dumps(report, separators=(",", ":")))
         else:

@@ -20,6 +20,10 @@ it only reads.  Checks:
   verification of the live snapshot (and its binary export), stale-TTL
   flags, quarantine listing, leftover publish temp files; one verdict
   per snapshot artifact.
+* **Contracts** (``--lint``) — run the :mod:`repro.staticcheck` rule
+  engine over the installed package and fold any findings into the
+  problem list, so an on-call triage also surfaces contract drift in
+  the deployed code (see "Checked contracts" in docs/architecture.md).
 
 Everything lands in one report dict (``--json``); exit status 1 when
 problems were found, 0 when clean.
@@ -62,11 +66,14 @@ def _scan_journal(path: Path) -> dict:
 
 
 def diagnose(store: SessionStore, broker: Broker | None = None,
-             servedb: str | Path | None = None) -> dict:
+             servedb: str | Path | None = None,
+             lint: bool = False) -> dict:
     """Inspect ``store`` (and optionally ``broker`` and a find-DB dir);
     returns the report: ``{"sessions": [...], "broker": {...}|None,
-    "servedb": {...}|None, "problems": [...], "ok": bool}``.  Read-only —
-    never reaps, pops, quarantines, or mutates."""
+    "servedb": {...}|None, "lint": {...}|None, "problems": [...],
+    "ok": bool}``.  Read-only — never reaps, pops, quarantines, or
+    mutates.  ``lint=True`` additionally runs the staticcheck contract
+    rules over the installed ``repro`` package."""
     problems: list[str] = []
 
     # sessions whose batches are in flight on the fleet right now
@@ -76,6 +83,11 @@ def diagnose(store: SessionStore, broker: Broker | None = None,
         in_flight = broker.in_flight()
         for j in in_flight:
             leased_sids.update(j.get("sessions", []))
+
+    # published traces are keyed by the problem's *kernel* name, which
+    # can differ from the registry name (attention -> flash_attention) —
+    # match on the session-unique protocol tag instead of guessing the key
+    published_tags = {prot for _, _, prot in store.tables.list_tables()}
 
     sessions = []
     for sid in store.list_sessions():
@@ -93,8 +105,7 @@ def diagnose(store: SessionStore, broker: Broker | None = None,
             entry["journal_version"] = "v2"
         else:
             entry["journal_version"] = None
-        entry["published"] = store.tables.has(
-            spec.get("problem", "?"), spec.get("arch", "?"), f"session_{sid}")
+        entry["published"] = f"session_{sid}" in published_tags
 
         if scan["torn_lines"]:
             problems.append(
@@ -154,9 +165,19 @@ def diagnose(store: SessionStore, broker: Broker | None = None,
         servedb_report = verify_dir(servedb)
         problems.extend(f"servedb: {p}" for p in servedb_report["problems"])
 
+    lint_report = None
+    if lint:
+        import repro
+
+        from ..staticcheck import Engine, default_rules
+        pkg = Path(next(iter(repro.__path__)))
+        findings = Engine(default_rules(), root=pkg.parent).lint_paths([pkg])
+        lint_report = {"findings": [f.to_json() for f in findings]}
+        problems.extend(f"lint: {f.render()}" for f in findings)
+
     return {"store": str(store.root), "generated_at": time.time(),
             "sessions": sessions, "broker": broker_report,
-            "servedb": servedb_report,
+            "servedb": servedb_report, "lint": lint_report,
             "problems": problems, "ok": not problems}
 
 
@@ -204,6 +225,10 @@ def render_report(report: dict) -> str:
         if sv["quarantined"]:
             lines.append(f"  servedb: {len(sv['quarantined'])} "
                          f"quarantined artifact(s)")
+    if report.get("lint") is not None:
+        n = len(report["lint"]["findings"])
+        lines.append(f"  lint: {n} contract finding(s)"
+                     + ("" if n else " — clean"))
     if report["problems"]:
         lines.append(f"problems ({len(report['problems'])}):")
         lines.extend(f"  - {p}" for p in report["problems"])

@@ -19,7 +19,7 @@ and the job requeued), and a job whose attempts cap is exhausted is
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Optional
 
 from ..core.space import Config

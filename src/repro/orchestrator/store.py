@@ -83,12 +83,20 @@ def _json_safe_info(info: dict) -> dict:
 
 
 class SessionStore:
-    """Directory-backed session state with atomic metadata updates."""
+    """Directory-backed session state with atomic metadata updates.
 
-    def __init__(self, root: str | Path):
+    ``clock`` is the single time source for the ``created_at``/
+    ``updated_at`` metadata stamps — injectable so tests (and the
+    staticcheck wall-clock rule) can hold the journal path to a
+    deterministic clock; the default is wall time because the stamps
+    are operator-facing ages, shared across processes.
+    """
+
+    def __init__(self, root: str | Path, *, clock=time.time):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.tables = ResultsDB(self.root / "tables")
+        self._clock = clock
 
     # -- paths ------------------------------------------------------------ #
     def _dir(self, sid: str) -> Path:
@@ -116,7 +124,7 @@ class SessionStore:
             self._write_meta(sid, {
                 "spec": spec.to_json(), "status": CREATED,
                 "evaluated": 0, "best": None,
-                "created_at": time.time(), "updated_at": time.time()})
+                "created_at": self._clock(), "updated_at": self._clock()})
         return sid
 
     def load_spec(self, sid: str) -> SessionSpec:
@@ -134,7 +142,7 @@ class SessionStore:
     def update_meta(self, sid: str, **fields) -> dict:
         meta = self.meta(sid)
         meta.update(fields)
-        meta["updated_at"] = time.time()
+        meta["updated_at"] = self._clock()
         self._write_meta(sid, meta)
         return meta
 
@@ -164,7 +172,7 @@ class SessionStore:
             lines.append(json.dumps(rec, separators=(",", ":")))
         if not lines:
             return
-        torn = chaos.fire("journal.append.torn")
+        torn = chaos.fire(chaos.JOURNAL_APPEND_TORN)
         with span("journal.append", cat="store", n=len(lines)), \
                 open(self._journal_path(sid), "ab+") as f:
             # a crash mid-append can leave a torn final line; never glue new
@@ -189,7 +197,7 @@ class SessionStore:
                 f.flush()
                 os.fsync(f.fileno())
         if torn is not None:
-            chaos.die("journal.append.torn", torn)
+            chaos.die(chaos.JOURNAL_APPEND_TORN, torn)
 
     def journal_version(self, sid: str) -> int | None:
         """Sniff a session's journal format: ``2`` (row-native), ``1``

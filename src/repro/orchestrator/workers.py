@@ -63,27 +63,27 @@ def _evaluate_chunk(problem: TunableProblem, configs: list[Config],
     # ring buffer — per-chunk, never per-config.  chaos site eval.hang
     # simulates a wedged measurement *inside* the chunk — it pins this
     # executor thread exactly like a hung kernel build would.
-    chaos.sleep("eval.hang")
+    chaos.sleep(chaos.EVAL_HANG)
     with span("pool.chunk", cat="pool", n=len(configs), arch=arch):
         return problem.evaluate_many(configs, arch)
 
 
 def _evaluate_rows_chunk(problem: TunableProblem, rows: list[int],
                          arch: str) -> list[Trial]:
-    chaos.sleep("eval.hang")
+    chaos.sleep(chaos.EVAL_HANG)
     with span("pool.chunk", cat="pool", n=len(rows), arch=arch):
         return problem.trials_for_rows(rows, arch)
 
 
 def _evaluate_rows_archs_chunk(problem: TunableProblem, rows: list[int],
                                archs: tuple[str, ...]) -> list[list[Trial]]:
-    chaos.sleep("eval.hang")
+    chaos.sleep(chaos.EVAL_HANG)
     with span("pool.chunk", cat="pool", n=len(rows), archs=len(archs)):
         return problem.trials_for_rows_archs(rows, archs)
 
 
 def _evaluate_one(problem: TunableProblem, config: Config, arch: str) -> Trial:
-    chaos.sleep("eval.hang")
+    chaos.sleep(chaos.EVAL_HANG)
     return problem.evaluate(config, arch)
 
 
@@ -452,10 +452,15 @@ class BrokerWorker:
     def __init__(self, broker, *, worker_id: str | None = None,
                  workers: int = 2, mode: str = "auto", max_retries: int = 2,
                  lease_s: float = 30.0, poll_s: float = 0.05,
-                 job_timeout_s: float | None = None, log=None):
+                 job_timeout_s: float | None = None, log=None,
+                 clock=time.monotonic):
         from .broker import default_worker_id
         self.broker = broker
         self.worker_id = worker_id or default_worker_id()
+        # idle-age bookkeeping measures *durations*, so the monotonic
+        # clock is correct (wall-time steps must not retire a worker);
+        # injectable so tests drive --max-idle without real sleeping
+        self._clock = clock
         self.workers = workers
         self.mode = mode
         self.max_retries = max_retries
@@ -517,7 +522,7 @@ class BrokerWorker:
         # pure waste — the pool abandons it at the next chunk boundary
         interval = max(self.lease_s / 3.0, 0.01)
         while not stop.wait(interval):
-            stall = chaos.fire("worker.heartbeat.stall")
+            stall = chaos.fire(chaos.WORKER_HEARTBEAT_STALL)
             if stall is not None:
                 # injected GC pause / network partition: no renewals for
                 # stall_s — past the lease, the broker reaps us
@@ -603,7 +608,7 @@ class BrokerWorker:
         finally:
             stop.set()
             hb.join()
-        chaos.crash("worker.crash.before_complete")
+        chaos.crash(chaos.WORKER_CRASH_BEFORE_COMPLETE)
         self._record_job_metrics(result, time.monotonic() - t0,
                                  timeouts=self._pool_stat("timeouts")
                                  - timeouts0)
@@ -622,7 +627,7 @@ class BrokerWorker:
         ``max_jobs`` and ``stop`` exist for tests and manual drains.
         """
         served = 0
-        idle_since = time.time()
+        idle_since = self._clock()
         while True:
             if stop is not None and stop.is_set():
                 break
@@ -632,13 +637,13 @@ class BrokerWorker:
                 leased = self.broker.lease(self.worker_id, self.lease_s)
             if leased is None:
                 if (max_idle_s is not None
-                        and time.time() - idle_since > max_idle_s):
+                        and self._clock() - idle_since > max_idle_s):
                     break
                 time.sleep(self.poll_s)
                 continue
             self.serve_one(*leased)
             served += 1
-            idle_since = time.time()
+            idle_since = self._clock()
         for pool in self._pools.values():
             pool.close()
         return served

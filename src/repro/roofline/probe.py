@@ -38,7 +38,6 @@ an analytic ``mb_extra`` column, not folded into the headline terms).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -49,7 +48,6 @@ from ..distributed import sharding as shd
 from ..models import transformer as tfm
 from ..models.model import Model, build_model
 from ..models.rwkv6 import HEAD_DIM as RWKV_HEAD_DIM
-from ..models.rwkv6 import SCAN_CHUNK
 from .roofline import HW, CellReport, collective_bytes
 
 

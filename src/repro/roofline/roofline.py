@@ -22,7 +22,6 @@ from __future__ import annotations
 import dataclasses
 import re
 
-import numpy as np
 
 #: v5e roofline constants (per chip)
 HW = {

@@ -343,8 +343,8 @@ def publish(snapshot: Snapshot, root: str | Path,
         else:
             snapshot.binary = snapshot.binary_sha = None
         _write_atomic(snap_path, snapshot.to_bytes(),
-                      crash_site="servedb.publish.crash")
-        params = chaos.fire("servedb.snapshot.corrupt")
+                      crash_site=chaos.SERVEDB_PUBLISH_CRASH)
+        params = chaos.fire(chaos.SERVEDB_SNAPSHOT_CORRUPT)
         if params is not None:
             _corrupt_in_place(snap_path, params)
         _gc_binaries(root, keep=snapshot.binary)

@@ -6,7 +6,6 @@ gradient compression with error feedback (distributed-optimization trick).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

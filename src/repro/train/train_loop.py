@@ -28,7 +28,6 @@ import dataclasses
 import json
 import signal
 import time
-from pathlib import Path
 from typing import Any, Callable
 
 import jax

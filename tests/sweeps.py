@@ -9,7 +9,6 @@ minus shrinking.
 
 from __future__ import annotations
 
-import functools
 import random
 
 BASE_SEED = 20230701

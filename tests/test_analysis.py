@@ -2,7 +2,6 @@
 known ground truth."""
 
 import math
-import random
 
 import numpy as np
 import pytest

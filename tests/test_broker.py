@@ -29,7 +29,7 @@ from repro.orchestrator import (BrokerWorker, Campaign, MemoryBroker,
                                 run_campaign, run_session)
 from repro.orchestrator import registry
 from repro.orchestrator.cli import _parse_tuner_args, main as cli_main
-from repro.orchestrator.queue import FAILED, LEASED, PENDING
+from repro.orchestrator.queue import LEASED, PENDING
 from repro.orchestrator.session import CAMPAIGN_TUNER_DEFAULTS
 
 ROOT = Path(__file__).resolve().parents[1]
@@ -567,3 +567,83 @@ def test_in_flight_reports_stale_leases(broker):
     assert flight[0]["job"] == jid
     # still leased from the queue's point of view until someone reaps
     assert broker.counts()[LEASED] == 1
+
+
+# --------------------------------------------------------------------- #
+# injected clocks (staticcheck wall-clock contract)
+# --------------------------------------------------------------------- #
+
+@pytest.fixture(params=["memory", "sqlite"])
+def clocked_broker(request, tmp_path):
+    """Both backends on a settable fake clock — lease arithmetic becomes
+    a pure function of the injected time, no sleeps."""
+    t = [1000.0]
+    clock = lambda: t[0]
+    b = (MemoryBroker(clock=clock) if request.param == "memory"
+         else SQLiteBroker(tmp_path / "queue.db", clock=clock))
+    yield b, t
+    b.close()
+
+
+def test_lease_expiry_follows_injected_clock(clocked_broker):
+    """Advancing the fake clock past the lease expires it — no real time
+    passes, proving every lease timestamp comes from the injected clock
+    (the regression the staticcheck wall-clock rule guards)."""
+    broker, t = clocked_broker
+    jid = broker.submit({"problem": "toy_quad", "archs": ["v5e"],
+                         "rows": [1], "sessions": []})
+    assert broker.lease("w-a", lease_s=5.0)[0] == jid
+    assert broker.reap() == 0                     # lease still live
+    assert broker.lease("w-b", lease_s=5.0) is None
+    t[0] += 5.1                                   # fake time passes
+    assert broker.lease("w-b", lease_s=5.0)[0] == jid   # auto-reap + release
+    t[0] += 0.1
+    flight = broker.in_flight()
+    assert flight[0]["stale"] is False
+    assert flight[0]["lease_remaining"] == pytest.approx(4.9, abs=1e-6)
+
+
+def test_heartbeat_extends_injected_clock_lease(clocked_broker):
+    broker, t = clocked_broker
+    jid = broker.submit({"problem": "toy_quad", "archs": ["v5e"],
+                         "rows": [1], "sessions": []})
+    broker.lease("w-a", lease_s=5.0)
+    t[0] += 4.0
+    assert broker.heartbeat(jid, "w-a", lease_s=5.0)
+    t[0] += 4.0                                   # 8s total < 4s + renewed 5s
+    assert broker.reap() == 0
+    t[0] += 1.1
+    assert broker.reap() == 1                     # renewed lease now expired
+
+
+def test_store_metadata_stamps_from_injected_clock(tmp_path):
+    t = [42.0]
+    store = SessionStore(tmp_path / "sessions", clock=lambda: t[0])
+    prob = registry.make_problem("toy_quad")
+    spec = SessionSpec(problem="toy_quad", tuner="random_search",
+                       arch="v5e", budget=4, seed=0)
+    sid = store.create(spec)
+    meta = store.meta(sid)
+    assert meta["created_at"] == 42.0 and meta["updated_at"] == 42.0
+    t[0] = 99.0
+    meta = store.update_meta(sid, evaluated=1)
+    assert meta["created_at"] == 42.0 and meta["updated_at"] == 99.0
+
+
+def test_worker_max_idle_follows_injected_clock():
+    """A BrokerWorker on a monotonic fake clock exits its run loop when
+    the injected idle age crosses max_idle_s — without waiting real
+    seconds for it."""
+    broker = MemoryBroker()
+    t = [0.0]
+
+    class Tick:
+        def __call__(self):
+            t[0] += 2.0        # every poll advances fake time 2s
+            return t[0]
+
+    w = BrokerWorker(broker, workers=1, poll_s=0.0, clock=Tick())
+    start = time.monotonic()
+    w.run(max_idle_s=10.0)     # empty queue: exits after ~5 fake polls
+    assert time.monotonic() - start < 5.0
+    assert t[0] > 10.0

@@ -28,10 +28,10 @@ import pytest
 
 from repro.core.problem import FunctionProblem
 from repro.core.space import Param, SearchSpace
-from repro.orchestrator import (BrokerWorker, Campaign, FaultPlan,
-                                FleetSupervisor, MemoryBroker, SessionSpec,
-                                SessionStore, SQLiteBroker, registry,
-                                run_campaign, run_session)
+from repro.orchestrator import (BrokerWorker, FaultPlan, FleetSupervisor,
+                                MemoryBroker, SessionSpec, SessionStore,
+                                SQLiteBroker, registry, run_campaign,
+                                run_session)
 from repro.orchestrator import chaos
 from repro.orchestrator.chaos import ChaosCrash, FaultRule
 from repro.orchestrator.cli import main as cli_main
@@ -591,6 +591,21 @@ def test_doctor_flags_torn_running_unpublished_and_stale(tmp_path, capsys):
     parsed = json.loads(out)
     assert parsed["ok"] is False and parsed["problems"]
     broker.close()
+
+
+def test_doctor_published_check_survives_kernel_name_mismatch(tmp_path):
+    """Traces are keyed by the problem's *kernel* name, which differs
+    from the registry name for attention (flash_attention) — doctor must
+    match the session-unique protocol tag, not guess the table key."""
+    store = SessionStore(tmp_path / "store")
+    spec = SessionSpec(problem="attention", tuner="random", budget=6,
+                       seed=0)
+    run_session(spec, store=store)
+    report = diagnose(store)
+    entry = next(e for e in report["sessions"]
+                 if e["session"] == spec.session_id)
+    assert entry["status"] == "done" and entry["published"]
+    assert not any("never published" in p for p in report["problems"])
 
 
 def test_doctor_refuses_missing_broker_db(tmp_path, capsys):

@@ -77,7 +77,7 @@ def test_docs_actually_quote_commands():
     for module in ("benchmarks.run", "benchmarks.table_portability"):
         assert module in joined, f"{module} not documented"
     for sub in ("submit", "status", "resume", "campaign", "worker",
-                "fleet", "metrics", "doctor", "servedb"):
+                "fleet", "metrics", "doctor", "servedb", "lint"):
         assert any(f"repro.orchestrator {sub}" in c for c in ALL_COMMANDS), \
             f"orchestrator subcommand {sub!r} not documented"
 
@@ -93,7 +93,7 @@ def test_quoted_command_matches_entry_point(cmd, capsys):
             return
         sub = parts[3]
         assert sub in ("submit", "status", "resume", "campaign", "worker",
-                       "fleet", "metrics", "doctor", "servedb"), \
+                       "fleet", "metrics", "doctor", "servedb", "lint"), \
             f"unknown subcommand in {cmd!r}"
         # argparse exits 0 on --help and would exit 2 on unknown flags —
         # but --help doesn't validate, so check each flag against the

@@ -1,0 +1,132 @@
+"""Conformance for the shared retry policy (:mod:`repro.core.retry`):
+deterministic jitter, cap/bound arithmetic, budget edge cases, and the
+wrap-vs-propagate contract of :func:`retry_call`.  The staticcheck
+``retry-sleep`` rule forbids hand-rolled backoff elsewhere precisely
+because this is the one tested copy.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.core.retry import RetryBudgetExceeded, backoff_delays, retry_call
+
+
+# --------------------------------------------------------------------- #
+# backoff_delays
+# --------------------------------------------------------------------- #
+
+def test_delays_deterministic_per_salt():
+    a = list(backoff_delays(6, salt="broker"))
+    b = list(backoff_delays(6, salt="broker"))
+    c = list(backoff_delays(6, salt="publish"))
+    assert a == b                      # same salt: bit-identical schedule
+    assert a != c                      # different salt: decorrelated
+
+
+def test_delays_bounded_by_cap_and_jitter_window():
+    base, cap, jit = 0.01, 0.2, 0.5
+    delays = list(backoff_delays(12, base_s=base, max_s=cap, jitter=jit,
+                                 salt="x"))
+    assert len(delays) == 12
+    raw = base
+    for d in delays:
+        ceil = min(raw, cap)
+        assert ceil * (1 - jit) <= d <= ceil   # jitter only shrinks
+        raw = min(raw * 2, cap)
+    # the tail is capped: every late delay fits under the cap
+    assert all(d <= cap for d in delays)
+
+
+def test_zero_jitter_is_plain_capped_doubling():
+    delays = list(backoff_delays(5, base_s=0.01, max_s=0.05, jitter=0.0))
+    assert delays == [0.01, 0.02, 0.04, 0.05, 0.05]
+
+
+def test_zero_retries_yields_nothing():
+    assert list(backoff_delays(0)) == []
+
+
+@pytest.mark.parametrize("bad", [-0.1, 1.5])
+def test_jitter_out_of_range_rejected(bad):
+    with pytest.raises(ValueError, match="jitter"):
+        list(backoff_delays(3, jitter=bad))
+
+
+# --------------------------------------------------------------------- #
+# retry_call
+# --------------------------------------------------------------------- #
+
+class Flaky:
+    """Fails ``failures`` times, then returns ``value``."""
+
+    def __init__(self, failures, exc=OSError("busy"), value="ok"):
+        self.failures = failures
+        self.exc = exc
+        self.value = value
+        self.calls = 0
+
+    def __call__(self):
+        self.calls += 1
+        if self.calls <= self.failures:
+            raise self.exc
+        return self.value
+
+
+def test_succeeds_after_transient_failures():
+    fn = Flaky(2)
+    slept = []
+    out = retry_call(fn, retries=3, retry_on=lambda e: True,
+                     sleep=slept.append)
+    assert out == "ok" and fn.calls == 3
+    assert slept == list(backoff_delays(3))[:2]   # one sleep per failure
+
+
+def test_zero_retries_runs_once_and_propagates():
+    fn = Flaky(1)
+    slept = []
+    with pytest.raises(OSError):
+        retry_call(fn, retries=0, retry_on=lambda e: True,
+                   sleep=slept.append)
+    assert fn.calls == 1 and slept == []          # never slept, never retried
+
+
+def test_non_transient_propagates_immediately():
+    fn = Flaky(5, exc=KeyError("fatal"))
+    with pytest.raises(KeyError):
+        retry_call(fn, retries=5, retry_on=lambda e: isinstance(e, OSError),
+                   sleep=lambda s: None)
+    assert fn.calls == 1
+
+
+def test_exhausted_budget_raises_last_exception():
+    fn = Flaky(10)
+    with pytest.raises(OSError, match="busy"):
+        retry_call(fn, retries=2, retry_on=lambda e: True,
+                   sleep=lambda s: None)
+    assert fn.calls == 3                          # retries + 1 attempts
+
+
+def test_exhausted_budget_wraps_when_named():
+    fn = Flaky(10)
+    with pytest.raises(RetryBudgetExceeded) as ei:
+        retry_call(fn, retries=2, retry_on=lambda e: True,
+                   sleep=lambda s: None, what="broker.submit")
+    assert ei.value.attempts == 3
+    assert isinstance(ei.value.last, OSError)
+    assert "broker.submit" in str(ei.value)
+
+
+def test_non_transient_never_wrapped_even_with_what():
+    fn = Flaky(1, exc=KeyError("fatal"))
+    with pytest.raises(KeyError):
+        retry_call(fn, retries=2, retry_on=lambda e: isinstance(e, OSError),
+                   sleep=lambda s: None, what="broker.submit")
+
+
+def test_sleep_receives_the_salted_schedule():
+    fn = Flaky(3)
+    slept = []
+    retry_call(fn, retries=3, retry_on=lambda e: True, salt="site-a",
+               sleep=slept.append)
+    assert slept == list(backoff_delays(3, salt="site-a"))

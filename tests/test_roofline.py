@@ -3,7 +3,6 @@ cost_analysis semantics, and the loop-corrected probe algebra."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.roofline import HW, CellReport, collective_bytes

@@ -1,7 +1,6 @@
 """Serving engine behaviour: continuous batching, slot lifecycle, prefill
 -> decode consistency, ring-buffer splicing."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -57,7 +56,6 @@ def test_greedy_decode_matches_full_forward():
     """Engine output (prefill + spliced cache + decode steps) must equal
     greedy decoding with full-sequence forwards (the no-cache oracle)."""
     engine, cfg = _engine(n_slots=1, max_new_tokens=4, max_len=32)
-    from repro.models import build_model
     model = engine.model
     params = engine.params
     prompt = np.asarray([5, 9, 2], np.int32)

@@ -4,7 +4,6 @@ shapes + mesh topology, so they are fully testable without 256 chips)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distributed import sharding as shd

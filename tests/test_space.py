@@ -1,7 +1,6 @@
 """SearchSpace invariants: encode/decode bijection, enumeration == counted
 sampling support, neighborhood validity, reduction semantics."""
 
-import math
 import random
 
 import pytest

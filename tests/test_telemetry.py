@@ -11,7 +11,6 @@ import json
 import math
 import threading
 import time
-from pathlib import Path
 
 import pytest
 

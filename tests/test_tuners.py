@@ -2,7 +2,6 @@
 finds-the-optimum checks on toy landscapes (the suite's own reference
 problems)."""
 
-import math
 import random
 
 import pytest
