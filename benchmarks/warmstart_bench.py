@@ -1,0 +1,198 @@
+"""Transfer-aware warm-start benchmark: fewer measured evals on a new arch.
+
+Two claims, both load-bearing for the surrogate contract
+(docs/architecture.md, "Surrogate contracts"):
+
+1. **Warm starts transfer.**  A :class:`KernelSurrogate` trained only on
+   campaign history from three source architectures ranks the held-out
+   fourth architecture's space well enough that seeding GA and annealing
+   with its predicted-top rows reaches the exhaustive-table optimum in at
+   least 30% fewer *measured* evaluations than the same tuner started
+   cold (same seed, same budget).  Model-estimated trials never count as
+   measured — the reduction is in real kernel launches.
+
+2. **Importances transfer.**  The source-trained model and a model fitted
+   directly on the held-out architecture's own table agree on the top-3
+   most important parameters (PFI, arch column excluded) — the cross-arch
+   consistency check behind Fig-6-style tuning advice.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.warmstart_bench           # full
+    PYTHONPATH=src python -m benchmarks.warmstart_bench --smoke   # CI
+
+The full run measures both kernels (pnpoly exhaustive, hotspot sampled)
+over a bank of seeds and writes ``BENCH_warmstart.json`` at the repo
+root.  Smoke mode shrinks the workload to pnpoly with fewer seeds,
+re-runs both claims end to end, and additionally asserts the committed
+``BENCH_warmstart.json`` honors its own recorded bound (the regression
+guard: a surrogate/tuner change that erodes the transfer must fail CI).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+
+import numpy as np
+
+from repro.core.costmodel import ARCH_NAMES
+from repro.core.spacetable import mixed_radix_strides
+from repro.core.surrogate import Harvest, KernelSurrogate
+from repro.core.tuners import TUNERS, run_tuner
+
+from .common import ROOT, emit, load_tables
+
+#: the held-out architecture: train on the other three, warm-start here
+HOLDOUT = "v6e"
+SOURCE_ARCHS = tuple(a for a in ARCH_NAMES if a != HOLDOUT)
+#: per-source-arch campaign-history sample (a real campaign measures a
+#: slice of the space, not the exhaustive table)
+HISTORY_N = 2000
+#: warm-start queue length (the ``--warm-top`` default)
+WARM_TOP = 8
+#: tuners under test — the acceptance pair
+TUNER_NAMES = ("genetic", "annealing")
+#: the headline bound: warm reaches the optimum in <= 70% of cold's
+#: measured evaluations (>= 30% reduction), averaged over the seed bank
+BOUND = 0.70
+KERNELS = ("pnpoly", "hotspot")
+SMOKE_KERNELS = ("pnpoly",)
+N_SEEDS = 5
+SMOKE_SEEDS = 2
+BUDGET = 600
+SMOKE_BUDGET = 400
+#: PFI consistency: top-3 parameter sets must share at least this many
+PFI_MIN_OVERLAP = 2
+
+OUT_PATH = ROOT / "BENCH_warmstart.json"
+
+
+def _history(prob, space, tables, archs, n: int, seed: int) -> Harvest:
+    """Seeded campaign-history emulation: ``n`` measured rows per arch."""
+    h = Harvest(prob.name, space, archs=ARCH_NAMES)
+    strides = mixed_radix_strides([p.cardinality for p in space.params])
+    rng = np.random.default_rng(seed)
+    for a in archs:
+        tab = tables[a]
+        codes = np.asarray(tab.configs, dtype=np.int64)
+        rows = codes @ strides
+        idx = rng.choice(len(rows), size=min(n, len(rows)), replace=False)
+        h.add_rows(rows[idx].tolist(), a,
+                   [tab.objectives[i] for i in idx])
+    return h
+
+
+def _evals_to(target: float, res) -> int | None:
+    """Measured evaluations until the trace first reaches ``target``
+    (estimated trials are free — they are the point of screening)."""
+    measured = 0
+    for t in res.trials:
+        if t.info.get("estimated"):
+            continue
+        measured += 1
+        if math.isfinite(t.objective) and t.objective <= target * (1 + 1e-9):
+            return measured
+    return None
+
+
+def bench_kernel(name: str, *, seeds: int, budget: int) -> dict:
+    """Claims 1+2 for one kernel; returns the result record."""
+    prob, tables = load_tables(name)
+    space = prob.space
+    optimum = tables[HOLDOUT].best()[1]
+
+    ts = _history(prob, space, tables, SOURCE_ARCHS, HISTORY_N, 0).build()
+    model = KernelSurrogate.fit(ts)
+    warm_rows = model.top_rows(space, HOLDOUT, k=WARM_TOP)
+    assert warm_rows, "surrogate produced an empty warm queue"
+
+    tuners = {}
+    for tn in TUNER_NAMES:
+        cold_evals, warm_evals = [], []
+        for seed in range(seeds):
+            cold = run_tuner(TUNERS[tn](space, seed=seed), prob, budget,
+                             arch=HOLDOUT)
+            warm = run_tuner(TUNERS[tn](space, seed=seed), prob, budget,
+                             arch=HOLDOUT, warm_start=warm_rows)
+            c = _evals_to(optimum, cold)
+            w = _evals_to(optimum, warm)
+            # a run that never reaches the optimum is billed its full
+            # budget — counting it as "fast" would be lying upward
+            cold_evals.append(c if c is not None else budget)
+            warm_evals.append(w if w is not None else budget)
+        mean_cold = sum(cold_evals) / len(cold_evals)
+        mean_warm = sum(warm_evals) / len(warm_evals)
+        ratio = mean_warm / mean_cold
+        tuners[tn] = {"cold_evals": cold_evals, "warm_evals": warm_evals,
+                      "mean_cold": mean_cold, "mean_warm": mean_warm,
+                      "ratio": ratio,
+                      "reduction": 1.0 - ratio}
+        emit(f"warmstart_bench/{name}/{tn}", mean_warm,
+             f"cold={mean_cold:.1f} reduction={1.0 - ratio:.0%}")
+
+    # claim 2: PFI top-3 consistency, source-trained vs target-trained
+    target_hist = _history(prob, space, tables, (HOLDOUT,), HISTORY_N, 1)
+    ts_target = target_hist.build()
+    target_model = KernelSurrogate.fit(ts_target)
+    src_top = model.top_params(ts_target, k=3)
+    tgt_top = target_model.top_params(ts_target, k=3)
+    overlap = len(set(src_top) & set(tgt_top))
+
+    worst_ratio = max(t["ratio"] for t in tuners.values())
+    out = {"kernel": name, "holdout": HOLDOUT,
+           "source_archs": list(SOURCE_ARCHS),
+           "history_rows": len(ts), "warm_top": WARM_TOP,
+           "optimum_s": optimum, "budget": budget, "seeds": seeds,
+           "tuners": tuners, "worst_ratio": worst_ratio,
+           "pfi_source_top3": src_top, "pfi_target_top3": tgt_top,
+           "pfi_overlap": overlap,
+           "criterion": f"warm/cold measured-evals ratio <= {BOUND:.0%} "
+                        f"for every tuner; PFI top-3 overlap >= "
+                        f"{PFI_MIN_OVERLAP}",
+           "criterion_met": (worst_ratio <= BOUND
+                             and overlap >= PFI_MIN_OVERLAP)}
+    assert out["criterion_met"], \
+        (name, worst_ratio, src_top, tgt_top)
+    return out
+
+
+def check_committed() -> None:
+    """The committed BENCH_warmstart.json must honor its own bound."""
+    data = json.loads(OUT_PATH.read_text())
+    for rec in data["kernels"]:
+        assert rec["criterion_met"], rec["kernel"]
+        assert rec["worst_ratio"] <= data["bound"], \
+            (rec["kernel"], rec["worst_ratio"])
+        assert rec["pfi_overlap"] >= PFI_MIN_OVERLAP, rec["kernel"]
+    emit("warmstart_bench/committed", data["bound"],
+         f"kernels={len(data['kernels'])} all within bound")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: pnpoly only, fewer seeds, and validate "
+                         "the committed BENCH_warmstart.json")
+    args = ap.parse_args(argv)
+
+    kernels = SMOKE_KERNELS if args.smoke else KERNELS
+    seeds = SMOKE_SEEDS if args.smoke else N_SEEDS
+    budget = SMOKE_BUDGET if args.smoke else BUDGET
+    records = [bench_kernel(k, seeds=seeds, budget=budget) for k in kernels]
+
+    if args.smoke:
+        check_committed()
+        print("warmstart smoke: OK")
+        return 0
+
+    out = {"protocol": "full", "bound": BOUND,
+           "pfi_min_overlap": PFI_MIN_OVERLAP, "kernels": records}
+    OUT_PATH.write_text(json.dumps(out, indent=1) + "\n")
+    print(f"wrote {OUT_PATH}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -35,6 +35,8 @@ class RegressionTree:
 
     def fit(self, X: np.ndarray, y: np.ndarray) -> "RegressionTree":
         X = np.asarray(X, dtype=np.int64)
+        if X.ndim != 2:
+            X = X.reshape(len(X), -1)
         y = np.asarray(y, dtype=np.float64)
         self.n_features = X.shape[1]
         self._nbins = X.max(axis=0) + 1 if len(X) else np.ones(X.shape[1], int)
@@ -44,6 +46,11 @@ class RegressionTree:
     def _grow(self, X: np.ndarray, y: np.ndarray, depth: int) -> _TreeNode:
         node = _TreeNode(float(y.mean()) if len(y) else 0.0)
         n = len(y)
+        # degenerate inputs produce the same split-less leaf the full scan
+        # would (every candidate split has zero gain, or no candidate clears
+        # min_samples_leaf) — return it before paying for the scan
+        if n <= 1 or (n and (y == y[0]).all()):
+            return node
         if depth >= self.max_depth or n < 2 * self.min_samples_leaf:
             return node
         total_sum, total_cnt = y.sum(), float(n)
@@ -116,9 +123,11 @@ class GradientBoostedTrees:
         X = np.asarray(X, dtype=np.int64)
         y = np.asarray(y, dtype=np.float64)
         rng = np.random.default_rng(self.seed)
-        self.base = float(y.mean())
+        self.base = float(y.mean()) if len(y) else 0.0
         pred = np.full(len(y), self.base)
         self.trees = []
+        if not len(y):                 # nothing to boost on
+            return self
         for _ in range(self.n_trees):
             resid = y - pred
             if self.subsample < 1.0:

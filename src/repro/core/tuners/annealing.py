@@ -72,6 +72,19 @@ class SimulatedAnnealing(Tuner):
         if delta <= 0 or self.rng.random() < math.exp(-delta / max(self.t, 1e-9)):
             self.current, self.current_obj = trial.config, trial.objective
 
+    # -- warm-start seam --------------------------------------------------- #
+    def _adopt_warm_best(self, row: int, obj: float) -> None:
+        """Anneal from the measured-best warm row (warm tells adopt
+        unconditionally while no proposal is outstanding, so without this
+        hook the walk would start at the *last* warm row instead)."""
+        row = int(row)
+        self._cur_row = row
+        self.current = (self._comp.decode_row(row) if self._comp is not None
+                        else self.space.from_flat_index(row))
+        self.current_obj = obj
+        self._proposed = None
+        self._proposed_row = None
+
     # -- index-native path ------------------------------------------------ #
     def _ask_row(self) -> int:
         comp = self._comp

@@ -54,6 +54,33 @@ class DifferentialEvolution(Tuner):
     def pop_objectives(self) -> np.ndarray:
         return np.asarray(self._obj_py, dtype=np.float64)
 
+    # -- warm-start seam --------------------------------------------------- #
+    def _absorb_warm_rows(self, rows, objectives) -> None:
+        """Warm rows seed the population directly, never touching the
+        ``_targets`` queue — in a pipelined session, fill asks may already
+        be in flight and their queue entries must pair with *their* tells,
+        not the warm batch's."""
+        from ..spacetable import CompiledSpace
+        codes = CompiledSpace.codes_for(self.space, np.asarray(rows))
+        for enc, obj in zip(codes.tolist(), objectives):
+            self._codes_py.append(enc)
+            self._obj_py.append(float(obj))
+            self._pop_n += 1
+            if self._pop_n > self.pop_size:
+                worst = max(range(self._pop_n), key=self._obj_py.__getitem__)
+                self._codes_py.pop(worst)
+                self._obj_py.pop(worst)
+                self._pop_n = self.pop_size
+
+    def _absorb_warm_scalar(self, trial: Trial) -> None:
+        obj = trial.objective if trial.ok else math.inf
+        self.pop.append(list(self.space.encode(trial.config)))
+        self.obj.append(obj)
+        if len(self.pop) > self.pop_size:
+            worst = max(range(len(self.obj)), key=lambda j: self.obj[j])
+            self.pop.pop(worst)
+            self.obj.pop(worst)
+
     # -- scalar path (oracle / fallback) ---------------------------------- #
     def _decode(self, vec) -> Config:
         clipped = [max(0, min(int(round(v)), p.cardinality - 1))
@@ -61,7 +88,12 @@ class DifferentialEvolution(Tuner):
         return self.space.decode(clipped)
 
     def ask_scalar(self) -> Config:
-        if len(self.pop) + len(self._targets) < self.pop_size:
+        # warm-started runs: warm rows enter the population without an ask,
+        # so the ask/tell parity the plain fill condition assumes no longer
+        # holds — keep filling until the population is genuinely complete
+        # (cold runs never take the extra clause: draws are untouched)
+        if (len(self.pop) + len(self._targets) < self.pop_size
+                or (self.warm_started and len(self.pop) < self.pop_size)):
             self._targets.append(None)
             return self.space.sample(self.rng)
         for _ in range(100):
@@ -99,7 +131,9 @@ class DifferentialEvolution(Tuner):
     def _ask_row(self) -> int:
         comp = self._comp
         rng = self.rng
-        if self._pop_n + len(self._targets) < self.pop_size:
+        # see ask_scalar: warm seeding breaks the fill parity assumption
+        if (self._pop_n + len(self._targets) < self.pop_size
+                or (self.warm_started and self._pop_n < self.pop_size)):
             self._targets.append(None)
             return comp.sample_row_rejection(rng)
         cards = comp.py_cards

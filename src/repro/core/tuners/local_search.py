@@ -34,6 +34,25 @@ class LocalSearch(Tuner):
         self._pending_rows: list[int] = []
         self._best_nb_row: tuple[float, int] | None = None
 
+    # -- warm-start seam --------------------------------------------------- #
+    def _adopt_warm_best(self, row: int, obj: float) -> None:
+        """Walk from the measured-best warm row.  Warm tells already moved
+        the walk on first-improvement order; re-adopting is skipped when the
+        walk is already there (the neighborhood shuffle is a draw)."""
+        row = int(row)
+        if self._comp is not None:
+            if self._cur_row == row:
+                return
+            self._cur_row, self.current_obj = row, obj
+            self._fill_neighbor_rows()
+        else:
+            cfg = self.space.from_flat_index(row)
+            if self.current is not None \
+                    and self.space.flat_index(self.current) == row:
+                return
+            self.current, self.current_obj = cfg, obj
+            self._fill_neighbors()
+
     # -- scalar path (oracle / fallback) ---------------------------------- #
     def _restart(self) -> Config:
         self.current = None

@@ -50,6 +50,31 @@ class ParticleSwarm(Tuner):
         self._gbest_obj = math.inf
         self._n_alive = 0
 
+    # -- warm-start seam --------------------------------------------------- #
+    def _absorb_warm_rows(self, rows, objectives) -> None:
+        """Warm rows belong to no particle: absorb them as global-best
+        attraction only (both path representations), leaving the particle
+        queue and per-particle bests untouched — particles still initialize
+        from the tuner's own rng stream."""
+        from ..spacetable import CompiledSpace
+        codes = CompiledSpace.codes_for(self.space, np.asarray(rows))
+        for enc, obj in zip(codes.astype(np.float64), objectives):
+            obj = float(obj)
+            if obj < self._gbest_obj:
+                self._gbest_obj = obj
+                self._gbest_py = enc.tolist()
+            if obj < self.gbest[0]:
+                self.gbest = (obj, enc.tolist())
+
+    def _absorb_warm_scalar(self, trial: Trial) -> None:
+        obj = trial.objective if trial.ok else math.inf
+        enc = [float(x) for x in self.space.encode(trial.config)]
+        if obj < self.gbest[0]:
+            self.gbest = (obj, list(enc))
+        if obj < self._gbest_obj:
+            self._gbest_obj = obj
+            self._gbest_py = list(enc)
+
     # -- scalar path (oracle / fallback) ---------------------------------- #
     def _decode(self, vec) -> Config:
         clipped = [max(0, min(int(round(v)), p.cardinality - 1))

@@ -155,6 +155,8 @@ class SurrogateBO(Tuner):
         return self._ask_batch_scalar(1)[0]
 
     def ask_batch(self, n: int) -> list[Config]:
+        if self._warm_queue:           # warm rows first (base-class seam)
+            return Tuner.ask_batch(self, n)
         if self.index_native:
             return self._comp.decode_many(self.ask_rows(max(1, n)))
         return self._ask_batch_scalar(n)

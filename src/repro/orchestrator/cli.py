@@ -20,6 +20,12 @@ Subcommands::
                traces into an atomically-published, checksummed
                snapshot), query (the never-raise degradation chain),
                verify (offline snapshot/quarantine triage)
+    surrogate — transfer-aware performance models trained on journaled
+               campaign history: train (harvest a session store into
+               per-kernel GBDT models, published to a checksummed model
+               store), predict (rank a target architecture's space —
+               the warm-start rows), eval (held-out-architecture R²
+               against a shuffled-label baseline + top-param report)
     lint     — static contract checks (wall-clock/RNG in deterministic
                seams, chaos-site registry, telemetry naming, journal
                grammar, broker transactions, retry policy) plus
@@ -132,6 +138,31 @@ telemetry); triage torn or bit-rotted snapshots offline::
     # the same triage inside the campaign health check:
     python -m repro.orchestrator doctor --store experiments/sessions \\
         --servedb experiments/servedb
+
+Transfer-aware warm starts: distill every journaled session of a store
+into per-kernel surrogate models (codes + arch-ordinal GBDTs, serialized
+with checksummed headers and quarantine-on-corrupt, like servedb), then
+seed new sessions on an *unseen* architecture from the model's
+predicted-top rows.  The resolved row list becomes part of the spec
+identity, so resume replays the same warm queue even after a retrain;
+plain submits (no ``--warm-start``) are bit-identical to before the
+model store existed::
+
+    python -m repro.orchestrator surrogate train \\
+        --store experiments/sessions --models experiments/models
+
+    # the warm-start queue: predicted-fastest rows on the target arch
+    python -m repro.orchestrator surrogate predict \\
+        --models experiments/models --problem gemm --arch v6e --top 8
+
+    # held-out-arch transfer check: R² vs a shuffled-label baseline
+    python -m repro.orchestrator surrogate eval \\
+        --store experiments/sessions --problem gemm --holdout v6e
+
+    # warm-started session on the held-out generation:
+    python -m repro.orchestrator submit --problem gemm --tuner genetic \\
+        --arch v6e --budget 200 --store experiments/sessions \\
+        --warm-start experiments/models --warm-top 8
 
 Per-tuner settings ride the spec: ``--tuner-arg k=v`` (repeatable, JSON
 values) merges into every session's ``tuner_kwargs`` — e.g. ``--tuner-arg
@@ -483,6 +514,135 @@ def _run_servedb(args) -> int:
     return 0 if report["ok"] else 1
 
 
+def _run_surrogate(args) -> int:
+    """``surrogate`` subcommand body: train | predict | eval."""
+    from ..core.surrogate import Harvest, KernelSurrogate, ModelStore
+    from .registry import make_problem, problem_names
+
+    if args.action == "train":
+        if not args.store:
+            print("error: surrogate train needs --store", file=sys.stderr)
+            return 2
+        store = SessionStore(args.store)
+        mstore = ModelStore(args.models)
+        names = ([p for p in args.problem.split(",") if p]
+                 if args.problem else problem_names())
+        exclude = tuple(a for a in (args.exclude_arch or "").split(",") if a)
+        try:
+            params = json.loads(args.params)
+        except json.JSONDecodeError as e:
+            print(f"error: --params is not valid JSON: {e}", file=sys.stderr)
+            return 2
+        report = []
+        for name in names:
+            prob = make_problem(name)
+            h = Harvest(name, prob.space, exclude_archs=exclude)
+            h.add_store(store)
+            ts = h.build()
+            if len(ts) < args.min_rows:
+                report.append({"problem": name, "rows": len(ts),
+                               "trained": False})
+                continue
+            model = KernelSurrogate.fit(ts, params=params)
+            path = mstore.save(model)
+            report.append({"problem": name, "rows": len(ts),
+                           "sources": ts.n_sources,
+                           "skipped_estimated": h.n_skipped_estimated,
+                           "r2_train": round(model.r2(ts), 4),
+                           "trained": True, "path": str(path)})
+        if args.json:
+            print(json.dumps({"models": args.models, "report": report},
+                             separators=(",", ":")))
+        else:
+            for r in report:
+                if r["trained"]:
+                    print(f"{r['problem']}: {r['rows']} rows from "
+                          f"{r['sources']} source(s) "
+                          f"(skipped {r['skipped_estimated']} estimated), "
+                          f"train R2 {r['r2_train']:.3f} -> {r['path']}")
+                else:
+                    print(f"{r['problem']}: {r['rows']} rows "
+                          f"(< --min-rows {args.min_rows}), not trained")
+        return 0 if any(r["trained"] for r in report) else 1
+
+    if args.action == "predict":
+        if not args.problem:
+            print("error: surrogate predict needs --problem",
+                  file=sys.stderr)
+            return 2
+        mstore = ModelStore(args.models)
+        model, problems = mstore.load(args.problem)
+        if model is None:
+            for p in problems:
+                print(f"error: {p}", file=sys.stderr)
+            print(f"error: no usable model for {args.problem!r} in "
+                  f"{args.models}", file=sys.stderr)
+            return 1
+        prob = make_problem(args.problem)
+        rows = model.top_rows(prob.space, args.arch, k=args.top)
+        preds = model.predict_rows(prob.space, rows, args.arch)
+        if args.json:
+            print(json.dumps(
+                {"problem": args.problem, "arch": args.arch,
+                 "rows": rows,
+                 "predicted_s": [float(p) for p in preds]},
+                separators=(",", ":")))
+        else:
+            print(f"{args.problem} @ {args.arch}: top {len(rows)} "
+                  "predicted rows")
+            for row, pred in zip(rows, preds):
+                cfg = prob.space.from_flat_index(int(row))
+                print(f"  row {row:>10d}  {_fmt_best(float(pred)):>12s}  "
+                      f"{json.dumps(cfg, sort_keys=True)}")
+        return 0
+
+    # eval: held-out-architecture transfer check
+    if not args.store or not args.problem:
+        print("error: surrogate eval needs --store and --problem",
+              file=sys.stderr)
+        return 2
+    import numpy as np
+    store = SessionStore(args.store)
+    prob = make_problem(args.problem)
+    h = Harvest(args.problem, prob.space)
+    h.add_store(store)
+    ts = h.build()
+    if args.holdout not in ts.archs:
+        print(f"error: --holdout {args.holdout!r} not in arch vocabulary "
+              f"{ts.archs}", file=sys.stderr)
+        return 2
+    rest, held = ts.split_arch(args.holdout)
+    if not len(rest) or not len(held):
+        print(f"error: empty split (train {len(rest)} rows, "
+              f"held-out {len(held)} rows); harvest more sessions",
+              file=sys.stderr)
+        return 1
+    model = KernelSurrogate.fit(rest)
+    r2_held = model.r2(held)
+    # shuffled-label baseline: same rows, permuted targets — the floor a
+    # genuinely transferring model must clear
+    from dataclasses import replace
+    perm = np.random.default_rng(args.seed).permutation(len(rest))
+    baseline = KernelSurrogate.fit(replace(rest, y=rest.y[perm]))
+    r2_base = baseline.r2(held)
+    top = model.top_params(held)
+    out = {"problem": args.problem, "holdout": args.holdout,
+           "train_rows": len(rest), "holdout_rows": len(held),
+           "r2_holdout": round(float(r2_held), 4),
+           "r2_shuffled_baseline": round(float(r2_base), 4),
+           "transfers": bool(r2_held > r2_base),
+           "top_params": top}
+    if args.json:
+        print(json.dumps(out, separators=(",", ":")))
+    else:
+        print(f"{args.problem} held-out {args.holdout}: "
+              f"R2 {r2_held:.3f} (shuffled-label baseline {r2_base:.3f}) "
+              f"on {len(held)} rows — "
+              f"{'transfers' if out['transfers'] else 'DOES NOT transfer'}")
+        print(f"  top params: {', '.join(top)}")
+    return 0 if out["transfers"] else 1
+
+
 def _run_lint(args) -> int:
     """``lint`` subcommand body: contract checks (+ space audit)."""
     from pathlib import Path
@@ -561,6 +721,13 @@ def main(argv: list[str] | None = None) -> int:
                        help="JSON dict of tuner constructor kwargs")
     p_sub.add_argument("--stop-after", type=int, default=None,
                        help="checkpoint-and-stop after N trials")
+    p_sub.add_argument("--warm-start", default=None, metavar="MODELS",
+                       help="surrogate model-store dir: seed the session "
+                            "with the model's predicted-top rows for "
+                            "--arch (resolved now, stored in the spec)")
+    p_sub.add_argument("--warm-top", type=int, default=8,
+                       help="how many predicted-top rows to warm-start "
+                            "with (default 8)")
     p_sub.add_argument("--chaos", default=None, metavar="PLAN",
                        help="fault-injection plan (JSON file path or inline "
                             "JSON): arm the deterministic chaos plane in "
@@ -787,6 +954,42 @@ def main(argv: list[str] | None = None) -> int:
     p_sv.add_argument("--json", action="store_true",
                       help="machine-readable output")
 
+    p_su = sub.add_parser(
+        "surrogate",
+        help="train / query / evaluate transfer-aware surrogate models")
+    p_su.add_argument("action", choices=("train", "predict", "eval"),
+                      help="train: harvest a session store into per-kernel "
+                           "models; predict: rank a target architecture's "
+                           "space (the warm-start rows); eval: held-out-"
+                           "arch R2 vs a shuffled-label baseline "
+                           "(exit 1 when the model does not transfer)")
+    p_su.add_argument("--models", default="experiments/models",
+                      help="model-store directory (checksummed *.model.json "
+                           "+ quarantine)")
+    p_su.add_argument("--store", default=None,
+                      help="train/eval: session store to harvest")
+    p_su.add_argument("--problem", default=None,
+                      help="kernel name(s); train: comma-separated, "
+                           "default all registered")
+    p_su.add_argument("--arch", default="v5e",
+                      help="predict: target architecture to rank for")
+    p_su.add_argument("--holdout", default="v6e",
+                      help="eval: architecture held out of training")
+    p_su.add_argument("--top", type=int, default=8,
+                      help="predict: how many rows to emit")
+    p_su.add_argument("--min-rows", type=int, default=32,
+                      help="train: skip kernels with fewer harvested rows")
+    p_su.add_argument("--exclude-arch", default=None,
+                      help="train: comma-separated archs to leave out of "
+                           "the harvest (deliberate holdout)")
+    p_su.add_argument("--params", default="{}",
+                      help="train: JSON dict of GBDT hyperparameter "
+                           "overrides")
+    p_su.add_argument("--seed", type=int, default=0,
+                      help="eval: shuffled-label baseline permutation seed")
+    p_su.add_argument("--json", action="store_true",
+                      help="machine-readable output")
+
     p_li = sub.add_parser(
         "lint",
         help="static contract checks + search-space audit")
@@ -920,6 +1123,9 @@ def _dispatch(args) -> int:
     if args.cmd == "servedb":
         return _run_servedb(args)
 
+    if args.cmd == "surrogate":
+        return _run_surrogate(args)
+
     if args.cmd == "lint":
         return _run_lint(args)
 
@@ -980,9 +1186,26 @@ def _dispatch(args) -> int:
             print(f"error: --tuner-kwargs is not valid JSON: {e}",
                   file=sys.stderr)
             return 2
+        warm_rows = None
+        if args.warm_start:
+            from ..core.surrogate import ModelStore
+            from .registry import make_problem
+            model, problems = ModelStore(args.warm_start).load(args.problem)
+            if model is None:
+                for p in problems:
+                    print(f"error: {p}", file=sys.stderr)
+                print(f"error: --warm-start: no usable model for "
+                      f"{args.problem!r} in {args.warm_start}",
+                      file=sys.stderr)
+                return 2
+            warm_rows = model.top_rows(make_problem(args.problem).space,
+                                       args.arch, k=args.warm_top)
+            print(f"warm start: {len(warm_rows)} predicted-top rows "
+                  f"for {args.arch}")
         spec = SessionSpec(problem=args.problem, tuner=args.tuner,
                            arch=args.arch, budget=args.budget, seed=args.seed,
-                           workers=args.workers, tuner_kwargs=tuner_kwargs)
+                           workers=args.workers, tuner_kwargs=tuner_kwargs,
+                           warm_start=warm_rows)
         sid = store.create(spec)
         print(f"session {sid}")
         res = run_session(spec, store=store, mode=args.mode,

@@ -106,13 +106,18 @@ def resolve_session(spec: SessionSpec,
                            f"registered: {', '.join(sorted(TUNERS))}")
         tuner = TUNERS[spec.tuner](problem.space, seed=spec.seed,
                                    **spec.tuner_kwargs)
+    if spec.warm_start:
+        # the spec stores resolved rows (not a model reference), so resumed
+        # and fresh runs install the identical warm queue
+        tuner.set_warm_start(spec.warm_start)
     return problem, tuner
 
 
 def session_stepper(spec: SessionSpec, *, problem: TunableProblem,
                     tuner: Tuner, store: SessionStore | None = None,
                     stop_after: int | None = None,
-                    on_batch: Callable[[TuneResult], None] | None = None
+                    on_batch: Callable[[TuneResult], None] | None = None,
+                    screen=None
                     ) -> Generator[EvalRequest, list, TuneResult]:
     """The session loop as a coroutine: yields :class:`EvalRequest` for
     fresh work, receives the evaluated trials, returns the full trace.
@@ -120,6 +125,13 @@ def session_stepper(spec: SessionSpec, *, problem: TunableProblem,
     Drivers must answer every yielded request (trials in request order)
     and may throw an exception into the generator to abort — the session
     is then marked FAILED with its journal intact, like any crash.
+
+    ``screen`` (a ``repro.core.surrogate.SurrogateScreen``) may answer part
+    of each fresh batch with model-estimated trials instead of yielding
+    them for measurement.  Estimated trials are journaled with their
+    provenance info like any evaluation, so a resumed session replays them
+    from the journal — estimate-for-estimate — whether or not the screen
+    (or its model file) is still around.
     """
     space = problem.space
     space.compile_eagerly()   # one-time table build: mask-backed fast paths
@@ -170,7 +182,7 @@ def session_stepper(spec: SessionSpec, *, problem: TunableProblem,
             n = min(cap, spec.budget - len(res.trials))
             with span("session.ask", cat="session", n=n):
                 if native:
-                    keys = [int(r) for r in tuner.ask_rows(max(1, n))]
+                    keys = [int(r) for r in tuner.propose_rows(max(1, n))]
                     cfgs: list = []
                 else:
                     cfgs = tuner.ask_batch(n)
@@ -208,6 +220,19 @@ def session_stepper(spec: SessionSpec, *, problem: TunableProblem,
                     first_seen[key] = j
                     fresh.append(j)
 
+            screened: list[tuple[int, Trial]] = []
+            if screen is not None and fresh:
+                # the screen answers the predicted-poor slice itself; only
+                # the remainder goes out for measurement
+                verdicts = screen.screen_rows([keys[j] for j in fresh],
+                                              spec.arch)
+                kept: list[int] = []
+                for j, v in zip(fresh, verdicts):
+                    if v is None:
+                        kept.append(j)
+                    else:
+                        screened.append((j, v))
+                fresh = kept
             if not fresh:
                 evaluated: list[Trial] = []
             elif native:
@@ -217,7 +242,8 @@ def session_stepper(spec: SessionSpec, *, problem: TunableProblem,
                 evaluated = yield EvalRequest(problem, spec.arch,
                                               configs=[cfgs[j] for j in fresh])
             journal_records = []
-            for j, t in zip(fresh, evaluated):
+            # journal in ask order, estimated and measured alike
+            for j, t in sorted(list(zip(fresh, evaluated)) + screened):
                 cache[keys[j]] = t
                 results[j] = t
                 consume[j] = True
@@ -230,8 +256,8 @@ def session_stepper(spec: SessionSpec, *, problem: TunableProblem,
                 store.append_trials(sid, space, journal_records)
             with span("session.tell", cat="session", n=len(keys)):
                 if native:
-                    tuner.tell_rows(keys, [t.objective if t.ok else math.inf
-                                           for t in results])
+                    tuner.report_rows(keys, [t.objective if t.ok else math.inf
+                                             for t in results])
                 else:
                     tuner.tell_batch(results)
             for j in range(len(keys)):
@@ -240,6 +266,9 @@ def session_stepper(spec: SessionSpec, *, problem: TunableProblem,
             if _metrics.is_enabled():
                 _c_evals.inc(len(fresh))
                 _c_cache.inc(cache_hits)
+                if screened:
+                    _metrics.counter("session.screened",
+                                     session=_slabel).inc(len(screened))
                 batch_best = min((t.objective for t in results if t.ok),
                                  default=math.inf)
                 if batch_best < _best_seen:
@@ -305,8 +334,8 @@ def run_session(spec: SessionSpec, *, problem: TunableProblem | None = None,
                 pool: WorkerPool | None = None, workers: int | None = None,
                 mode: str = "auto", max_retries: int = 2,
                 stop_after: int | None = None, broker=None,
-                on_batch: Callable[[TuneResult], None] | None = None
-                ) -> TuneResult:
+                on_batch: Callable[[TuneResult], None] | None = None,
+                screen=None) -> TuneResult:
     """Run (or resume) one tuning session; returns the full trace.
 
     ``problem``/``tuner`` default to registry/``TUNERS`` lookups from the
@@ -325,11 +354,12 @@ def run_session(spec: SessionSpec, *, problem: TunableProblem | None = None,
     """
     if broker is not None:
         if (pool is not None or stop_after is not None or tuner is not None
-                or problem is not None or on_batch is not None):
+                or problem is not None or on_batch is not None
+                or screen is not None):
             raise ValueError(
                 "broker sessions take none of pool=/stop_after=/tuner=/"
-                "problem=/on_batch= — workers rematerialize the problem "
-                "from the registry, and tells batch at session "
+                "problem=/on_batch=/screen= — workers rematerialize the "
+                "problem from the registry, and tells batch at session "
                 "granularity (watch progress via `status --store`)")
         from .campaign import run_campaign
         return run_campaign([spec], store,
@@ -341,7 +371,8 @@ def run_session(spec: SessionSpec, *, problem: TunableProblem | None = None,
         pool = WorkerPool(problem, spec.arch, workers=workers, mode=mode,
                           max_retries=max_retries)
     gen = session_stepper(spec, problem=problem, tuner=tuner, store=store,
-                          stop_after=stop_after, on_batch=on_batch)
+                          stop_after=stop_after, on_batch=on_batch,
+                          screen=screen)
     try:
         return drive(gen, pool)
     finally:

@@ -50,16 +50,27 @@ class SessionSpec:
     unique: bool = True
     tuner_kwargs: dict[str, Any] = field(default_factory=dict)
     problem_kwargs: dict[str, Any] = field(default_factory=dict)
+    #: surrogate warm start: predicted-top rows proposed before the tuner's
+    #: own ask stream.  Part of the spec identity (it changes the
+    #: trajectory by design), stored as the resolved row list — not a model
+    #: reference — so resuming replays the exact same warm queue even if
+    #: the model store has since been retrained.  ``None`` == cold start,
+    #: and is omitted from the canonical form so every pre-existing
+    #: session id (and journal directory) is unchanged.
+    warm_start: list[int] | None = None
 
     # -- identity --------------------------------------------------------- #
     def canonical(self) -> dict:
-        return {
+        c = {
             "problem": self.problem, "tuner": self.tuner, "arch": self.arch,
             "budget": int(self.budget), "seed": int(self.seed),
             "workers": int(self.workers), "unique": bool(self.unique),
             "tuner_kwargs": dict(sorted(self.tuner_kwargs.items())),
             "problem_kwargs": dict(sorted(self.problem_kwargs.items())),
         }
+        if self.warm_start is not None:
+            c["warm_start"] = [int(r) for r in self.warm_start]
+        return c
 
     @property
     def share_key(self) -> tuple:
@@ -92,4 +103,6 @@ class SessionSpec:
             workers=int(d.get("workers", 4)),
             unique=bool(d.get("unique", True)),
             tuner_kwargs=dict(d.get("tuner_kwargs", {})),
-            problem_kwargs=dict(d.get("problem_kwargs", {})))
+            problem_kwargs=dict(d.get("problem_kwargs", {})),
+            warm_start=(None if d.get("warm_start") is None
+                        else [int(r) for r in d["warm_start"]]))

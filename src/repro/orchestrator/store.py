@@ -266,11 +266,22 @@ class SessionStore:
     # -- finished traces --------------------------------------------------- #
     def publish_trace(self, sid: str, problem: TunableProblem,
                       result: TuneResult) -> Path:
-        """Write the completed trace as a ResultTable through ResultsDB."""
-        with span("journal.publish", cat="store", n=len(result.trials)):
+        """Write the completed trace as a ResultTable through ResultsDB.
+
+        Model-estimated trials (surrogate screening provenance) are not
+        published: a ResultTable is a table of *measurements* — servedb
+        golden configs and surrogate harvests both distill from it, and a
+        model must never serve or retrain on its own predictions.  The
+        screened count is recorded in the table meta instead.
+        """
+        measured = [t for t in result.trials if not t.info.get("estimated")]
+        with span("journal.publish", cat="store", n=len(measured)):
             table = ResultTable.from_trials(problem, result.arch,
-                                            result.trials,
+                                            measured,
                                             protocol=f"session_{sid}")
             table.meta = {"tuner": result.tuner, "seed": result.seed,
                           "session": sid}
+            screened = len(result.trials) - len(measured)
+            if screened:
+                table.meta["screened"] = screened
             return self.tables.put(table)

@@ -59,6 +59,7 @@ DOCUMENTED_METRICS = frozenset({
     "journal.torn_lines",
     "servedb.lookup", "servedb.lookup_stale", "servedb.reload",
     "servedb.publish", "servedb.quarantined", "servedb.load",
+    "session.screened", "surrogate.quarantined",
 })
 
 #: the ``layer.verb`` grammar every telemetry name must fit
@@ -293,6 +294,39 @@ class JournalKeysRule(Rule):
                         "{'k','o','v','i'} grammar")
 
 
+class ModelStoreKeysRule(Rule):
+    """Surrogate model files use only the documented header fields.
+
+    The ``*.model.json`` grammar is fixed by
+    ``repro.core.surrogate.store.HEADER_FIELDS``; a header dict literal
+    with any other key is an undocumented schema extension that
+    ``parse_model`` (strict by design, mirroring servedb) would reject
+    on the next load — i.e. it would quarantine every file this code
+    writes.
+    """
+
+    id = "model-store-keys"
+    description = "model-store header literal with undocumented fields"
+
+    def applies(self, path: str) -> bool:
+        return path.replace("\\", "/").endswith("surrogate/store.py")
+
+    def check(self, node: ast.AST, ctx: FileContext) -> Iterator[Finding]:
+        if not isinstance(node, ast.Dict):
+            return
+        keys = [_str_const(k) for k in node.keys]
+        if any(k is None for k in keys) or "magic" not in keys:
+            return
+        from ..core.surrogate.store import HEADER_FIELDS
+        bad = sorted(set(keys) - set(HEADER_FIELDS))
+        if bad:
+            yield self.finding(
+                ctx, node,
+                f"model header field(s) {bad} outside the documented "
+                "HEADER_FIELDS grammar; parse_model would quarantine "
+                "files written with them")
+
+
 class LookupRaiseRule(Rule):
     """The serving lookup path never raises.
 
@@ -414,5 +448,5 @@ class RetrySleepRule(Rule):
 def default_rules() -> list[Rule]:
     """All shipped rules, the set ``repro lint`` runs."""
     return [WallClockRule(), GlobalRngRule(), ChaosSiteRule(),
-            TelemetryNameRule(), JournalKeysRule(), LookupRaiseRule(),
-            BrokerTxRule(), RetrySleepRule()]
+            TelemetryNameRule(), JournalKeysRule(), ModelStoreKeysRule(),
+            LookupRaiseRule(), BrokerTxRule(), RetrySleepRule()]

@@ -77,7 +77,8 @@ def test_docs_actually_quote_commands():
     for module in ("benchmarks.run", "benchmarks.table_portability"):
         assert module in joined, f"{module} not documented"
     for sub in ("submit", "status", "resume", "campaign", "worker",
-                "fleet", "metrics", "doctor", "servedb", "lint"):
+                "fleet", "metrics", "doctor", "servedb", "surrogate",
+                "lint"):
         assert any(f"repro.orchestrator {sub}" in c for c in ALL_COMMANDS), \
             f"orchestrator subcommand {sub!r} not documented"
 
@@ -93,7 +94,8 @@ def test_quoted_command_matches_entry_point(cmd, capsys):
             return
         sub = parts[3]
         assert sub in ("submit", "status", "resume", "campaign", "worker",
-                       "fleet", "metrics", "doctor", "servedb", "lint"), \
+                       "fleet", "metrics", "doctor", "servedb", "surrogate",
+                       "lint"), \
             f"unknown subcommand in {cmd!r}"
         # argparse exits 0 on --help and would exit 2 on unknown flags —
         # but --help doesn't validate, so check each flag against the

@@ -199,6 +199,46 @@ def test_non_journal_dicts_ignored():
 
 
 # --------------------------------------------------------------------- #
+# model-store-keys
+# --------------------------------------------------------------------- #
+
+def test_undocumented_model_header_field_flagged():
+    fs = lint("repro/core/surrogate/store.py", """
+        def header(model):
+            return {"magic": "repro-models", "version": 1,
+                    "problem": model.problem, "extra_field": True}
+    """)
+    assert rule_ids(fs) == ["model-store-keys"]
+    assert "extra_field" in fs[0].message
+
+
+def test_documented_model_header_ok():
+    fs = lint("repro/core/surrogate/store.py", """
+        def header(model, checksum):
+            return {"magic": "repro-models", "version": 1,
+                    "problem": model.problem, "created_at": 0.0,
+                    "feature_names": [], "archs": [], "params": {},
+                    "n_rows": 0, "sections": {"model": checksum}}
+    """)
+    assert fs == []
+
+
+def test_non_header_dicts_and_other_files_ignored():
+    # dicts without a "magic" key are not headers; header-shaped dicts
+    # outside the surrogate store module are someone else's schema
+    fs = lint("repro/core/surrogate/store.py", """
+        def other():
+            return {"problem": "gemm", "anything": 1}
+    """)
+    assert fs == []
+    fs = lint("repro/servedb/snapshot.py", """
+        def header():
+            return {"magic": "other-format", "custom": 1}
+    """)
+    assert fs == []
+
+
+# --------------------------------------------------------------------- #
 # lookup-raise
 # --------------------------------------------------------------------- #
 

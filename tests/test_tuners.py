@@ -3,14 +3,16 @@ finds-the-optimum checks on toy landscapes (the suite's own reference
 problems)."""
 
 import random
+from pathlib import Path
 
 import pytest
 
 from repro.core.problem import FunctionProblem
 from repro.core.space import Constraint, Param, SearchSpace
-from repro.core.tuners import (DifferentialEvolution, GeneticAlgorithm,
-                               GridSearch, LocalSearch, ParticleSwarm,
-                               RandomSearch, SimulatedAnnealing, SurrogateBO)
+from repro.core.tuners import (TUNERS, DifferentialEvolution,
+                               GeneticAlgorithm, GridSearch, LocalSearch,
+                               ParticleSwarm, RandomSearch,
+                               SimulatedAnnealing, SurrogateBO)
 from repro.core.tuners.base import run_many, run_tuner
 from sweeps import sweep
 
@@ -309,3 +311,66 @@ def test_surrogate_bo_scalar_batch_matches_native_batch():
             == [prob2.space.flat_index(c) for c in b]
         t_idx.tell_batch([prob.evaluate(c) for c in a])
         t_sc.tell_batch([prob2.evaluate(c) for c in b])
+
+
+# --------------------------------------------------------------------- #
+# warm-start seam: the pre-PR regression contract
+# --------------------------------------------------------------------- #
+_WARMSTART_FIXTURES = Path(__file__).parent / "fixtures" / "warmstart"
+
+
+def _warmstart_manifest() -> dict:
+    import json
+    return json.loads((_WARMSTART_FIXTURES / "manifest.json").read_text())
+
+
+@pytest.mark.parametrize("tuner_name", sorted(TUNERS))
+def test_cold_journal_bit_identical_to_pre_seam_fixture(tuner_name, tmp_path):
+    """Property: with ``warm_start=None`` every tuner's journaled session
+    is byte-for-byte the journal recorded before the warm-start seam
+    existed, and its content-addressed session id is unchanged.  Any rng
+    draw, spec-identity or journal-grammar drift fails here."""
+    from repro.orchestrator.runner import run_session
+    from repro.orchestrator.session import SessionSpec
+    from repro.orchestrator.store import SessionStore
+    man = _warmstart_manifest()
+    spec = SessionSpec(problem=man["problem"], tuner=tuner_name,
+                       arch=man["arch"], budget=man["budget"],
+                       seed=man["seed"], workers=man["workers"])
+    assert spec.session_id == man["session_ids"][tuner_name], \
+        "spec identity drifted: pre-PR session ids must be stable"
+    store = SessionStore(tmp_path, clock=lambda: 0.0)
+    store.create(spec)
+    run_session(spec, store=store)
+    got = (tmp_path / spec.session_id / "trials.jsonl").read_bytes()
+    want = (_WARMSTART_FIXTURES / f"{tuner_name}.trials.jsonl").read_bytes()
+    assert got == want, "cold trajectory diverged from the pre-seam journal"
+
+
+@pytest.mark.parametrize("tuner_name", sorted(TUNERS))
+def test_warm_started_run_satisfies_stepper_contract(tuner_name, tmp_path):
+    """Property: warm-started sessions honor the stepper/rng contract —
+    interrupting at an arbitrary batch boundary and resuming replays the
+    exact uninterrupted trajectory, warm queue included."""
+    from repro.orchestrator.runner import (resume_session, run_session)
+    from repro.orchestrator.session import SessionSpec
+    from repro.orchestrator.store import SessionStore
+    space4 = SearchSpace([Param(f"p{i}", tuple(range(8))) for i in range(4)])
+    opt = space4.flat_index({f"p{i}": 2 for i in range(4)})
+    spec = SessionSpec(problem="toy_quad", tuner=tuner_name, arch="v5e",
+                       budget=24, seed=11, workers=2,
+                       warm_start=[opt + 3, opt, opt + 16])
+    s_full = SessionStore(tmp_path / "full", clock=lambda: 0.0)
+    s_full.create(spec)
+    full = run_session(spec, store=s_full)
+    # the warm rows lead the trace in queue order
+    assert [space4.flat_index(t.config) for t in full.trials[:3]] \
+        == spec.warm_start
+    s_cut = SessionStore(tmp_path / "cut", clock=lambda: 0.0)
+    s_cut.create(spec)
+    run_session(spec, store=s_cut, stop_after=5)
+    resumed = resume_session(spec.session_id, s_cut)
+    assert [t.config for t in resumed.trials] \
+        == [t.config for t in full.trials]
+    assert (tmp_path / "cut" / spec.session_id / "trials.jsonl").read_bytes() \
+        == (tmp_path / "full" / spec.session_id / "trials.jsonl").read_bytes()
